@@ -1,0 +1,82 @@
+//! Memory-analysis walkthrough: the Appendix-E closed forms at paper
+//! scale — regenerates the data behind Fig. 2 and Fig. 5 and checks the
+//! Lemma 4/5/6 crossover thresholds.
+//!
+//! ```bash
+//! cargo run --release --example memory_analysis
+//! ```
+//!
+//! Pure analytical computation — no artifacts needed.
+
+use misa::memory::{self, Arch, Method, Workload};
+
+fn main() {
+    let arch = Arch::llama3_8b();
+
+    println!("== Fig. 2: peak memory vs sequence length (LLaMA3-8B, b=4) ==");
+    println!("{:>8} {:>12} {:>12} {:>12} {:>12}", "seq", "LoRA(r=16)", "MISA(1%)", "MISA(3%)", "layerwise");
+    for s in [256u64, 512, 1024, 2048, 4096, 8192, 16384] {
+        let w = Workload::new(4, s);
+        let gib = |e: u64| e as f64 * 4.0 / (1u64 << 30) as f64;
+        println!(
+            "{s:>8} {:>11.1}G {:>11.1}G {:>11.1}G {:>11.1}G",
+            gib(memory::lora_peak_all(&arch, &w, 16)),
+            gib(memory::misa_peak(&arch, &w, 0.01)),
+            gib(memory::misa_peak(&arch, &w, 0.03)),
+            gib(memory::layerwise_peak(&arch, &w)),
+        );
+    }
+
+    println!("\n== Lemma 4: MISA beats layer-wise when δ below threshold ==");
+    for s in [512u64, 2048, 8192] {
+        let w = Workload::new(4, s);
+        println!(
+            "  s={s:<6} δ* = {:.4}  (1/L = {:.4})",
+            memory::lemma4_delta_threshold(&arch, &w),
+            1.0 / arch.l as f64
+        );
+    }
+
+    println!("\n== Lemma 5: layer-wise beats LoRA beyond sequence threshold ==");
+    for r in [8u64, 16, 32] {
+        println!("  r={r:<3} s* = {:.0}", memory::lemma5_seq_threshold(&arch, 4, r));
+    }
+
+    println!("\n== Lemma 6: params-per-byte, layer-wise vs LoRA (s=2048) ==");
+    let w = Workload::new(4, 2048);
+    for r in [8u64, 16, 32] {
+        println!(
+            "  r={r:<3} layerwise {:.3e}  lora {:.3e}  (h>3rL/2: {})",
+            memory::layerwise_params_per_mem(&arch, &w),
+            memory::lora_params_per_mem(&arch, &w, r),
+            memory::lemma6_holds(&arch, r)
+        );
+    }
+
+    println!("\n== Fig. 5: 8B vs 70B, dense vs flash attention (s=8192) ==");
+    for (tag, a) in [("8B", Arch::llama3_8b()), ("70B", Arch::llama3_70b())] {
+        for flash in [false, true] {
+            let w = if flash { Workload::flash(4, 8192) } else { Workload::new(4, 8192) };
+            let gib = |e: u64| e as f64 * 4.0 / (1u64 << 30) as f64;
+            println!(
+                "  {tag} flash={flash:<5} LoRA {:>8.1}G  MISA(3%) {:>8.1}G",
+                gib(memory::lora_peak_all(&a, &w, 16)),
+                gib(memory::misa_peak(&a, &w, 0.03)),
+            );
+        }
+    }
+
+    println!("\n== Table 1 'Mem.(GB)' column @ b=4, s=512 ==");
+    let w = Workload::new(4, 512);
+    for m in [
+        Method::FullFT,
+        Method::Lora { r: 32 },
+        Method::Dora { r: 16 },
+        Method::Lisa,
+        Method::BAdam,
+        Method::Misa { delta: 0.01 },
+        Method::Misa { delta: 0.03 },
+    ] {
+        println!("  {:<14} {:>7.1} GB", m.label(), memory::table_peak_gib(m, &arch, &w));
+    }
+}

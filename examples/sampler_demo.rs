@@ -1,0 +1,67 @@
+//! Importance-sampler walkthrough: Eq. 4 EMA tracking, Prop. 1 softmax,
+//! Algorithm 2 δ-budget selection, and the exploration/exploitation
+//! behaviour of η — on a synthetic module population, no model needed.
+//!
+//! ```bash
+//! cargo run --release --example sampler_demo
+//! ```
+
+use misa::optim::sampler::{ImportanceSampler, SamplerConfig, ScoreFn, Strategy};
+use misa::util::Rng;
+
+fn main() {
+    // 28 modules shaped like the `small` config: 7 kinds × 4 layers,
+    // FFN modules ~2.7× larger than attention ones (as in LLaMA).
+    let numel: Vec<u64> = (0..28)
+        .map(|i| if i % 7 >= 4 { 44_032 } else { 16_384 })
+        .collect();
+    let n_model: u64 = numel.iter().sum::<u64>() + 2 * 512 * 128; // + embed/head
+
+    for eta in [0.0, 1.0, 10.0] {
+        let mut s = ImportanceSampler::new(
+            SamplerConfig {
+                strategy: Strategy::Importance { eta },
+                score_fn: ScoreFn::GradNorm,
+                beta: 0.9,
+                delta: 0.05,
+            },
+            numel.clone(),
+            n_model,
+        );
+        // plant a skewed importance profile: deeper layers matter more,
+        // FFN kinds matter more (the paper's Fig. 1 shape)
+        for i in 0..28 {
+            let layer = i / 7;
+            let kind = i % 7;
+            let score = 0.1 + 0.2 * layer as f64 + if kind >= 4 { 0.5 } else { 0.0 };
+            s.update_score(i, score);
+        }
+        let mut rng = Rng::new(42);
+        let mut hist = vec![0u64; 28];
+        for _ in 0..500 {
+            for m in s.select(&mut rng) {
+                hist[m] += 1;
+            }
+        }
+        println!("η = {eta}");
+        let p = s.probabilities();
+        println!("  min p = {:.4}, max p = {:.4} (lower bound {:.4})",
+                 p.iter().cloned().fold(f64::MAX, f64::min),
+                 p.iter().cloned().fold(f64::MIN, f64::max),
+                 s.probability_lower_bound());
+        print!("  sample counts by module: ");
+        for (i, h) in hist.iter().enumerate() {
+            if i % 7 == 0 {
+                print!("| ");
+            }
+            print!("{h:>4} ");
+        }
+        println!("|");
+        let attn: u64 = hist.iter().enumerate().filter(|(i, _)| i % 7 < 4).map(|(_, &h)| h).sum();
+        let ffn: u64 = hist.iter().enumerate().filter(|(i, _)| i % 7 >= 4).map(|(_, &h)| h).sum();
+        println!("  attention picks: {attn}, ffn picks: {ffn}\n");
+    }
+    println!("note: η=0 is uniform; large η concentrates on the planted\n\
+              high-importance modules while never starving the rest\n\
+              (Corollary 1 lower bound) — the Table 10 story.");
+}

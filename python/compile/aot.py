@@ -1,0 +1,170 @@
+"""AOT driver: lower every (config, graph) pair to HLO *text* artifacts.
+
+Run once by `make artifacts`; the Rust binary is self-contained afterwards.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate links) rejects
+(`proto.id() <= INT_MAX`). The text parser reassigns ids and round-trips
+cleanly — see /opt/xla-example/README.md.
+
+Outputs, per config C:
+  artifacts/C.fwd_bwd.hlo.txt        training step graph
+  artifacts/C.predict.hlo.txt        eval graph
+  artifacts/C.adam.RxC.hlo.txt       fused-Adam update per distinct shape
+  artifacts/C.tail.RxC.hlo.txt       additional momentum step per shape
+  artifacts/probs.B.hlo.txt          sampler softmax (per module-count B)
+  artifacts/manifest.txt             the L3 ABI: configs, params, graphs
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import CONFIGS, ModelConfig, param_specs
+from .kernels.fused_adam import fused_adam, momentum_tail
+from .kernels.softmax_probs import softmax_probs
+from .model import build_fwd_bwd, build_predict
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _exists(path: str) -> bool:
+    return os.path.exists(path) and os.path.getsize(path) > 0
+
+
+def _write(path: str, text: str) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+    os.replace(tmp, path)
+    print(f"  wrote {path} ({len(text) / 1e6:.2f} MB)", flush=True)
+
+
+def shape_key(shape) -> str:
+    return "x".join(str(d) for d in shape)
+
+
+def lower_config(cfg: ModelConfig, outdir: str, manifest: list,
+                 skip_existing: bool = False) -> None:
+    t0 = time.time()
+    specs = param_specs(cfg)
+    pspecs = [jax.ShapeDtypeStruct(s.shape, F32) for s in specs]
+    tok = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), I32)
+    msk = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), F32)
+
+    manifest.append(f"config {cfg.name}")
+    for key in ("vocab", "dim", "n_layers", "n_heads", "n_kv_heads",
+                "ffn_dim", "seq_len", "batch"):
+        manifest.append(f"  field {key} {getattr(cfg, key)}")
+    for s in specs:
+        dims = " ".join(str(d) for d in s.shape)
+        manifest.append(f"  param {s.name} {s.kind} {s.layer} {len(s.shape)} {dims}")
+
+    # --- training graph -------------------------------------------------
+    fname = f"{cfg.name}.fwd_bwd.hlo.txt"
+    if not (skip_existing and _exists(os.path.join(outdir, fname))):
+        fwd_bwd = build_fwd_bwd(cfg)
+        lowered = jax.jit(fwd_bwd).lower(pspecs, tok, tok, msk)
+        _write(os.path.join(outdir, fname), to_hlo_text(lowered))
+    manifest.append(f"  graph fwd_bwd {fname}")
+
+    # --- eval graph ------------------------------------------------------
+    fname = f"{cfg.name}.predict.hlo.txt"
+    if not (skip_existing and _exists(os.path.join(outdir, fname))):
+        predict = build_predict(cfg)
+        lowered = jax.jit(predict).lower(pspecs, tok, tok, msk)
+        _write(os.path.join(outdir, fname), to_hlo_text(lowered))
+    manifest.append(f"  graph predict {fname}")
+
+    # --- optimizer kernels, one per distinct param shape ------------------
+    seen = set()
+    for s in specs:
+        key = shape_key(s.shape)
+        if key in seen:
+            continue
+        seen.add(key)
+        arr = jax.ShapeDtypeStruct(s.shape, F32)
+        lr = jax.ShapeDtypeStruct((1,), F32)
+        fname = f"{cfg.name}.adam.{key}.hlo.txt"
+        if not (skip_existing and _exists(os.path.join(outdir, fname))):
+            lowered = jax.jit(
+                functools.partial(fused_adam, beta1=0.9, beta2=0.999, eps=1e-8)
+            ).lower(arr, arr, arr, arr, lr)
+            _write(os.path.join(outdir, fname), to_hlo_text(lowered))
+        manifest.append(f"  graph adam.{key} {fname}")
+
+        fname = f"{cfg.name}.tail.{key}.hlo.txt"
+        if not (skip_existing and _exists(os.path.join(outdir, fname))):
+            lowered = jax.jit(
+                functools.partial(momentum_tail, beta1=0.9, eps=1e-8)
+            ).lower(arr, arr, arr, lr)
+            _write(os.path.join(outdir, fname), to_hlo_text(lowered))
+        manifest.append(f"  graph tail.{key} {fname}")
+
+    print(f"config {cfg.name}: lowered in {time.time() - t0:.1f}s", flush=True)
+
+
+def lower_probs(outdir: str, manifest: list, sizes, skip_existing=False) -> None:
+    """Sampler softmax artifacts, one per module-count the L3 sampler uses."""
+    for b in sorted(set(sizes)):
+        fname = f"probs.{b}.hlo.txt"
+        if not (skip_existing and _exists(os.path.join(outdir, fname))):
+            scores = jax.ShapeDtypeStruct((b,), F32)
+            eta = jax.ShapeDtypeStruct((1,), F32)
+            lowered = jax.jit(softmax_probs).lower(scores, eta)
+            _write(os.path.join(outdir, fname), to_hlo_text(lowered))
+        manifest.append(f"probs {b} {fname}")
+
+
+def n_matrix_modules(cfg: ModelConfig) -> int:
+    return sum(1 for s in param_specs(cfg)
+               if s.kind not in ("norm", "embed", "head"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--configs", default="",
+                    help="comma-separated config names (default: all)")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="do not re-lower graphs whose artifact file exists")
+    args = ap.parse_args()
+    outdir = os.path.abspath(args.out)
+    os.makedirs(outdir, exist_ok=True)
+
+    wanted = [c for c in CONFIGS
+              if not args.configs or c.name in args.configs.split(",")]
+    manifest: list = ["version 1"]
+    for cfg in wanted:
+        lower_config(cfg, outdir, manifest, skip_existing=args.skip_existing)
+    # probs artifacts: sampler operates over matrix modules only (fine-tune)
+    # or all params (pre-train); emit both sizes per config.
+    sizes = []
+    for cfg in wanted:
+        sizes.append(n_matrix_modules(cfg))
+        sizes.append(len(param_specs(cfg)))
+    lower_probs(outdir, manifest, sizes, skip_existing=args.skip_existing)
+    _write(os.path.join(outdir, "manifest.txt"), "\n".join(manifest) + "\n")
+    print("AOT done.", flush=True)
+
+
+if __name__ == "__main__":
+    main()

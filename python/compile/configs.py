@@ -1,0 +1,144 @@
+"""Model / artifact configuration registry.
+
+This file is the single source of truth for the parameter layout contract
+between the Python compile path (L1/L2) and the Rust coordinator (L3).
+`aot.py` serializes the registry into ``artifacts/manifest.txt`` which the
+Rust side parses (see ``rust/src/modelspec/``). Order of parameters is a
+hard ABI: the fwd/bwd graph takes params in registry order and returns
+grads in the same order.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """A LLaMA-architecture decoder LM configuration.
+
+    The paper's module taxonomy (Sec. 3.3) maps onto this architecture:
+    per transformer layer the sampled modules are W_q, W_k, W_v, W_o
+    (attention) and W_gate, W_up, W_down (SwiGLU FFN); RMSNorm scales,
+    the embedding and the LM head are separate parameters that MISA
+    freezes during fine-tuning (Sec. 3.4, Table 2 footnote) and trains
+    with dense Adam during pre-training (Sec. 5.4).
+    """
+
+    name: str
+    vocab: int
+    dim: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    ffn_dim: int
+    seq_len: int
+    batch: int
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        assert self.dim % self.n_heads == 0
+        return self.dim // self.n_heads
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+
+# Module kinds, mirroring the paper's taxonomy. "norm", "embed", "head"
+# are parameters but not MISA sampling modules in fine-tuning.
+KIND_NORM = "norm"
+KIND_WQ = "wq"
+KIND_WK = "wk"
+KIND_WV = "wv"
+KIND_WO = "wo"
+KIND_WGATE = "wgate"
+KIND_WUP = "wup"
+KIND_WDOWN = "wdown"
+KIND_EMBED = "embed"
+KIND_HEAD = "head"
+
+MATRIX_KINDS = (KIND_WQ, KIND_WK, KIND_WV, KIND_WO, KIND_WGATE, KIND_WUP, KIND_WDOWN)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One named parameter: the unit the Rust module registry tracks."""
+
+    name: str
+    kind: str
+    layer: int  # -1 for non-layer params
+    shape: Tuple[int, ...]
+
+    @property
+    def numel(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+
+def param_specs(cfg: ModelConfig) -> List[ParamSpec]:
+    """The parameter registry, in ABI order."""
+    specs: List[ParamSpec] = []
+    d, f, v = cfg.dim, cfg.ffn_dim, cfg.vocab
+    kd = cfg.kv_dim
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        specs.append(ParamSpec(p + "attn_norm", KIND_NORM, i, (d,)))
+        specs.append(ParamSpec(p + "wq", KIND_WQ, i, (d, d)))
+        specs.append(ParamSpec(p + "wk", KIND_WK, i, (d, kd)))
+        specs.append(ParamSpec(p + "wv", KIND_WV, i, (d, kd)))
+        specs.append(ParamSpec(p + "wo", KIND_WO, i, (d, d)))
+        specs.append(ParamSpec(p + "mlp_norm", KIND_NORM, i, (d,)))
+        specs.append(ParamSpec(p + "wgate", KIND_WGATE, i, (d, f)))
+        specs.append(ParamSpec(p + "wup", KIND_WUP, i, (d, f)))
+        specs.append(ParamSpec(p + "wdown", KIND_WDOWN, i, (f, d)))
+    specs.append(ParamSpec("final_norm", KIND_NORM, -1, (d,)))
+    specs.append(ParamSpec("embed", KIND_EMBED, -1, (v, d)))
+    specs.append(ParamSpec("head", KIND_HEAD, -1, (d, v)))
+    return specs
+
+
+def total_params(cfg: ModelConfig) -> int:
+    return sum(s.numel for s in param_specs(cfg))
+
+
+def unique_matrix_shapes(cfg: ModelConfig) -> List[Tuple[int, ...]]:
+    """Distinct trainable shapes → one fused-Adam artifact per shape."""
+    seen = []
+    for s in param_specs(cfg):
+        if s.shape not in seen:
+            seen.append(s.shape)
+    return seen
+
+
+# ---------------------------------------------------------------------------
+# The artifact set. Sizes are scaled-down substitutes for the paper's
+# testbeds (see DESIGN.md Sec. 3): "tiny" drives tests, "small" drives the
+# fine-tuning tables, "pt130"/"pt350" are the pre-training analogues of
+# LLaMA2-130M/350M (Table 6 / Fig. 4), "e2e" is the ~100M-parameter
+# end-to-end training example required by examples/pretrain_e2e.rs.
+# ---------------------------------------------------------------------------
+
+CONFIGS: List[ModelConfig] = [
+    ModelConfig("tiny", vocab=256, dim=64, n_layers=2, n_heads=4, n_kv_heads=2,
+                ffn_dim=176, seq_len=32, batch=4),
+    ModelConfig("small", vocab=512, dim=128, n_layers=4, n_heads=4, n_kv_heads=2,
+                ffn_dim=344, seq_len=64, batch=8),
+    ModelConfig("pt130", vocab=1024, dim=192, n_layers=4, n_heads=6, n_kv_heads=3,
+                ffn_dim=512, seq_len=64, batch=8),
+    ModelConfig("pt350", vocab=1024, dim=320, n_layers=6, n_heads=8, n_kv_heads=4,
+                ffn_dim=864, seq_len=64, batch=8),
+    ModelConfig("e2e", vocab=8192, dim=768, n_layers=12, n_heads=12, n_kv_heads=6,
+                ffn_dim=2048, seq_len=64, batch=4),
+]
+
+
+def get_config(name: str) -> ModelConfig:
+    for c in CONFIGS:
+        if c.name == name:
+            return c
+    raise KeyError(f"unknown config {name!r}")

@@ -1,0 +1,155 @@
+"""L1 Pallas kernel: fused MISA/Adam module update.
+
+The paper's inner loop (Algorithm 1, lines 8-11) performs, per sampled
+module and per inner step t:
+
+    m <- b1*m + (1-b1)*g
+    v <- b2*v + (1-b2)*g^2
+    p <- p - lr * m / (sqrt(v) + eps)          (no bias correction)
+
+plus, at the end of a block epoch, the *additional momentum step*
+(line 16):
+
+    p <- p - lr * (b1/(1-b1)) * m / (sqrt(v) + eps)
+
+and the analytical variant (Algorithm 3, line 12) uses an AMSGrad-type
+running max of v.
+
+On GPU these are 3-4 separate memory-bound elementwise passes; the TPU
+adaptation (DESIGN.md §Hardware-Adaptation) fuses them into a single
+HBM->VMEM->HBM sweep tiled by BlockSpec, and accumulates the squared
+gradient norm needed by the importance sampler (Eq. 4) as a free
+by-product of the same pass — this is the structural realization of the
+paper's "indicator overhead is negligible" claim (Appendix F.3).
+
+All kernels are lowered with interpret=True so the CPU PJRT client can
+execute the resulting HLO (real TPU lowering emits a Mosaic custom call).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM plan: 4 resident operand tiles (p, g, m, v) + 3 result tiles.
+# 256x512 f32 = 512 KiB/tile -> 3.5 MiB resident, comfortably under the
+# ~16 MiB VMEM budget and large enough to amortize the HBM latency.
+BLOCK_R = 256
+BLOCK_C = 512
+
+
+def _cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def _adam_kernel(p_ref, g_ref, m_ref, v_ref, lr_ref, po_ref, mo_ref, vo_ref,
+                 acc_ref, *, beta1: float, beta2: float, eps: float,
+                 rows: int, cols: int):
+    """One fused tile update; acc_ref accumulates sum(g^2) across the grid."""
+    g = g_ref[...]
+    m = beta1 * m_ref[...] + (1.0 - beta1) * g
+    v = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+    mo_ref[...] = m
+    vo_ref[...] = v
+    po_ref[...] = p_ref[...] - lr_ref[0] * m / (jnp.sqrt(v) + eps)
+
+    # grid iterations run sequentially on TPU; accumulate the norm
+    # by-product into a (1,1) output block shared by every tile. Ragged
+    # edge tiles carry undefined padding, so mask by the global index.
+    br, bc = g.shape
+    r0 = pl.program_id(0) * br
+    c0 = pl.program_id(1) * bc
+    rid = r0 + jax.lax.broadcasted_iota(jnp.int32, (br, bc), 0)
+    cid = c0 + jax.lax.broadcasted_iota(jnp.int32, (br, bc), 1)
+    gm = jnp.where((rid < rows) & (cid < cols), g, 0.0)
+
+    @pl.when(_is_first_tile())
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.sum(gm * gm)
+
+
+def _is_first_tile():
+    idx = [pl.program_id(i) for i in range(2)]
+    return jnp.logical_and(idx[0] == 0, idx[1] == 0)
+
+
+@functools.partial(jax.jit, static_argnames=("beta1", "beta2", "eps"))
+def fused_adam(p, g, m, v, lr, *, beta1: float = 0.9, beta2: float = 0.999,
+               eps: float = 1e-8):
+    """Fused Adam step on a module matrix (or vector).
+
+    Args:
+      p, g, m, v: same-shaped f32 arrays (param, grad, 1st/2nd moment).
+      lr: f32[1] learning rate (runtime input so Rust can schedule it).
+
+    Returns:
+      (p_new, m_new, v_new, sq_norm) where sq_norm is f32[] = sum(g*g).
+    """
+    orig_shape = p.shape
+    # Normalize to 2-D so one kernel serves matrices and norm vectors.
+    if p.ndim == 1:
+        p2, g2, m2, v2 = (x.reshape(1, -1) for x in (p, g, m, v))
+    else:
+        p2, g2, m2, v2 = p, g, m, v
+    rows, cols = p2.shape
+    br = min(BLOCK_R, rows)
+    bc = min(BLOCK_C, cols)
+    grid = (_cdiv(rows, br), _cdiv(cols, bc))
+    tile = pl.BlockSpec((br, bc), lambda i, j: (i, j))
+    scalar = pl.BlockSpec((1,), lambda i, j: (0,))
+    acc = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
+    kernel = functools.partial(_adam_kernel, beta1=beta1, beta2=beta2, eps=eps,
+                               rows=rows, cols=cols)
+    po, mo, vo, sq = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[tile, tile, tile, tile, scalar],
+        out_specs=[tile, tile, tile, acc],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+            jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+            jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(p2, g2, m2, v2, lr)
+    return (po.reshape(orig_shape), mo.reshape(orig_shape),
+            vo.reshape(orig_shape), sq.reshape(()))
+
+
+def _momentum_tail_kernel(p_ref, m_ref, v_ref, lr_ref, po_ref, *,
+                          beta1: float, eps: float):
+    c1 = beta1 / (1.0 - beta1)
+    po_ref[...] = p_ref[...] - lr_ref[0] * c1 * m_ref[...] / (
+        jnp.sqrt(v_ref[...]) + eps)
+
+
+@functools.partial(jax.jit, static_argnames=("beta1", "eps"))
+def momentum_tail(p, m, v, lr, *, beta1: float = 0.9, eps: float = 1e-8):
+    """Algorithm 1 line 16: the additional momentum step at epoch end."""
+    orig_shape = p.shape
+    if p.ndim == 1:
+        p2, m2, v2 = (x.reshape(1, -1) for x in (p, m, v))
+    else:
+        p2, m2, v2 = p, m, v
+    rows, cols = p2.shape
+    br = min(BLOCK_R, rows)
+    bc = min(BLOCK_C, cols)
+    grid = (_cdiv(rows, br), _cdiv(cols, bc))
+    tile = pl.BlockSpec((br, bc), lambda i, j: (i, j))
+    scalar = pl.BlockSpec((1,), lambda i, j: (0,))
+    kernel = functools.partial(_momentum_tail_kernel, beta1=beta1, eps=eps)
+    po = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[tile, tile, tile, scalar],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=True,
+    )(p2, m2, v2, lr)
+    return po.reshape(orig_shape)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness ground truth: python/tests/test_kernel.py
+asserts allclose(kernel, ref) across hypothesis-generated shapes and
+hyper-parameters. Keep these boring and obviously correct.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def adam_ref(p, g, m, v, lr, beta1=0.9, beta2=0.999, eps=1e-8):
+    """Reference Adam step per paper Algorithm 1 lines 9-11 (no bias corr.)."""
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    p_new = p - lr * m_new / (jnp.sqrt(v_new) + eps)
+    return p_new, m_new, v_new, jnp.sum(g * g)
+
+
+def momentum_tail_ref(p, m, v, lr, beta1=0.9, eps=1e-8):
+    """Reference for Algorithm 1 line 16 (additional momentum step)."""
+    return p - lr * (beta1 / (1.0 - beta1)) * m / (jnp.sqrt(v) + eps)
+
+
+def sq_norm_ref(g):
+    return jnp.sum(g * g)
+
+
+def scaled_sq_norm_ref(g):
+    return jnp.sum(g * g) / jnp.float32(g.size)
+
+
+def softmax_probs_ref(scores, eta):
+    z = scores * eta
+    z = z - jnp.max(z)
+    e = jnp.exp(z)
+    return e / jnp.sum(e)

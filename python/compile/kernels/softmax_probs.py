@@ -1,0 +1,44 @@
+"""L1 Pallas kernel: tempered-softmax sampling probabilities (paper Eq. 3).
+
+    p_b = exp(eta * G_b) / sum_j exp(eta * G_j)
+
+computed in a numerically stable single block (the module count B is tiny
+— a few hundred — so one VMEM block always suffices). The Rust sampler
+calls the AOT artifact of this kernel each outer round; it is the KL-
+regularized importance distribution of Proposition 1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_kernel(g_ref, eta_ref, p_ref):
+    g = g_ref[...] * eta_ref[0]
+    g = g - jnp.max(g)
+    e = jnp.exp(g)
+    p_ref[...] = e / jnp.sum(e)
+
+
+@jax.jit
+def softmax_probs(scores, eta):
+    """Tempered softmax over the module importance scores.
+
+    Args:
+      scores: f32[B] smoothed scaled gradient norms G_b.
+      eta: f32[1] exploration/exploitation temperature (eta→0 uniform).
+
+    Returns:
+      f32[B] simplex-valued sampling probabilities.
+    """
+    (b,) = scores.shape
+    return pl.pallas_call(
+        _softmax_kernel,
+        in_specs=[pl.BlockSpec((b,), lambda: (0,)),
+                  pl.BlockSpec((1,), lambda: (0,))],
+        out_specs=pl.BlockSpec((b,), lambda: (0,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(scores, eta)

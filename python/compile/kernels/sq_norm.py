@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: scaled squared-gradient-norm reduction.
+
+The importance sampler (paper Eq. 4 + Appendix A.2) scores each module by
+its *scaled gradient norm* ||g||_F / sqrt(|m|). This kernel computes the
+squared Frobenius norm of a module gradient in one tiled pass; the Rust
+coordinator divides by the parameter count (the scaling) and feeds the
+EMA tracker G_b. It is embedded in the fwd/bwd graph (model.py) so the
+indicator is a by-product of the backward pass — paper Appendix F.3's
+"negligible overhead" claim made structural.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 131072  # 512 KiB of f32 per tile
+
+
+def _cdiv(a: int, b: int) -> int:
+    return (a + b - 1) // b
+
+
+def _sq_norm_kernel(g_ref, acc_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g = g_ref[...]
+    acc_ref[...] += jnp.sum(g * g)
+
+
+@jax.jit
+def sq_norm(g):
+    """sum(g*g) over an arbitrary-shaped f32 array, tiled 1-D."""
+    flat = g.reshape(-1)
+    n = flat.shape[0]
+    block = min(BLOCK, n)
+    # pad so the grid covers the array exactly (zeros do not affect the sum)
+    padded = _cdiv(n, block) * block
+    if padded != n:
+        flat = jnp.pad(flat, (0, padded - n))
+    grid = (padded // block,)
+    out = pl.pallas_call(
+        _sq_norm_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(flat)
+    return out.reshape(())
+
+
+def scaled_sq_norm(g):
+    """||g||_F^2 / |m| — the squared scaled gradient norm of Appendix A.2."""
+    return sq_norm(g) / jnp.float32(g.size)

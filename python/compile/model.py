@@ -1,0 +1,153 @@
+"""L2: LLaMA-architecture decoder LM forward/backward in JAX.
+
+Build-time only. The three graphs lowered by aot.py are:
+
+  fwd_bwd(params..., tokens, targets, mask)
+      -> (loss, grads... [registry order], sq_norms f32[P])
+  predict(params..., tokens, targets, mask)
+      -> (loss, correct f32[b,s])
+  (per-shape) adam_step / momentum_tail — see kernels/fused_adam.py
+
+The parameter order contract lives in configs.param_specs; grads are
+returned in the same order so the Rust coordinator can zip them against
+its module registry. sq_norms are the per-parameter squared Frobenius
+norms computed by the Pallas sq_norm kernel inside the same graph —
+the importance indicator is a by-product of the backward pass.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig, ParamSpec, param_specs
+from .kernels.sq_norm import sq_norm
+
+
+# ---------------------------------------------------------------------------
+# Initialization (mirrored in Rust for seed-compatible host init; the Rust
+# side owns the canonical init — this one is used by python tests).
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jnp.ndarray]:
+    rng = np.random.default_rng(seed)
+    out = []
+    for spec in param_specs(cfg):
+        if spec.kind == "norm":
+            out.append(jnp.ones(spec.shape, jnp.float32))
+        else:
+            fan_in = spec.shape[0]
+            std = 0.02 if spec.kind in ("embed", "head") else fan_in ** -0.5
+            out.append(jnp.asarray(
+                rng.normal(0.0, std, size=spec.shape), jnp.float32))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _rms_norm(x, w, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _rope_tables(cfg: ModelConfig):
+    hd = cfg.head_dim
+    pos = np.arange(cfg.seq_len, dtype=np.float32)
+    freqs = cfg.rope_theta ** (-np.arange(0, hd, 2, dtype=np.float32) / hd)
+    ang = np.outer(pos, freqs)  # [s, hd/2]
+    return jnp.asarray(np.cos(ang)), jnp.asarray(np.sin(ang))
+
+
+def _apply_rope(x, cos, sin):
+    # x: [b, s, n, hd]; rotate pairs (even, odd)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    ro = jnp.stack([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return ro.reshape(x.shape)
+
+
+def _as_dict(cfg: ModelConfig, params: List[jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    return {s.name: p for s, p in zip(param_specs(cfg), params)}
+
+
+def forward_logits(cfg: ModelConfig, params: List[jnp.ndarray], tokens):
+    """tokens i32[b,s] -> logits f32[b,s,V]."""
+    p = _as_dict(cfg, params)
+    b, s = tokens.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cos, sin = _rope_tables(cfg)
+    causal = jnp.tril(jnp.ones((s, s), jnp.bool_))
+
+    x = p["embed"][tokens]  # [b,s,d]
+    for i in range(cfg.n_layers):
+        pre = f"layers.{i}."
+        h = _rms_norm(x, p[pre + "attn_norm"])
+        q = (h @ p[pre + "wq"]).reshape(b, s, nh, hd)
+        k = (h @ p[pre + "wk"]).reshape(b, s, nkv, hd)
+        v = (h @ p[pre + "wv"]).reshape(b, s, nkv, hd)
+        q = _apply_rope(q, cos, sin)
+        k = _apply_rope(k, cos, sin)
+        # GQA: repeat kv heads
+        rep = nh // nkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+        att = jnp.where(causal[None, None, :, :], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, cfg.dim)
+        x = x + o @ p[pre + "wo"]
+        h = _rms_norm(x, p[pre + "mlp_norm"])
+        gate = jax.nn.silu(h @ p[pre + "wgate"])
+        up = h @ p[pre + "wup"]
+        x = x + (gate * up) @ p[pre + "wdown"]
+    x = _rms_norm(x, p["final_norm"])
+    return x @ p["head"]
+
+
+def masked_loss(cfg: ModelConfig, params: List[jnp.ndarray], tokens, targets,
+                mask):
+    """Mean masked next-token cross-entropy.
+
+    tokens/targets i32[b,s]; mask f32[b,s] selects supervised positions
+    (1 everywhere for pre-training; answer span only for fine-tuning).
+    """
+    logits = forward_logits(cfg, params, tokens)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ce = logz - gold
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(ce * mask) / denom
+
+
+def build_fwd_bwd(cfg: ModelConfig):
+    """The training graph: loss + all grads + per-param squared norms."""
+
+    def fwd_bwd(params, tokens, targets, mask):
+        loss, grads = jax.value_and_grad(
+            lambda ps: masked_loss(cfg, ps, tokens, targets, mask))(params)
+        norms = jnp.stack([sq_norm(g) for g in grads])
+        return (loss, *grads, norms)
+
+    return fwd_bwd
+
+
+def build_predict(cfg: ModelConfig):
+    """Evaluation graph: masked loss + per-position teacher-forced hits."""
+
+    def predict(params, tokens, targets, mask):
+        logits = forward_logits(cfg, params, tokens)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        ce = logz - gold
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        loss = jnp.sum(ce * mask) / denom
+        correct = (jnp.argmax(logits, axis=-1) == targets).astype(jnp.float32)
+        return loss, correct
+
+    return predict

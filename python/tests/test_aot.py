@@ -1,0 +1,91 @@
+"""AOT pipeline checks: manifest ABI consistency and HLO-text format.
+
+These validate the build products when `make artifacts` has run (skipped
+otherwise) plus the manifest-generation logic itself, which must match
+the Rust parser's expectations line for line.
+"""
+
+import os
+
+import pytest
+
+from compile.configs import CONFIGS, get_config, param_specs, total_params
+from compile.aot import n_matrix_modules, shape_key
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ARTIFACTS, "manifest.txt")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+def test_config_registry_sanity():
+    names = [c.name for c in CONFIGS]
+    assert len(names) == len(set(names))
+    for c in CONFIGS:
+        assert c.dim % c.n_heads == 0
+        assert c.n_heads % c.n_kv_heads == 0
+        assert c.vocab >= 64  # reserved token space
+        specs = param_specs(c)
+        # ABI: per layer 9 params, plus final_norm/embed/head
+        assert len(specs) == c.n_layers * 9 + 3
+        assert total_params(c) == sum(s.numel for s in specs)
+
+
+def test_e2e_config_is_about_100m_params():
+    cfg = get_config("e2e")
+    assert 50e6 < total_params(cfg) < 150e6
+
+
+def test_shape_key_format():
+    assert shape_key((64, 32)) == "64x32"
+    assert shape_key((128,)) == "128"
+
+
+def test_matrix_module_count():
+    cfg = get_config("tiny")
+    assert n_matrix_modules(cfg) == cfg.n_layers * 7
+
+
+@needs_artifacts
+def test_manifest_lists_every_graph_file():
+    with open(MANIFEST) as f:
+        lines = [l.strip() for l in f if l.strip()]
+    assert lines[0] == "version 1"
+    files = [l.split()[-1] for l in lines if l.startswith(("graph", "probs"))]
+    assert files, "no graphs in manifest"
+    for fname in files:
+        path = os.path.join(ARTIFACTS, fname)
+        assert os.path.exists(path), fname
+        assert os.path.getsize(path) > 0, fname
+
+
+@needs_artifacts
+def test_hlo_text_is_parseable_hlo():
+    # spot-check: HLO text modules start with the HloModule header that
+    # xla::HloModuleProto::from_text_file expects
+    with open(MANIFEST) as f:
+        fname = next(l.split()[-1] for l in f if l.strip().startswith("graph"))
+    with open(os.path.join(ARTIFACTS, fname)) as f:
+        head = f.read(200)
+    assert head.startswith("HloModule"), head[:50]
+
+
+@needs_artifacts
+def test_manifest_param_order_matches_registry():
+    with open(MANIFEST) as f:
+        text = f.read()
+    for cfg in CONFIGS:
+        if f"config {cfg.name}\n" not in text:
+            continue
+        section = text.split(f"config {cfg.name}\n", 1)[1]
+        manifest_params = []
+        for line in section.splitlines():
+            line = line.strip()
+            if line.startswith("param "):
+                manifest_params.append(line.split()[1])
+            elif line.startswith("config "):
+                break
+        expected = [s.name for s in param_specs(cfg)]
+        assert manifest_params[: len(expected)] == expected, cfg.name

@@ -1,0 +1,141 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes, dtypes-compatible value ranges and
+hyper-parameters; every kernel must match its reference to f32 tolerance
+across single- and multi-tile grids.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fused_adam import (BLOCK_C, BLOCK_R, fused_adam,
+                                        momentum_tail)
+from compile.kernels.softmax_probs import softmax_probs
+from compile.kernels.sq_norm import BLOCK as SQ_BLOCK
+from compile.kernels.sq_norm import scaled_sq_norm, sq_norm
+
+ATOL = 1e-5
+RTOL = 1e-5
+
+
+def _mats(rng, shape):
+    p = rng.normal(size=shape).astype(np.float32)
+    g = rng.normal(size=shape).astype(np.float32)
+    m = rng.normal(size=shape).astype(np.float32)
+    v = np.abs(rng.normal(size=shape)).astype(np.float32)  # 2nd moment >= 0
+    return p, g, m, v
+
+
+shapes = st.sampled_from([
+    (8,), (130,), (1, 1), (3, 7), (64, 64), (70, 130),
+    (BLOCK_R, BLOCK_C),             # exactly one tile
+    (BLOCK_R + 5, BLOCK_C + 3),     # ragged multi-tile grid
+    (2 * BLOCK_R, 17),              # tall
+])
+
+
+class TestFusedAdam:
+    @settings(max_examples=20, deadline=None)
+    @given(shape=shapes,
+           lr=st.floats(1e-6, 1e-1),
+           beta1=st.floats(0.0, 0.99),
+           beta2=st.floats(0.5, 0.9999),
+           seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, shape, lr, beta1, beta2, seed):
+        rng = np.random.default_rng(seed)
+        p, g, m, v = _mats(rng, shape)
+        lr_arr = jnp.asarray([lr], jnp.float32)
+        po, mo, vo, sq = fused_adam(p, g, m, v, lr_arr,
+                                    beta1=beta1, beta2=beta2)
+        pr, mr, vr, sr = ref.adam_ref(p, g, m, v, lr,
+                                      beta1=beta1, beta2=beta2)
+        np.testing.assert_allclose(mo, mr, atol=ATOL, rtol=RTOL)
+        np.testing.assert_allclose(vo, vr, atol=ATOL, rtol=RTOL)
+        np.testing.assert_allclose(po, pr, atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(sq, sr, rtol=1e-4)
+
+    def test_zero_grad_keeps_param_moving_by_momentum_only(self):
+        rng = np.random.default_rng(0)
+        p, _, m, v = _mats(rng, (16, 16))
+        g = np.zeros_like(p)
+        lr = jnp.asarray([0.1], jnp.float32)
+        po, mo, vo, sq = fused_adam(p, g, m, v, lr)
+        assert float(sq) == 0.0
+        np.testing.assert_allclose(mo, 0.9 * m, atol=ATOL)
+
+    def test_multi_tile_norm_accumulation(self):
+        # the sq-norm by-product must sum across ALL grid tiles
+        rng = np.random.default_rng(1)
+        shape = (BLOCK_R + 1, BLOCK_C + 1)  # 4 tiles
+        p, g, m, v = _mats(rng, shape)
+        lr = jnp.asarray([0.01], jnp.float32)
+        _, _, _, sq = fused_adam(p, g, m, v, lr)
+        np.testing.assert_allclose(float(sq), float(np.sum(g * g)), rtol=1e-4)
+
+
+class TestMomentumTail:
+    @settings(max_examples=15, deadline=None)
+    @given(shape=shapes, lr=st.floats(1e-6, 1e-1),
+           beta1=st.floats(0.01, 0.99), seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, shape, lr, beta1, seed):
+        rng = np.random.default_rng(seed)
+        p, _, m, v = _mats(rng, shape)
+        po = momentum_tail(p, m, v, jnp.asarray([lr], jnp.float32),
+                           beta1=beta1)
+        pr = ref.momentum_tail_ref(p, m, v, lr, beta1=beta1)
+        np.testing.assert_allclose(po, pr, atol=1e-4, rtol=1e-4)
+
+
+class TestSqNorm:
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.sampled_from([1, 7, 1024, SQ_BLOCK, SQ_BLOCK + 1,
+                              2 * SQ_BLOCK + 13]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, n, seed):
+        rng = np.random.default_rng(seed)
+        g = rng.normal(size=(n,)).astype(np.float32)
+        np.testing.assert_allclose(float(sq_norm(g)),
+                                   float(ref.sq_norm_ref(g)), rtol=1e-4)
+
+    def test_2d_and_scaling(self):
+        rng = np.random.default_rng(2)
+        g = rng.normal(size=(37, 53)).astype(np.float32)
+        np.testing.assert_allclose(float(scaled_sq_norm(g)),
+                                   float(np.sum(g * g)) / g.size, rtol=1e-4)
+
+    def test_zeros(self):
+        assert float(sq_norm(np.zeros(100, np.float32))) == 0.0
+
+
+class TestSoftmaxProbs:
+    @settings(max_examples=20, deadline=None)
+    @given(b=st.integers(1, 300), eta=st.floats(0.0, 300.0),
+           seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref_and_simplex(self, b, eta, seed):
+        rng = np.random.default_rng(seed)
+        s = np.abs(rng.normal(size=(b,))).astype(np.float32)
+        p = np.asarray(softmax_probs(s, jnp.asarray([eta], jnp.float32)))
+        pr = np.asarray(ref.softmax_probs_ref(s, eta))
+        np.testing.assert_allclose(p, pr, atol=1e-6)
+        assert abs(p.sum() - 1.0) < 1e-5
+        assert (p >= 0).all()
+
+    def test_eta_zero_is_uniform(self):
+        # paper Sec 3.2: eta -> 0 recovers uniform sampling
+        s = np.asarray([0.1, 5.0, 2.0], np.float32)
+        p = np.asarray(softmax_probs(s, jnp.asarray([0.0], jnp.float32)))
+        np.testing.assert_allclose(p, np.full(3, 1 / 3), atol=1e-6)
+
+    def test_large_eta_concentrates(self):
+        # eta -> inf recovers greedy importance sampling (Prop. 1 limit)
+        s = np.asarray([0.1, 5.0, 2.0], np.float32)
+        p = np.asarray(softmax_probs(s, jnp.asarray([200.0], jnp.float32)))
+        assert p[1] > 0.999
+
+    def test_stability_large_scores(self):
+        s = np.asarray([1e4, 1e4 + 1], np.float32)
+        p = np.asarray(softmax_probs(s, jnp.asarray([1.0], jnp.float32)))
+        assert np.isfinite(p).all()

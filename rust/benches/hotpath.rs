@@ -1,0 +1,114 @@
+//! `cargo bench --bench hotpath` — micro-benchmarks of the training hot
+//! path: fwd/bwd graph execution, fused-Adam kernel vs host loop,
+//! sampler selection, host linear algebra. These are the §Perf
+//! measurements recorded in EXPERIMENTS.md.
+
+use std::path::Path;
+use std::time::Instant;
+
+use misa::data::{Loader, TaskKind};
+use misa::optim::sampler::{ImportanceSampler, SamplerConfig};
+use misa::optim::{AdamHyper, AdamState};
+use misa::runtime::{Engine, Session};
+use misa::tensor::{matmul, range_finder, Mat};
+use misa::util::Rng;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    let unit = if per >= 1.0 {
+        format!("{per:.2} s")
+    } else if per >= 1e-3 {
+        format!("{:.2} ms", per * 1e3)
+    } else {
+        format!("{:.2} µs", per * 1e6)
+    };
+    println!("{name:<44} {unit:>12}/iter  ({iters} iters)");
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== hot-path micro-benchmarks ==");
+
+    // ---- L3 host primitives (no artifacts needed) ----------------------
+    let mut rng = Rng::new(0);
+    let a = Mat::randn(128, 344, 1.0, &mut rng);
+    let b = Mat::randn(344, 128, 1.0, &mut rng);
+    bench("tensor: matmul 128x344 @ 344x128", 200, || {
+        std::hint::black_box(matmul(&a, &b));
+    });
+    let g = Mat::randn(344, 128, 1.0, &mut rng);
+    bench("tensor: range_finder r=16 (GaLore refresh)", 50, || {
+        let mut r2 = Rng::new(1);
+        std::hint::black_box(range_finder(&g, 16, &mut r2));
+    });
+
+    let mut st = AdamState::zeros(128 * 344);
+    let mut p = vec![0.1f32; 128 * 344];
+    let gv = vec![0.01f32; 128 * 344];
+    bench("optim: host Adam step 128x344", 500, || {
+        st.step(&mut p, &gv, 1e-3, AdamHyper::default());
+    });
+
+    let numel: Vec<u64> = (0..84).map(|i| 16_384 + (i % 7) as u64 * 4000).collect();
+    let total: u64 = numel.iter().sum();
+    let mut sampler = ImportanceSampler::new(
+        SamplerConfig { delta: 0.03, ..Default::default() },
+        numel,
+        total * 2,
+    );
+    for i in 0..84 {
+        sampler.update_score(i, (i as f64) * 0.01);
+    }
+    let mut srng = Rng::new(2);
+    bench("sampler: Alg.2 select over 84 modules", 2000, || {
+        std::hint::black_box(sampler.select(&mut srng));
+    });
+    bench("sampler: Prop.1 softmax over 84 modules", 20000, || {
+        std::hint::black_box(sampler.probabilities());
+    });
+
+    // ---- runtime + kernels (needs artifacts) ----------------------------
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        println!("(artifacts missing — skipping runtime benches; run `make artifacts`)");
+        return Ok(());
+    }
+    let mut engine = Engine::new(dir)?;
+    for model in ["tiny", "small"] {
+        let mut sess = Session::create(&mut engine, model, 0)?;
+        let mc = sess.spec.config.clone();
+        let mut loader = Loader::tasks(&TaskKind::ALL, mc.vocab, mc.batch, mc.seq_len, 1);
+        let batch = loader.next_batch();
+        bench(&format!("runtime: fwd_bwd graph ({model})"), 20, || {
+            std::hint::black_box(sess.fwd_bwd(&batch).unwrap());
+        });
+        bench(&format!("runtime: predict graph ({model})"), 20, || {
+            std::hint::black_box(sess.predict(&batch).unwrap());
+        });
+        // fused-Adam kernel executable vs host loop on the largest module
+        let idx = *sess
+            .spec
+            .matrix_module_indices()
+            .iter()
+            .max_by_key(|&&i| sess.spec.params[i].numel())
+            .unwrap();
+        let n = sess.spec.params[idx].numel();
+        let grad = vec![0.01f32; n];
+        let m = vec![0.0f32; n];
+        let v = vec![0.0f32; n];
+        bench(&format!("kernel: fused-Adam exe {n}-elem ({model})"), 50, || {
+            std::hint::black_box(sess.adam_update(idx, &grad, &m, &v, 1e-3).unwrap());
+        });
+        let mut host_state = AdamState::zeros(n);
+        let mut host_p = vec![0.1f32; n];
+        bench(&format!("kernel: host Adam    {n}-elem ({model})"), 200, || {
+            host_state.step(&mut host_p, &grad, 1e-3, AdamHyper::default());
+        });
+    }
+    Ok(())
+}

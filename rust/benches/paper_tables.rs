@@ -1,0 +1,42 @@
+//! `cargo bench --bench paper_tables` — regenerates EVERY table and
+//! figure of the paper's evaluation through the experiment harness
+//! (fast profile). Reports land under `results/` and are echoed here.
+//!
+//! criterion is not vendorable offline; this is a plain harness=false
+//! bench binary, which also suits these end-to-end (minutes-long)
+//! workloads better than statistical micro-benchmarking.
+
+use std::path::Path;
+
+use misa::coordinator::experiments::{registry, ExpCtx};
+use misa::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    // `cargo bench -- <filter>` runs a subset
+    let filter: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let mut engine = Engine::new(Path::new("artifacts"))?;
+    let mut ctx = ExpCtx::new(&mut engine, true);
+    let mut failed = 0;
+    for (name, f, desc) in registry() {
+        if !filter.is_empty() && !filter.iter().any(|x| name.contains(x.as_str())) {
+            continue;
+        }
+        let t0 = std::time::Instant::now();
+        match f(&mut ctx) {
+            Ok(body) => {
+                println!(
+                    "==== {name}: {desc} ({:.1}s) ====\n{body}\n",
+                    t0.elapsed().as_secs_f64()
+                );
+            }
+            Err(e) => {
+                failed += 1;
+                println!("==== {name} FAILED: {e:#} ====\n");
+            }
+        }
+    }
+    if failed > 0 {
+        anyhow::bail!("{failed} experiments failed");
+    }
+    Ok(())
+}

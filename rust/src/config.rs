@@ -1,0 +1,319 @@
+//! Run configuration: a TOML-subset parser (offline build — no serde)
+//! and the typed training configuration the launcher consumes.
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string
+//! (`"…"`), float, integer, and boolean values, `#` comments.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::data::TaskKind;
+use crate::optim::sampler::{SamplerConfig, ScoreFn, Strategy};
+use crate::optim::MisaConfig;
+
+/// Parsed config document: section -> key -> raw value.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    sections: HashMap<String, HashMap<String, String>>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc> {
+        let mut doc = Doc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: bad section header {raw:?}", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+            } else if let Some(eq) = line.find('=') {
+                let key = line[..eq].trim().to_string();
+                let mut val = line[eq + 1..].trim().to_string();
+                if val.starts_with('"') && val.ends_with('"') && val.len() >= 2 {
+                    val = val[1..val.len() - 1].to_string();
+                }
+                doc.sections.entry(section.clone()).or_default().insert(key, val);
+            } else {
+                bail!("line {}: expected key = value, got {raw:?}", lineno + 1);
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &Path) -> Result<Doc> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        Doc::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> Result<f64> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("{section}.{key}: bad float {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, section: &str, key: &str, default: u64) -> Result<u64> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("{section}.{key}: bad int {v:?}")),
+        }
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> Result<bool> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some("true") => Ok(true),
+            Some("false") => Ok(false),
+            Some(v) => bail!("{section}.{key}: bad bool {v:?}"),
+        }
+    }
+}
+
+/// Which optimizer to run (the `method` table of a run config).
+#[derive(Clone, Debug)]
+pub enum MethodSpec {
+    Misa(MisaConfig),
+    FullAdam,
+    BAdam { t_inner: usize },
+    Lisa { t_inner: usize },
+    Lora { rank: usize, alpha: f32 },
+    Dora { rank: usize, alpha: f32 },
+    Galore { rank: usize, update_freq: u64, scale: f32 },
+    LoraMisa { rank: usize, alpha: f32, delta: f64, eta: f64, t_inner: usize },
+}
+
+impl MethodSpec {
+    pub fn label(&self) -> String {
+        match self {
+            MethodSpec::Misa(c) => format!("MISA(d={:.0}%)", c.sampler.delta * 100.0),
+            MethodSpec::FullAdam => "FT".into(),
+            MethodSpec::BAdam { .. } => "BAdam".into(),
+            MethodSpec::Lisa { .. } => "LISA".into(),
+            MethodSpec::Lora { rank, .. } => format!("LoRA(r={rank})"),
+            MethodSpec::Dora { rank, .. } => format!("DoRA(r={rank})"),
+            MethodSpec::Galore { rank, .. } => format!("GaLore(r={rank})"),
+            MethodSpec::LoraMisa { delta, .. } => {
+                format!("LoRA+MISA(d={:.0}%)", delta * 100.0)
+            }
+        }
+    }
+}
+
+/// Data selection for a run.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DataSpec {
+    /// Zipf-Markov LM stream (pre-training)
+    Lm,
+    /// commonsense task suite
+    Commonsense,
+    /// math task suite
+    Math,
+    /// instruction mixture (all 12 families)
+    Instruction,
+}
+
+impl DataSpec {
+    pub fn kinds(&self) -> Vec<TaskKind> {
+        match self {
+            DataSpec::Lm => vec![],
+            DataSpec::Commonsense => TaskKind::COMMONSENSE.to_vec(),
+            DataSpec::Math => TaskKind::MATH.to_vec(),
+            DataSpec::Instruction => TaskKind::ALL.to_vec(),
+        }
+    }
+}
+
+/// A full training-run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: String,
+    pub method: MethodSpec,
+    pub data: DataSpec,
+    pub lr: f32,
+    pub steps: u64,
+    pub eval_every: u64,
+    pub eval_batches: usize,
+    pub log_every: u64,
+    pub seed: u64,
+    pub pretrain: bool,
+    pub use_kernel: bool,
+    pub out_dir: Option<String>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "small".into(),
+            method: MethodSpec::Misa(MisaConfig::default()),
+            data: DataSpec::Instruction,
+            lr: 1e-3,
+            steps: 200,
+            eval_every: 50,
+            eval_batches: 8,
+            log_every: 10,
+            seed: 0,
+            pretrain: false,
+            use_kernel: true,
+            out_dir: None,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Build from a parsed TOML-subset document.
+    pub fn from_doc(doc: &Doc) -> Result<RunConfig> {
+        let mut rc = RunConfig::default();
+        rc.model = doc.str_or("run", "model", &rc.model);
+        rc.lr = doc.f64_or("run", "lr", rc.lr as f64)? as f32;
+        rc.steps = doc.u64_or("run", "steps", rc.steps)?;
+        rc.eval_every = doc.u64_or("run", "eval_every", rc.eval_every)?;
+        rc.eval_batches = doc.u64_or("run", "eval_batches", rc.eval_batches as u64)? as usize;
+        rc.log_every = doc.u64_or("run", "log_every", rc.log_every)?;
+        rc.seed = doc.u64_or("run", "seed", rc.seed)?;
+        rc.pretrain = doc.bool_or("run", "pretrain", rc.pretrain)?;
+        rc.use_kernel = doc.bool_or("run", "use_kernel", rc.use_kernel)?;
+        rc.out_dir = doc.get("run", "out_dir").map(|s| s.to_string());
+        rc.data = match doc.str_or("run", "data", "instruction").as_str() {
+            "lm" => DataSpec::Lm,
+            "commonsense" => DataSpec::Commonsense,
+            "math" => DataSpec::Math,
+            "instruction" => DataSpec::Instruction,
+            other => bail!("unknown data spec {other:?}"),
+        };
+        let t_inner = doc.u64_or("method", "t_inner", 50)? as usize;
+        let rank = doc.u64_or("method", "rank", 16)? as usize;
+        let alpha = doc.f64_or("method", "alpha", 32.0)? as f32;
+        let delta = doc.f64_or("method", "delta", 0.03)?;
+        let eta = doc.f64_or("method", "eta", 1.0)?;
+        rc.method = match doc.str_or("method", "name", "misa").as_str() {
+            "misa" => {
+                let strategy = match doc.str_or("method", "strategy", "importance").as_str() {
+                    "importance" => Strategy::Importance { eta },
+                    "uniform" => Strategy::Uniform,
+                    "topk" => Strategy::TopK,
+                    "bottomk" => Strategy::BottomK,
+                    other => bail!("unknown strategy {other:?}"),
+                };
+                let score_fn = match doc.str_or("method", "score", "grad_norm").as_str() {
+                    "grad_norm" => ScoreFn::GradNorm,
+                    "weight_norm" => ScoreFn::WeightNorm,
+                    "param_count" => ScoreFn::ParamCount,
+                    other => bail!("unknown score fn {other:?}"),
+                };
+                MethodSpec::Misa(MisaConfig {
+                    sampler: SamplerConfig {
+                        strategy,
+                        score_fn,
+                        beta: doc.f64_or("method", "beta", 0.9)?,
+                        delta,
+                    },
+                    t_inner,
+                    pretrain: rc.pretrain,
+                    clear_states: doc.bool_or("method", "clear_states", true)?,
+                    momentum_tail: doc.bool_or("method", "momentum_tail", true)?,
+                    amsgrad: doc.bool_or("method", "amsgrad", false)?,
+                    use_kernel: rc.use_kernel,
+                    kernel_min_elems: doc.u64_or("method", "kernel_min_elems", 1 << 17)? as usize,
+                })
+            }
+            "ft" | "adam" => MethodSpec::FullAdam,
+            "badam" => MethodSpec::BAdam { t_inner },
+            "lisa" => MethodSpec::Lisa { t_inner },
+            "lora" => MethodSpec::Lora { rank, alpha },
+            "dora" => MethodSpec::Dora { rank, alpha },
+            "galore" => MethodSpec::Galore {
+                rank,
+                update_freq: doc.u64_or("method", "update_freq", 200)?,
+                scale: doc.f64_or("method", "scale", 0.25)? as f32,
+            },
+            "lora_misa" => MethodSpec::LoraMisa { rank, alpha, delta, eta, t_inner },
+            other => bail!("unknown method {other:?}"),
+        };
+        Ok(rc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# quickstart run
+[run]
+model = "small"
+lr = 0.001
+steps = 100
+pretrain = false
+data = "math"
+
+[method]
+name = "misa"
+delta = 0.05
+eta = 0.5
+t_inner = 25
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let doc = Doc::parse(SAMPLE).unwrap();
+        let rc = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(rc.model, "small");
+        assert_eq!(rc.steps, 100);
+        assert_eq!(rc.data, DataSpec::Math);
+        match rc.method {
+            MethodSpec::Misa(c) => {
+                assert!((c.sampler.delta - 0.05).abs() < 1e-12);
+                assert_eq!(c.t_inner, 25);
+                match c.sampler.strategy {
+                    Strategy::Importance { eta } => assert!((eta - 0.5).abs() < 1e-12),
+                    _ => panic!("wrong strategy"),
+                }
+            }
+            _ => panic!("wrong method"),
+        }
+    }
+
+    #[test]
+    fn strings_and_comments() {
+        let doc = Doc::parse("[a]\nx = \"hi there\" # trailing\n").unwrap();
+        assert_eq!(doc.get("a", "x"), Some("hi there"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Doc::parse("not a kv line").is_err());
+        assert!(Doc::parse("[unclosed\n").is_err());
+    }
+
+    #[test]
+    fn unknown_method_is_error() {
+        let doc = Doc::parse("[method]\nname = \"sgd\"\n").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn every_method_parses() {
+        for m in ["misa", "ft", "badam", "lisa", "lora", "dora", "galore", "lora_misa"] {
+            let text = format!("[method]\nname = \"{m}\"\n");
+            let doc = Doc::parse(&text).unwrap();
+            assert!(RunConfig::from_doc(&doc).is_ok(), "{m}");
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! Checkpointing: host parameters ⇄ flat binary file.
+//!
+//! Format: magic "MISA" + u32 param count + per-param (u64 element
+//! count + f32 LE data), registry order. Used to share the pre-trained
+//! base between fine-tuning experiments (the paper fine-tunes published
+//! checkpoints; we pre-train our own base once and cache it).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 4] = b"MISA";
+
+pub fn save(path: &Path, params: &[Vec<f32>]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(params.len() as u32).to_le_bytes())?;
+    for p in params {
+        f.write_all(&(p.len() as u64).to_le_bytes())?;
+        // SAFETY-free path: serialize via byte conversion per element
+        let mut bytes = Vec::with_capacity(p.len() * 4);
+        for &x in p {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        f.write_all(&bytes)?;
+    }
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<Vec<Vec<f32>>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: not a MISA checkpoint");
+    }
+    let mut u32b = [0u8; 4];
+    f.read_exact(&mut u32b)?;
+    let count = u32::from_le_bytes(u32b) as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let mut u64b = [0u8; 8];
+        f.read_exact(&mut u64b)?;
+        let n = u64::from_le_bytes(u64b) as usize;
+        let mut bytes = vec![0u8; n * 4];
+        f.read_exact(&mut bytes)?;
+        let mut p = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(4) {
+            p.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        out.push(p);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let params = vec![vec![1.0f32, -2.5, 3e-7], vec![], vec![0.0; 100]];
+        let path = std::env::temp_dir().join(format!("misa_ckpt_{}.bin", std::process::id()));
+        save(&path, &params).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(params, back);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join(format!("misa_bad_{}.bin", std::process::id()));
+        std::fs::write(&path, b"nope").unwrap();
+        assert!(load(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

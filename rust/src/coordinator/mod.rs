@@ -1,0 +1,8 @@
+//! The L3 coordinator: training orchestration, evaluation, and the
+//! paper-experiment harness.
+
+pub mod ckpt;
+pub mod experiments;
+pub mod trainer;
+
+pub use trainer::{EvalReport, Trainer};

@@ -1,0 +1,190 @@
+//! Batching into the fixed `[b, s]` shapes the AOT graphs expect.
+
+use crate::data::corpus::MarkovCorpus;
+use crate::data::tasks::{encode, Task, TaskKind};
+use crate::util::Rng;
+
+/// One training/eval batch, row-major `[b, s]`.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub batch: usize,
+    pub seq_len: usize,
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub mask: Vec<f32>,
+    /// per-row task kind (None for LM batches) — used by exact-match eval
+    pub kinds: Vec<Option<TaskKind>>,
+}
+
+impl Batch {
+    fn empty(b: usize, s: usize) -> Self {
+        Batch {
+            batch: b,
+            seq_len: s,
+            tokens: vec![0; b * s],
+            targets: vec![0; b * s],
+            mask: vec![0.0; b * s],
+            kinds: vec![None; b],
+        }
+    }
+}
+
+/// Data source behind a loader.
+enum Source {
+    /// Language-model stream: mask = 1 everywhere (pre-training).
+    Lm(MarkovCorpus),
+    /// Mixture of task families (fine-tuning / instruction tuning).
+    Tasks { tasks: Vec<Task>, rng: Rng },
+}
+
+/// Batch generator. Train/val splits use disjoint seed namespaces so the
+/// validation stream is never trained on.
+pub struct Loader {
+    batch: usize,
+    seq_len: usize,
+    source: Source,
+}
+
+impl Loader {
+    /// Pre-training LM loader over the Zipf-Markov corpus.
+    pub fn lm(vocab: usize, batch: usize, seq_len: usize, seed: u64) -> Self {
+        Loader { batch, seq_len, source: Source::Lm(MarkovCorpus::new(vocab, seed)) }
+    }
+
+    /// Task-mixture loader over the given families.
+    pub fn tasks(kinds: &[TaskKind], vocab: usize, batch: usize, seq_len: usize,
+                 seed: u64) -> Self {
+        let tasks = kinds.iter().map(|&k| Task::new(k, vocab)).collect();
+        Loader { batch, seq_len, source: Source::Tasks { tasks, rng: Rng::new(seed) } }
+    }
+
+    /// Single-family loader (per-task eval sets).
+    pub fn single_task(kind: TaskKind, vocab: usize, batch: usize, seq_len: usize,
+                       seed: u64) -> Self {
+        Self::tasks(&[kind], vocab, batch, seq_len, seed)
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.batch, self.seq_len)
+    }
+
+    /// Produce the next batch.
+    pub fn next_batch(&mut self) -> Batch {
+        let mut out = Batch::empty(self.batch, self.seq_len);
+        match &mut self.source {
+            Source::Lm(corpus) => {
+                for row in 0..self.batch {
+                    // sample s+1 tokens; input = [..s], target = [1..]
+                    let mut seq = vec![0i32; self.seq_len + 1];
+                    corpus.fill_sequence(&mut seq);
+                    let o = row * self.seq_len;
+                    out.tokens[o..o + self.seq_len].copy_from_slice(&seq[..self.seq_len]);
+                    out.targets[o..o + self.seq_len].copy_from_slice(&seq[1..]);
+                    for m in &mut out.mask[o..o + self.seq_len] {
+                        *m = 1.0;
+                    }
+                }
+            }
+            Source::Tasks { tasks, rng } => {
+                for row in 0..self.batch {
+                    let task = &tasks[rng.below(tasks.len())];
+                    let (tokens, targets, mask) = loop {
+                        let ex = task.generate(rng);
+                        if let Some(enc) = encode(&ex, self.seq_len) {
+                            break enc;
+                        }
+                    };
+                    let o = row * self.seq_len;
+                    out.tokens[o..o + self.seq_len].copy_from_slice(&tokens);
+                    out.targets[o..o + self.seq_len].copy_from_slice(&targets);
+                    out.mask[o..o + self.seq_len].copy_from_slice(&mask);
+                    out.kinds[row] = Some(task.kind);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Exact-match accuracy from the predict graph's `correct` output:
+/// a row counts as correct iff every supervised position is correct.
+pub fn exact_match(batch: &Batch, correct: &[f32]) -> (usize, usize) {
+    assert_eq!(correct.len(), batch.batch * batch.seq_len);
+    let mut hits = 0;
+    for row in 0..batch.batch {
+        let o = row * batch.seq_len;
+        let ok = (0..batch.seq_len).all(|i| {
+            batch.mask[o + i] == 0.0 || correct[o + i] > 0.5
+        });
+        if ok {
+            hits += 1;
+        }
+    }
+    (hits, batch.batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tok;
+
+    #[test]
+    fn lm_batches_full_mask_and_shift() {
+        let mut l = Loader::lm(256, 3, 16, 1);
+        let b = l.next_batch();
+        assert_eq!(b.tokens.len(), 48);
+        assert!(b.mask.iter().all(|&m| m == 1.0));
+        // target row is input row shifted by one
+        for row in 0..3 {
+            let o = row * 16;
+            assert_eq!(&b.tokens[o + 1..o + 16], &b.targets[o..o + 15]);
+        }
+    }
+
+    #[test]
+    fn task_batches_have_answer_masks() {
+        let mut l = Loader::tasks(&TaskKind::ALL, 256, 8, 64, 2);
+        let b = l.next_batch();
+        for row in 0..8 {
+            let o = row * 64;
+            let n: f32 = b.mask[o..o + 64].iter().sum();
+            assert!(n >= 1.0, "row {row} has empty mask");
+            assert!(b.kinds[row].is_some());
+            assert_eq!(b.tokens[o], tok::BOS);
+        }
+    }
+
+    #[test]
+    fn exact_match_counts_rows() {
+        let mut l = Loader::single_task(TaskKind::Copy, 256, 4, 32, 3);
+        let b = l.next_batch();
+        // all-correct prediction
+        let all = vec![1.0f32; 4 * 32];
+        assert_eq!(exact_match(&b, &all), (4, 4));
+        // break one masked position of row 2
+        let mut some = all.clone();
+        let o = 2 * 32;
+        let pos = (0..32).find(|&i| b.mask[o + i] == 1.0).unwrap();
+        some[o + pos] = 0.0;
+        assert_eq!(exact_match(&b, &some), (3, 4));
+    }
+
+    #[test]
+    fn disjoint_seeds_give_disjoint_streams() {
+        let mut a = Loader::tasks(&[TaskKind::Add], 256, 4, 32, 10);
+        let mut b = Loader::tasks(&[TaskKind::Add], 256, 4, 32, 11);
+        assert_ne!(a.next_batch().tokens, b.next_batch().tokens);
+    }
+
+    #[test]
+    fn property_batch_tokens_in_vocab() {
+        crate::prop!("loader_vocab", |rng| {
+            let vocab = rng.range(64, 512);
+            let mut l = Loader::tasks(&TaskKind::ALL, vocab, 2, 64, rng.next_u64());
+            let b = l.next_batch();
+            for &t in b.tokens.iter().chain(&b.targets) {
+                assert!((t as usize) < vocab);
+            }
+        });
+    }
+}

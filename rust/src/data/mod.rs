@@ -1,0 +1,40 @@
+//! Synthetic data substrate.
+//!
+//! The paper fine-tunes on Commonsense170K/MATH10K/Alpaca-GPT4 and
+//! pre-trains on C4 — none of which are available in this offline,
+//! CPU-only environment. Per DESIGN.md Sec. 3 we substitute:
+//!
+//! - [`corpus`]: a Zipf–Markov token stream with learnable bigram
+//!   structure (the C4 stand-in; perplexity decreases smoothly and the
+//!   optimizer ordering is preserved).
+//! - [`tasks`]: twelve seq-to-seq task families — eight
+//!   "commonsense-shaped" and four "math-shaped" — evaluated by exact
+//!   match, giving the per-task accuracy columns of Tables 1/3/4.
+//! - [`loader`]: batching/splitting into the fixed `[b, s]` shapes the
+//!   AOT graphs were lowered with.
+
+pub mod corpus;
+pub mod loader;
+pub mod tasks;
+
+pub use corpus::MarkovCorpus;
+pub use loader::{Batch, Loader};
+pub use tasks::{Task, TaskKind};
+
+/// Reserved token ids (shared by all vocabularies; vocab >= 64).
+pub mod tok {
+    pub const PAD: i32 = 0;
+    pub const BOS: i32 = 1;
+    pub const SEP: i32 = 2;
+    pub const EOS: i32 = 3;
+    pub const YES: i32 = 4;
+    pub const NO: i32 = 5;
+    pub const FIRST: i32 = 6; // "answer is first operand"
+    pub const SECOND: i32 = 7; // "answer is second operand"
+    /// digits 0..9 → tokens 8..=17
+    pub const DIGIT0: i32 = 8;
+    /// task-marker tokens 18..=31
+    pub const TASK0: i32 = 18;
+    /// symbol alphabet starts here
+    pub const SYM0: i32 = 32;
+}

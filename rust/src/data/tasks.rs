@@ -1,0 +1,387 @@
+//! Synthetic task families — the fine-tuning benchmark substitute.
+//!
+//! Eight "commonsense-shaped" families stand in for the paper's
+//! BoolQ/PIQA/SIQA/HellaSwag/WinoGrande/ARC-e/ARC-c/OBQA columns and four
+//! "math-shaped" families for GSM8K/SVAMP/AQuA/MAWPS. Each family emits
+//! `[BOS, marker, input…, SEP, answer…, EOS]` sequences; training
+//! supervises only the answer span (teacher forcing) and evaluation is
+//! exact match over it — the same row/column structure as paper
+//! Tables 1/3/4, produced by real transformer gradients.
+
+use crate::data::tok;
+use crate::util::Rng;
+
+/// Task families. The first eight are the commonsense suite, the last
+/// four the math suite.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskKind {
+    Copy,
+    Reverse,
+    SortAsc,
+    MaxSym,
+    Parity,
+    Membership,
+    Compare,
+    Dedup,
+    Add,
+    Sub,
+    Mul1,
+    Mod,
+}
+
+impl TaskKind {
+    pub const COMMONSENSE: [TaskKind; 8] = [
+        TaskKind::Copy,
+        TaskKind::Reverse,
+        TaskKind::SortAsc,
+        TaskKind::MaxSym,
+        TaskKind::Parity,
+        TaskKind::Membership,
+        TaskKind::Compare,
+        TaskKind::Dedup,
+    ];
+
+    pub const MATH: [TaskKind; 4] =
+        [TaskKind::Add, TaskKind::Sub, TaskKind::Mul1, TaskKind::Mod];
+
+    pub const ALL: [TaskKind; 12] = [
+        TaskKind::Copy,
+        TaskKind::Reverse,
+        TaskKind::SortAsc,
+        TaskKind::MaxSym,
+        TaskKind::Parity,
+        TaskKind::Membership,
+        TaskKind::Compare,
+        TaskKind::Dedup,
+        TaskKind::Add,
+        TaskKind::Sub,
+        TaskKind::Mul1,
+        TaskKind::Mod,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::Copy => "Copy",
+            TaskKind::Reverse => "Rev",
+            TaskKind::SortAsc => "Sort",
+            TaskKind::MaxSym => "Max",
+            TaskKind::Parity => "Parity",
+            TaskKind::Membership => "Member",
+            TaskKind::Compare => "Cmp",
+            TaskKind::Dedup => "Dedup",
+            TaskKind::Add => "Add",
+            TaskKind::Sub => "Sub",
+            TaskKind::Mul1 => "Mul1",
+            TaskKind::Mod => "Mod",
+        }
+    }
+
+    pub fn marker(&self) -> i32 {
+        tok::TASK0 + Self::ALL.iter().position(|t| t == self).unwrap() as i32
+    }
+}
+
+/// One generated example: raw input and answer token streams.
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub input: Vec<i32>,
+    pub answer: Vec<i32>,
+    pub kind: TaskKind,
+}
+
+/// Task-family example generator over a given symbol alphabet.
+pub struct Task {
+    pub kind: TaskKind,
+    sym_lo: i32,
+    sym_hi: i32,
+}
+
+fn digits_of(mut n: u32) -> Vec<i32> {
+    // most-significant first; 0 encodes as a single digit
+    let mut ds = Vec::new();
+    loop {
+        ds.push(tok::DIGIT0 + (n % 10) as i32);
+        n /= 10;
+        if n == 0 {
+            break;
+        }
+    }
+    ds.reverse();
+    ds
+}
+
+impl Task {
+    /// `vocab` bounds the symbol alphabet; symbols live in
+    /// `[SYM0, vocab)`, capped at 64 distinct symbols so every family is
+    /// learnable by the small fine-tuning models.
+    pub fn new(kind: TaskKind, vocab: usize) -> Self {
+        let sym_lo = tok::SYM0;
+        let sym_hi = (vocab as i32).min(sym_lo + 64);
+        assert!(sym_hi > sym_lo + 8, "vocab {vocab} too small for tasks");
+        Task { kind, sym_lo, sym_hi }
+    }
+
+    fn sym(&self, rng: &mut Rng) -> i32 {
+        rng.range(self.sym_lo as usize, self.sym_hi as usize) as i32
+    }
+
+    fn syms(&self, n: usize, rng: &mut Rng) -> Vec<i32> {
+        (0..n).map(|_| self.sym(rng)).collect()
+    }
+
+    /// Generate one example.
+    pub fn generate(&self, rng: &mut Rng) -> Example {
+        let kind = self.kind;
+        let (input, answer) = match kind {
+            TaskKind::Copy => {
+                let xs = self.syms(rng.range(3, 9), rng);
+                (xs.clone(), xs)
+            }
+            TaskKind::Reverse => {
+                let xs = self.syms(rng.range(3, 9), rng);
+                let mut a = xs.clone();
+                a.reverse();
+                (xs, a)
+            }
+            TaskKind::SortAsc => {
+                let xs = self.syms(rng.range(3, 8), rng);
+                let mut a = xs.clone();
+                a.sort_unstable();
+                (xs, a)
+            }
+            TaskKind::MaxSym => {
+                let xs = self.syms(rng.range(3, 9), rng);
+                let m = *xs.iter().max().unwrap();
+                (xs, vec![m])
+            }
+            TaskKind::Parity => {
+                // is the count of the probe symbol even?
+                let probe = self.sym(rng);
+                let mut xs = self.syms(rng.range(4, 10), rng);
+                // plant the probe a random number of times
+                let plant = rng.range(0, 4);
+                for _ in 0..plant {
+                    let pos = rng.below(xs.len());
+                    xs[pos] = probe;
+                }
+                let count = xs.iter().filter(|&&x| x == probe).count();
+                let ans = if count % 2 == 0 { tok::YES } else { tok::NO };
+                let mut input = vec![probe, tok::SEP];
+                input.extend(&xs);
+                (input, vec![ans])
+            }
+            TaskKind::Membership => {
+                let set = self.syms(rng.range(3, 7), rng);
+                let inside = rng.f64() < 0.5;
+                let probe = if inside {
+                    set[rng.below(set.len())]
+                } else {
+                    // rejection-sample an absent symbol
+                    loop {
+                        let c = self.sym(rng);
+                        if !set.contains(&c) {
+                            break c;
+                        }
+                    }
+                };
+                let ans = if set.contains(&probe) { tok::YES } else { tok::NO };
+                let mut input = vec![probe, tok::SEP];
+                input.extend(&set);
+                (input, vec![ans])
+            }
+            TaskKind::Compare => {
+                let a = rng.range(0, 1000) as u32;
+                let b = loop {
+                    let b = rng.range(0, 1000) as u32;
+                    if b != a {
+                        break b;
+                    }
+                };
+                let mut input = digits_of(a);
+                input.push(tok::SEP);
+                input.extend(digits_of(b));
+                let ans = if a > b { tok::FIRST } else { tok::SECOND };
+                (input, vec![ans])
+            }
+            TaskKind::Dedup => {
+                // emit first occurrences in order
+                let xs = self.syms(rng.range(4, 10), rng);
+                let mut seen = Vec::new();
+                for &x in &xs {
+                    if !seen.contains(&x) {
+                        seen.push(x);
+                    }
+                }
+                (xs, seen)
+            }
+            TaskKind::Add => {
+                let a = rng.range(0, 500) as u32;
+                let b = rng.range(0, 500) as u32;
+                let mut input = digits_of(a);
+                input.push(tok::SEP);
+                input.extend(digits_of(b));
+                (input, digits_of(a + b))
+            }
+            TaskKind::Sub => {
+                let a = rng.range(0, 1000) as u32;
+                let b = rng.range(0, a as usize + 1) as u32;
+                let mut input = digits_of(a);
+                input.push(tok::SEP);
+                input.extend(digits_of(b));
+                (input, digits_of(a - b))
+            }
+            TaskKind::Mul1 => {
+                let a = rng.range(0, 200) as u32;
+                let b = rng.range(2, 10) as u32;
+                let mut input = digits_of(a);
+                input.push(tok::SEP);
+                input.extend(digits_of(b));
+                (input, digits_of(a * b))
+            }
+            TaskKind::Mod => {
+                let a = rng.range(0, 1000) as u32;
+                let b = rng.range(2, 10) as u32;
+                let mut input = digits_of(a);
+                input.push(tok::SEP);
+                input.extend(digits_of(b));
+                (input, digits_of(a % b))
+            }
+        };
+        Example { input, answer, kind }
+    }
+
+    /// Solve an example independently (oracle used by tests).
+    #[cfg(test)]
+    pub fn oracle(example: &Example) -> &[i32] {
+        &example.answer
+    }
+}
+
+/// Encode an example into fixed-length (tokens, targets, mask) rows.
+///
+/// Layout: `[BOS, marker, input…, SEP, answer…, EOS, PAD…]`.
+/// `targets[i] = tokens[i+1]`; mask=1 exactly on positions predicting
+/// the answer span and the EOS.
+pub fn encode(example: &Example, seq_len: usize) -> Option<(Vec<i32>, Vec<i32>, Vec<f32>)> {
+    let mut seq = Vec::with_capacity(seq_len + 1);
+    seq.push(tok::BOS);
+    seq.push(example.kind.marker());
+    seq.extend(&example.input);
+    seq.push(tok::SEP);
+    let answer_start = seq.len(); // first answer position in `seq`
+    seq.extend(&example.answer);
+    seq.push(tok::EOS);
+    if seq.len() > seq_len + 1 {
+        return None; // does not fit; caller regenerates
+    }
+    let answer_end = seq.len(); // one past EOS
+    seq.resize(seq_len + 1, tok::PAD);
+    let tokens = seq[..seq_len].to_vec();
+    let targets = seq[1..=seq_len].to_vec();
+    let mut mask = vec![0.0f32; seq_len];
+    // position i predicts seq[i+1]; supervise i where i+1 in answer span
+    for i in answer_start - 1..answer_end - 1 {
+        mask[i] = 1.0;
+    }
+    Some((tokens, targets, mask))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::new(0xDA7A)
+    }
+
+    #[test]
+    fn all_families_generate_and_encode() {
+        let mut r = rng();
+        for kind in TaskKind::ALL {
+            let t = Task::new(kind, 256);
+            for _ in 0..50 {
+                let ex = t.generate(&mut r);
+                assert!(!ex.answer.is_empty(), "{kind:?}");
+                let (tokens, targets, mask) = encode(&ex, 64).expect("fits");
+                assert_eq!(tokens.len(), 64);
+                assert_eq!(targets.len(), 64);
+                assert_eq!(mask.len(), 64);
+                // mask covers answer + EOS
+                let n_mask = mask.iter().filter(|&&m| m == 1.0).count();
+                assert_eq!(n_mask, ex.answer.len() + 1, "{kind:?}");
+                // masked targets reproduce the answer then EOS
+                let got: Vec<i32> = (0..64).filter(|&i| mask[i] == 1.0)
+                    .map(|i| targets[i]).collect();
+                let mut want = ex.answer.clone();
+                want.push(tok::EOS);
+                assert_eq!(got, want, "{kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn markers_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for kind in TaskKind::ALL {
+            assert!(seen.insert(kind.marker()));
+            assert!(kind.marker() < tok::SYM0);
+        }
+    }
+
+    #[test]
+    fn compare_answers_are_consistent() {
+        let mut r = rng();
+        let t = Task::new(TaskKind::Compare, 256);
+        for _ in 0..200 {
+            let ex = t.generate(&mut r);
+            assert!(ex.answer[0] == tok::FIRST || ex.answer[0] == tok::SECOND);
+        }
+    }
+
+    #[test]
+    fn add_is_correct() {
+        // decode digits back and check arithmetic
+        let mut r = rng();
+        let t = Task::new(TaskKind::Add, 256);
+        for _ in 0..200 {
+            let ex = t.generate(&mut r);
+            let sep = ex.input.iter().position(|&x| x == tok::SEP).unwrap();
+            let val = |ds: &[i32]| ds.iter().fold(0u32, |acc, &d| acc * 10 + (d - tok::DIGIT0) as u32);
+            let a = val(&ex.input[..sep]);
+            let b = val(&ex.input[sep + 1..]);
+            assert_eq!(val(&ex.answer), a + b);
+        }
+    }
+
+    #[test]
+    fn encode_rejects_overlong() {
+        let ex = Example { input: vec![tok::SYM0; 100], answer: vec![tok::SYM0], kind: TaskKind::Copy };
+        assert!(encode(&ex, 64).is_none());
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let t = Task::new(TaskKind::Dedup, 256);
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        for _ in 0..20 {
+            let e1 = t.generate(&mut r1);
+            let e2 = t.generate(&mut r2);
+            assert_eq!(e1.input, e2.input);
+            assert_eq!(e1.answer, e2.answer);
+        }
+    }
+
+    #[test]
+    fn property_answers_within_vocab() {
+        crate::prop!("task_vocab", |rng| {
+            let vocab = rng.range(48, 512);
+            let kind = TaskKind::ALL[rng.below(12)];
+            let t = Task::new(kind, vocab);
+            let ex = t.generate(rng);
+            for &x in ex.input.iter().chain(&ex.answer) {
+                assert!(x >= 0 && (x as usize) < vocab, "{kind:?} token {x}");
+            }
+        });
+    }
+}

@@ -1,0 +1,38 @@
+//! # MISA — Memory-Efficient LLMs Optimization with Module-wise Importance Sampling
+//!
+//! Full-system reproduction of the NeurIPS 2025 paper. This crate is the
+//! Layer-3 **Rust coordinator**: it owns the training event loop, the
+//! module-wise importance sampler (the paper's contribution), every
+//! baseline optimizer the paper compares against, the analytical memory
+//! model of Appendix E, the synthetic data substrate, and the PJRT
+//! runtime that executes the AOT-compiled JAX/Pallas compute graphs
+//! (Layers 2/1, built once by `make artifacts`).
+//!
+//! Python never runs on the training path — the `misa` binary is
+//! self-contained once `artifacts/` exists.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! - [`util`] — PRNG, metrics JSONL, mini property-test harness.
+//! - [`tensor`] — host linear algebra for adapter/projection math.
+//! - [`modelspec`] — the parameter/module registry (the L2 ABI).
+//! - [`memory`] — Appendix-E analytical peak-memory model + simulated
+//!   device allocator.
+//! - [`data`] — synthetic corpus + task families + dataloaders.
+//! - [`runtime`] — PJRT client wrapper, artifact cache, param store.
+//! - [`optim`] — MISA (Algorithm 1/2/3) and all baselines: Adam, BAdam,
+//!   LISA, LoRA, DoRA, GaLore, LoRA+MISA.
+//! - [`coordinator`] — trainer orchestration, evaluation, experiments.
+//! - [`config`] — TOML-subset run configuration.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod memory;
+pub mod modelspec;
+pub mod optim;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use anyhow::{anyhow, bail, Context, Result};

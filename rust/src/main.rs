@@ -1,0 +1,222 @@
+//! `misa` — the launcher CLI (L3 leader entrypoint).
+//!
+//! Subcommands:
+//!   train [--config run.toml] [--model M] [--method NAME] [--steps N] …
+//!   exp <name|all|list> [--full]       regenerate paper tables/figures
+//!   info                               manifest + memory-model summary
+//!
+//! Hand-rolled flag parsing — clap is not vendorable offline.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use misa::config::{DataSpec, Doc, RunConfig};
+use misa::coordinator::experiments::{self, ExpCtx};
+use misa::coordinator::Trainer;
+use misa::memory::{self, Arch, Method, Workload};
+use misa::runtime::Engine;
+
+fn usage() -> ! {
+    eprintln!(
+        "misa — Module-wise Importance Sampling (paper reproduction)\n\n\
+         USAGE:\n  misa train [--config FILE] [--model M] [--method NAME] [--steps N]\n\
+         \x20           [--lr F] [--delta F] [--eta F] [--t-inner N] [--data D]\n\
+         \x20           [--pretrain] [--seed N] [--out DIR] [--artifacts DIR]\n\
+         \x20 misa exp <name|all|list> [--full] [--artifacts DIR]\n\
+         \x20 misa info [--artifacts DIR]\n"
+    );
+    std::process::exit(2)
+}
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+    switches: std::collections::HashSet<String>,
+}
+
+fn parse_args(argv: &[String]) -> Args {
+    let mut a = Args {
+        positional: Vec::new(),
+        flags: Default::default(),
+        switches: Default::default(),
+    };
+    let mut i = 0;
+    while i < argv.len() {
+        let arg = &argv[i];
+        if let Some(name) = arg.strip_prefix("--") {
+            // switch or valued flag?
+            let takes_value = i + 1 < argv.len() && !argv[i + 1].starts_with("--");
+            if matches!(name, "pretrain" | "full" | "host") || !takes_value {
+                a.switches.insert(name.to_string());
+            } else {
+                a.flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 1;
+            }
+        } else {
+            a.positional.push(arg.clone());
+        }
+        i += 1;
+    }
+    a
+}
+
+fn artifact_dir(args: &Args) -> PathBuf {
+    args.flags
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut rc = if let Some(path) = args.flags.get("config") {
+        RunConfig::from_doc(&Doc::load(Path::new(path))?)?
+    } else {
+        RunConfig::default()
+    };
+    if let Some(m) = args.flags.get("model") {
+        rc.model = m.clone();
+    }
+    if let Some(s) = args.flags.get("steps") {
+        rc.steps = s.parse().context("--steps")?;
+    }
+    if let Some(l) = args.flags.get("lr") {
+        rc.lr = l.parse().context("--lr")?;
+    }
+    if let Some(s) = args.flags.get("seed") {
+        rc.seed = s.parse().context("--seed")?;
+    }
+    if let Some(d) = args.flags.get("data") {
+        rc.data = match d.as_str() {
+            "lm" => DataSpec::Lm,
+            "commonsense" => DataSpec::Commonsense,
+            "math" => DataSpec::Math,
+            "instruction" => DataSpec::Instruction,
+            other => bail!("unknown data {other:?}"),
+        };
+    }
+    if args.switches.contains("pretrain") {
+        rc.pretrain = true;
+    }
+    if args.switches.contains("host") {
+        rc.use_kernel = false;
+    }
+    rc.out_dir = args.flags.get("out").cloned();
+    if let Some(name) = args.flags.get("method") {
+        let mut doc = format!("[method]\nname = \"{name}\"\n");
+        for key in ["delta", "eta", "t-inner", "rank", "alpha"] {
+            if let Some(v) = args.flags.get(key) {
+                doc.push_str(&format!("{} = {v}\n", key.replace('-', "_")));
+            }
+        }
+        let parsed = RunConfig::from_doc(&Doc::parse(&format!(
+            "[run]\npretrain = {}\n{doc}",
+            rc.pretrain
+        ))?)?;
+        rc.method = parsed.method;
+    }
+    println!("run: model={} method={} data={:?} steps={} lr={}",
+             rc.model, rc.method.label(), rc.data, rc.steps, rc.lr);
+    let mut engine = Engine::new(&artifact_dir(args))?;
+    let mut t = Trainer::new(&mut engine, rc.clone())?;
+    let eval_every = rc.eval_every.max(1);
+    let mut remaining = rc.steps;
+    while remaining > 0 {
+        let chunk = eval_every.min(remaining);
+        t.run(chunk)?;
+        let e = t.evaluate(rc.eval_batches)?;
+        println!(
+            "step {:>6}  train_loss {:>8.4}  val_loss {:>8.4}  ppl {:>9.3}  acc {:>5.1}%  sim-peak {:>7.3} GiB",
+            t.step_no(),
+            t.metrics.last("train_loss").unwrap_or(f64::NAN),
+            e.loss,
+            e.ppl,
+            e.accuracy * 100.0,
+            misa::util::gib(t.alloc.peak_bytes()),
+        );
+        remaining -= chunk;
+    }
+    let (fb, op) = t.avg_times_ms();
+    println!("avg per-step: fwd+bwd {fb:.1} ms, optimizer {op:.1} ms");
+    t.metrics.flush();
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let name = args.positional.get(1).map(|s| s.as_str()).unwrap_or("list");
+    if name == "list" {
+        println!("available experiments:");
+        for (n, _, desc) in experiments::registry() {
+            println!("  {n:<10} {desc}");
+        }
+        return Ok(());
+    }
+    let mut engine = Engine::new(&artifact_dir(args))?;
+    let fast = !args.switches.contains("full");
+    let mut ctx = ExpCtx::new(&mut engine, fast);
+    if name == "all" {
+        for (n, f, _) in experiments::registry() {
+            let t0 = std::time::Instant::now();
+            match f(&mut ctx) {
+                Ok(body) => {
+                    println!("=== {n} ({:.1}s) ===\n{body}", t0.elapsed().as_secs_f64());
+                }
+                Err(e) => println!("=== {n} FAILED: {e:#} ==="),
+            }
+        }
+    } else {
+        let body = experiments::run(&mut ctx, name)?;
+        println!("{body}");
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let engine = Engine::new(&artifact_dir(args))?;
+    println!("platform: {}", engine.client.platform_name());
+    println!("configs:");
+    for m in &engine.manifest.models {
+        let c = &m.config;
+        println!(
+            "  {:<7} vocab={:<6} dim={:<5} layers={:<3} heads={}/{} ffn={:<5} b×s={}×{}  params={:.2}M  modules={}",
+            c.name, c.vocab, c.dim, c.n_layers, c.n_heads, c.n_kv_heads, c.ffn_dim,
+            c.batch, c.seq_len,
+            m.total_params() as f64 / 1e6,
+            m.matrix_module_indices().len(),
+        );
+    }
+    // paper-scale memory summary (Table 1 Mem column)
+    let arch = Arch::llama3_8b();
+    let w = Workload::new(4, 512);
+    println!("\nAppendix-E peak memory @ LLaMA3-8B, b=4, s=512:");
+    for m in [
+        Method::FullFT,
+        Method::Lora { r: 32 },
+        Method::Dora { r: 16 },
+        Method::Lisa,
+        Method::BAdam,
+        Method::Misa { delta: 0.01 },
+        Method::Misa { delta: 0.03 },
+    ] {
+        println!("  {:<14} {:>7.1} GB", m.label(), memory::table_peak_gib(m, &arch, &w));
+    }
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+    }
+    let args = parse_args(&argv);
+    let result = match args.positional.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args),
+        Some("exp") => cmd_exp(&args),
+        Some("info") => cmd_info(&args),
+        _ => usage(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

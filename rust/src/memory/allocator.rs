@@ -1,0 +1,217 @@
+//! Simulated device allocator.
+//!
+//! The CPU testbed cannot reproduce GPU residency, so the trainer charges
+//! a simulated allocator with exactly the buffers the method would hold
+//! on a real device (params, grads, optimizer states, activations,
+//! adapters). Its peak-byte ledger is the runtime counterpart of the
+//! closed forms in [`super`] — experiments report both so the analytical
+//! model is continuously cross-checked against the allocation pattern
+//! the coordinator actually performs.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// Allocation category (ledger row).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Category {
+    Params,
+    Grads,
+    OptimStates,
+    Activations,
+    Adapters,
+    Indicators,
+}
+
+impl Category {
+    pub const ALL: [Category; 6] = [
+        Category::Params,
+        Category::Grads,
+        Category::OptimStates,
+        Category::Activations,
+        Category::Adapters,
+        Category::Indicators,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Category::Params => "params",
+            Category::Grads => "grads",
+            Category::OptimStates => "optim_states",
+            Category::Activations => "activations",
+            Category::Adapters => "adapters",
+            Category::Indicators => "indicators",
+        }
+    }
+}
+
+/// One live allocation.
+#[derive(Clone, Debug)]
+struct Allocation {
+    category: Category,
+    bytes: u64,
+}
+
+/// Simulated allocator with per-category and total peak tracking.
+#[derive(Clone, Debug, Default)]
+pub struct Allocator {
+    live: HashMap<u64, Allocation>,
+    next_id: u64,
+    current: u64,
+    peak: u64,
+    per_cat: HashMap<Category, u64>,
+    per_cat_peak: HashMap<Category, u64>,
+}
+
+impl Allocator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate `bytes` in `category`; returns a handle for `free`.
+    pub fn alloc(&mut self, category: Category, bytes: u64) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.live.insert(id, Allocation { category, bytes });
+        self.current += bytes;
+        let c = self.per_cat.entry(category).or_insert(0);
+        *c += bytes;
+        let cp = self.per_cat_peak.entry(category).or_insert(0);
+        *cp = (*cp).max(*c);
+        self.peak = self.peak.max(self.current);
+        id
+    }
+
+    /// Free a handle. Double-free or unknown handles are hard errors —
+    /// the trainer's accounting must be exact.
+    pub fn free(&mut self, id: u64) -> Result<()> {
+        match self.live.remove(&id) {
+            Some(a) => {
+                self.current -= a.bytes;
+                *self.per_cat.get_mut(&a.category).unwrap() -= a.bytes;
+                Ok(())
+            }
+            None => bail!("free of unknown/double-freed allocation {id}"),
+        }
+    }
+
+    /// Free every live allocation in a category (e.g. Activations at
+    /// step end, OptimStates at MISA's block switch — Alg. 1 line 17).
+    pub fn free_category(&mut self, category: Category) {
+        let ids: Vec<u64> = self
+            .live
+            .iter()
+            .filter(|(_, a)| a.category == category)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in ids {
+            let _ = self.free(id);
+        }
+    }
+
+    pub fn current_bytes(&self) -> u64 {
+        self.current
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak
+    }
+
+    pub fn category_bytes(&self, category: Category) -> u64 {
+        self.per_cat.get(&category).copied().unwrap_or(0)
+    }
+
+    pub fn category_peak(&self, category: Category) -> u64 {
+        self.per_cat_peak.get(&category).copied().unwrap_or(0)
+    }
+
+    /// Human-readable ledger summary.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "current={:.3} GiB peak={:.3} GiB\n",
+            crate::util::gib(self.current),
+            crate::util::gib(self.peak)
+        );
+        for c in Category::ALL {
+            s.push_str(&format!(
+                "  {:<12} cur={:.3} GiB peak={:.3} GiB\n",
+                c.as_str(),
+                crate::util::gib(self.category_bytes(c)),
+                crate::util::gib(self.category_peak(c)),
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_current_and_peak() {
+        let mut a = Allocator::new();
+        let x = a.alloc(Category::Params, 100);
+        let y = a.alloc(Category::Grads, 50);
+        assert_eq!(a.current_bytes(), 150);
+        assert_eq!(a.peak_bytes(), 150);
+        a.free(y).unwrap();
+        assert_eq!(a.current_bytes(), 100);
+        assert_eq!(a.peak_bytes(), 150);
+        a.free(x).unwrap();
+        assert_eq!(a.current_bytes(), 0);
+    }
+
+    #[test]
+    fn double_free_is_error() {
+        let mut a = Allocator::new();
+        let x = a.alloc(Category::Params, 10);
+        a.free(x).unwrap();
+        assert!(a.free(x).is_err());
+    }
+
+    #[test]
+    fn free_category_clears_only_that_category() {
+        let mut a = Allocator::new();
+        a.alloc(Category::OptimStates, 30);
+        a.alloc(Category::OptimStates, 20);
+        let p = a.alloc(Category::Params, 70);
+        a.free_category(Category::OptimStates);
+        assert_eq!(a.category_bytes(Category::OptimStates), 0);
+        assert_eq!(a.current_bytes(), 70);
+        a.free(p).unwrap();
+    }
+
+    #[test]
+    fn invariants_under_random_workload() {
+        crate::prop!("allocator", |rng| {
+            let mut a = Allocator::new();
+            let mut live: Vec<u64> = Vec::new();
+            let mut expect: u64 = 0;
+            let mut expect_peak: u64 = 0;
+            for _ in 0..rng.range(1, 200) {
+                if live.is_empty() || rng.f64() < 0.6 {
+                    let bytes = rng.range(1, 10_000) as u64;
+                    let cat = Category::ALL[rng.below(6)];
+                    live.push(a.alloc(cat, bytes));
+                    expect += bytes;
+                    expect_peak = expect_peak.max(expect);
+                } else {
+                    let idx = rng.below(live.len());
+                    let id = live.swap_remove(idx);
+                    let before = a.current_bytes();
+                    a.free(id).unwrap();
+                    expect -= before - a.current_bytes();
+                }
+                assert_eq!(a.current_bytes(), expect);
+                assert!(a.peak_bytes() >= a.current_bytes());
+                assert_eq!(a.peak_bytes(), expect_peak);
+                let cat_sum: u64 = Category::ALL
+                    .iter()
+                    .map(|&c| a.category_bytes(c))
+                    .sum();
+                assert_eq!(cat_sum, a.current_bytes());
+            }
+        });
+    }
+}

@@ -1,0 +1,351 @@
+//! The parameter/module registry — L3's view of the L2 ABI.
+//!
+//! `python/compile/aot.py` serializes `configs.param_specs` into
+//! `artifacts/manifest.txt`; this module parses it back. Parameter order
+//! is a hard contract: the fwd/bwd graph consumes params and emits grads
+//! in registry order.
+//!
+//! Terminology (paper Remark 2): a **layer** is a transformer block, a
+//! **module** is a matrix parameter inside a layer (`W_q … W_down`), a
+//! **block** is whatever unit the optimizer samples. MISA's sampling
+//! blocks are the matrix modules; norms/embed/head are parameters but
+//! not fine-tuning sampling blocks (Table 2 footnote).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Module kind, mirroring python/compile/configs.py.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModuleKind {
+    Norm,
+    Wq,
+    Wk,
+    Wv,
+    Wo,
+    Wgate,
+    Wup,
+    Wdown,
+    Embed,
+    Head,
+}
+
+impl ModuleKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "norm" => ModuleKind::Norm,
+            "wq" => ModuleKind::Wq,
+            "wk" => ModuleKind::Wk,
+            "wv" => ModuleKind::Wv,
+            "wo" => ModuleKind::Wo,
+            "wgate" => ModuleKind::Wgate,
+            "wup" => ModuleKind::Wup,
+            "wdown" => ModuleKind::Wdown,
+            "embed" => ModuleKind::Embed,
+            "head" => ModuleKind::Head,
+            other => bail!("unknown module kind {other:?}"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModuleKind::Norm => "norm",
+            ModuleKind::Wq => "wq",
+            ModuleKind::Wk => "wk",
+            ModuleKind::Wv => "wv",
+            ModuleKind::Wo => "wo",
+            ModuleKind::Wgate => "wgate",
+            ModuleKind::Wup => "wup",
+            ModuleKind::Wdown => "wdown",
+            ModuleKind::Embed => "embed",
+            ModuleKind::Head => "head",
+        }
+    }
+
+    /// Is this one of the paper's seven MISA sampling-module kinds?
+    pub fn is_matrix_module(&self) -> bool {
+        matches!(
+            self,
+            ModuleKind::Wq
+                | ModuleKind::Wk
+                | ModuleKind::Wv
+                | ModuleKind::Wo
+                | ModuleKind::Wgate
+                | ModuleKind::Wup
+                | ModuleKind::Wdown
+        )
+    }
+
+    /// All seven matrix-module kinds, in paper order (Fig. 10 x-axis).
+    pub fn matrix_kinds() -> [ModuleKind; 7] {
+        [
+            ModuleKind::Wq,
+            ModuleKind::Wk,
+            ModuleKind::Wv,
+            ModuleKind::Wo,
+            ModuleKind::Wgate,
+            ModuleKind::Wup,
+            ModuleKind::Wdown,
+        ]
+    }
+}
+
+/// One named parameter (the registry row).
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub kind: ModuleKind,
+    /// transformer layer index, or -1 for embed/head/final_norm
+    pub layer: i32,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn shape_key(&self) -> String {
+        self.shape
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join("x")
+    }
+}
+
+/// Architecture constants for one lowered model configuration.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub dim: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub ffn_dim: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+}
+
+/// A model configuration plus its parameter registry and graph artifacts.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub config: ModelConfig,
+    pub params: Vec<ParamSpec>,
+    /// graph key ("fwd_bwd", "predict", "adam.RxC", "tail.RxC") -> file
+    pub graphs: HashMap<String, String>,
+}
+
+impl ModelSpec {
+    /// Total parameter count (all registry entries).
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    /// Indices of the MISA sampling modules (fine-tuning block set).
+    pub fn matrix_module_indices(&self) -> Vec<usize> {
+        self.params
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.kind.is_matrix_module())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Indices trainable in the given mode.
+    pub fn trainable_indices(&self, pretrain: bool) -> Vec<usize> {
+        if pretrain {
+            (0..self.params.len()).collect()
+        } else {
+            self.matrix_module_indices()
+        }
+    }
+
+    pub fn param_index(&self, name: &str) -> Option<usize> {
+        self.params.iter().position(|p| p.name == name)
+    }
+}
+
+/// The parsed artifact manifest: the L3 entry point.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: Vec<ModelSpec>,
+    /// sampler-softmax artifacts: module count -> file
+    pub probs: HashMap<usize, String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let mut models: Vec<ModelSpec> = Vec::new();
+        let mut probs = HashMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            let ctx = || format!("manifest line {}: {raw:?}", lineno + 1);
+            match toks[0] {
+                "version" => {
+                    if toks.get(1) != Some(&"1") {
+                        bail!("unsupported manifest version: {raw}");
+                    }
+                }
+                "config" => {
+                    models.push(ModelSpec {
+                        config: ModelConfig {
+                            name: toks.get(1).ok_or_else(|| anyhow!(ctx()))?.to_string(),
+                            vocab: 0,
+                            dim: 0,
+                            n_layers: 0,
+                            n_heads: 0,
+                            n_kv_heads: 0,
+                            ffn_dim: 0,
+                            seq_len: 0,
+                            batch: 0,
+                        },
+                        params: Vec::new(),
+                        graphs: HashMap::new(),
+                    });
+                }
+                "field" => {
+                    let m = models.last_mut().ok_or_else(|| anyhow!(ctx()))?;
+                    let key = toks[1];
+                    let val: usize = toks[2].parse().with_context(ctx)?;
+                    match key {
+                        "vocab" => m.config.vocab = val,
+                        "dim" => m.config.dim = val,
+                        "n_layers" => m.config.n_layers = val,
+                        "n_heads" => m.config.n_heads = val,
+                        "n_kv_heads" => m.config.n_kv_heads = val,
+                        "ffn_dim" => m.config.ffn_dim = val,
+                        "seq_len" => m.config.seq_len = val,
+                        "batch" => m.config.batch = val,
+                        other => bail!("unknown field {other:?} in {}", ctx()),
+                    }
+                }
+                "param" => {
+                    let m = models.last_mut().ok_or_else(|| anyhow!(ctx()))?;
+                    let name = toks[1].to_string();
+                    let kind = ModuleKind::parse(toks[2]).with_context(ctx)?;
+                    let layer: i32 = toks[3].parse().with_context(ctx)?;
+                    let ndim: usize = toks[4].parse().with_context(ctx)?;
+                    let shape: Vec<usize> = toks[5..5 + ndim]
+                        .iter()
+                        .map(|t| t.parse().unwrap())
+                        .collect();
+                    m.params.push(ParamSpec { name, kind, layer, shape });
+                }
+                "graph" => {
+                    let m = models.last_mut().ok_or_else(|| anyhow!(ctx()))?;
+                    m.graphs.insert(toks[1].to_string(), toks[2].to_string());
+                }
+                "probs" => {
+                    let b: usize = toks[1].parse().with_context(ctx)?;
+                    probs.insert(b, toks[2].to_string());
+                }
+                other => bail!("unknown manifest directive {other:?} at {}", ctx()),
+            }
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), models, probs })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelSpec> {
+        self.models
+            .iter()
+            .find(|m| m.config.name == name)
+            .ok_or_else(|| anyhow!("config {name:?} not in manifest"))
+    }
+
+    pub fn graph_path(&self, spec: &ModelSpec, key: &str) -> Result<PathBuf> {
+        let file = spec
+            .graphs
+            .get(key)
+            .ok_or_else(|| anyhow!("graph {key:?} missing for {}", spec.config.name))?;
+        Ok(self.dir.join(file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+version 1
+config tiny
+  field vocab 256
+  field dim 64
+  field n_layers 2
+  field n_heads 4
+  field n_kv_heads 2
+  field ffn_dim 176
+  field seq_len 32
+  field batch 4
+  param layers.0.attn_norm norm 0 1 64
+  param layers.0.wq wq 0 2 64 64
+  param layers.0.wk wk 0 2 64 32
+  param embed embed -1 2 256 64
+  graph fwd_bwd tiny.fwd_bwd.hlo.txt
+  graph adam.64x64 tiny.adam.64x64.hlo.txt
+probs 14 probs.14.hlo.txt
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.models.len(), 1);
+        let spec = m.model("tiny").unwrap();
+        assert_eq!(spec.config.dim, 64);
+        assert_eq!(spec.params.len(), 4);
+        assert_eq!(spec.params[1].kind, ModuleKind::Wq);
+        assert_eq!(spec.params[1].numel(), 64 * 64);
+        assert_eq!(spec.params[1].shape_key(), "64x64");
+        assert_eq!(m.probs.get(&14).unwrap(), "probs.14.hlo.txt");
+        assert_eq!(
+            m.graph_path(spec, "fwd_bwd").unwrap(),
+            Path::new("/tmp/tiny.fwd_bwd.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn matrix_module_filtering() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let spec = m.model("tiny").unwrap();
+        assert_eq!(spec.matrix_module_indices(), vec![1, 2]);
+        assert_eq!(spec.trainable_indices(false), vec![1, 2]);
+        assert_eq!(spec.trainable_indices(true), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn rejects_bad_kind() {
+        assert!(ModuleKind::parse("conv").is_err());
+    }
+
+    #[test]
+    fn kind_roundtrip() {
+        for k in ModuleKind::matrix_kinds() {
+            assert_eq!(ModuleKind::parse(k.as_str()).unwrap(), k);
+            assert!(k.is_matrix_module());
+        }
+        assert!(!ModuleKind::Norm.is_matrix_module());
+        assert!(!ModuleKind::Embed.is_matrix_module());
+    }
+
+    #[test]
+    fn missing_config_errors() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert!(m.model("nope").is_err());
+        let spec = m.model("tiny").unwrap();
+        assert!(m.graph_path(spec, "predict").is_err());
+    }
+}

@@ -1,0 +1,155 @@
+//! BAdam baseline — block coordinate descent with **cyclic layer-wise**
+//! Adam (Luo et al., 2024; paper's closest layer-wise competitor).
+//!
+//! Every `T` steps the active transformer layer advances cyclically;
+//! all parameters of the active layer (the 7 matrices + its norms) are
+//! updated by Adam while everything else stays frozen. Optimizer states
+//! are cleared on switch, matching the paper's memory accounting
+//! (layer-wise row of Table 14).
+
+use anyhow::Result;
+
+use crate::modelspec::ModelSpec;
+use crate::optim::adam::{AdamHyper, AdamState};
+use crate::optim::{MemProfile, Optimizer};
+use crate::runtime::{Session, StepOutput};
+
+pub struct BAdam {
+    hyper: AdamHyper,
+    /// param indices grouped by layer
+    layers: Vec<Vec<usize>>,
+    active_layer: usize,
+    states: Vec<AdamState>,
+    t_inner: usize,
+    inner_t: usize,
+    use_kernel: bool,
+    switches: u64,
+}
+
+impl BAdam {
+    pub fn new(spec: &ModelSpec, t_inner: usize, use_kernel: bool) -> Self {
+        let n_layers = spec.config.n_layers;
+        let mut layers = vec![Vec::new(); n_layers];
+        for (i, p) in spec.params.iter().enumerate() {
+            if p.layer >= 0 {
+                layers[p.layer as usize].push(i);
+            }
+        }
+        let mut me = BAdam {
+            hyper: AdamHyper::default(),
+            layers,
+            active_layer: 0,
+            states: Vec::new(),
+            t_inner,
+            inner_t: 0,
+            use_kernel,
+            switches: 0,
+        };
+        me.states = Vec::new();
+        me
+    }
+
+    fn ensure_states(&mut self, spec: &ModelSpec) {
+        if self.states.is_empty() {
+            self.states = self.layers[self.active_layer]
+                .iter()
+                .map(|&i| AdamState::zeros(spec.params[i].numel()))
+                .collect();
+        }
+    }
+
+    pub fn active_layer(&self) -> usize {
+        self.active_layer
+    }
+}
+
+impl Optimizer for BAdam {
+    fn name(&self) -> String {
+        format!("BAdam(T={})", self.t_inner)
+    }
+
+    fn step(&mut self, sess: &mut Session, out: &StepOutput, lr: f32) -> Result<()> {
+        self.ensure_states(&sess.spec.clone());
+        let indices = self.layers[self.active_layer].clone();
+        for (slot, &idx) in indices.iter().enumerate() {
+            let g = &out.grads[idx];
+            if self.use_kernel && sess.spec.params[idx].shape.len() == 2 {
+                let st = &self.states[slot];
+                let (m, v, _) = sess.adam_update(idx, g, &st.m, &st.v, lr)?;
+                self.states[slot].m = m;
+                self.states[slot].v = v;
+            } else {
+                let mut p = std::mem::take(&mut sess.host[idx]);
+                self.states[slot].step(&mut p, g, lr, self.hyper);
+                sess.set_param(idx, p)?;
+            }
+        }
+        self.inner_t += 1;
+        if self.inner_t >= self.t_inner {
+            // cyclic switch + state clear
+            self.active_layer = (self.active_layer + 1) % self.layers.len();
+            self.states.clear();
+            self.inner_t = 0;
+            self.switches += 1;
+        }
+        Ok(())
+    }
+
+    fn mem_profile(&self) -> MemProfile {
+        let optim: u64 = self.states.iter().map(|s| s.elems()).sum();
+        MemProfile {
+            grad_elems: optim / 2,
+            optim_elems: optim,
+            adapter_elems: 0,
+            active_indices: self.layers[self.active_layer].clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelspec::{Manifest, ModelSpec};
+    use std::path::Path;
+
+    fn spec() -> ModelSpec {
+        let text = "\
+version 1
+config t
+  field vocab 64
+  field dim 8
+  field n_layers 3
+  field n_heads 2
+  field n_kv_heads 1
+  field ffn_dim 16
+  field seq_len 8
+  field batch 2
+  param layers.0.wq wq 0 2 8 8
+  param layers.0.attn_norm norm 0 1 8
+  param layers.1.wq wq 1 2 8 8
+  param layers.2.wq wq 2 2 8 8
+  param embed embed -1 2 64 8
+";
+        Manifest::parse(Path::new("/tmp"), text).unwrap().models[0].clone()
+    }
+
+    #[test]
+    fn layers_grouped_correctly() {
+        let b = BAdam::new(&spec(), 10, false);
+        assert_eq!(b.layers.len(), 3);
+        assert_eq!(b.layers[0], vec![0, 1]);
+        assert_eq!(b.layers[1], vec![2]);
+        // embed (layer -1) belongs to no BCD block
+        assert!(b.layers.iter().all(|l| !l.contains(&4)));
+    }
+
+    #[test]
+    fn cycle_order_is_deterministic() {
+        let mut b = BAdam::new(&spec(), 1, false);
+        // simulate switches without a session by driving the counter
+        assert_eq!(b.active_layer(), 0);
+        b.inner_t = 1;
+        b.active_layer = (b.active_layer + 1) % b.layers.len();
+        assert_eq!(b.active_layer(), 1);
+    }
+}

@@ -1,0 +1,161 @@
+//! LISA baseline — Layerwise Importance Sampled AdamW (Pan et al.,
+//! 2024). Uniform random layer selection every `T` steps, with the
+//! embedding and LM-head **always active** (their skewed weight norms
+//! motivated LISA; also exactly why its memory exceeds BAdam's in the
+//! paper's tables — see `memory::lisa_embed_head_opt`).
+
+use anyhow::Result;
+
+use crate::modelspec::{ModelSpec, ModuleKind};
+use crate::optim::adam::{AdamHyper, AdamState};
+use crate::optim::{MemProfile, Optimizer};
+use crate::runtime::{Session, StepOutput};
+use crate::util::Rng;
+
+pub struct Lisa {
+    hyper: AdamHyper,
+    layers: Vec<Vec<usize>>,
+    /// embed + head indices (always active)
+    dense: Vec<(usize, AdamState)>,
+    active_layer: usize,
+    states: Vec<AdamState>,
+    /// number of simultaneously-active layers γ (paper uses 1-2)
+    t_inner: usize,
+    inner_t: usize,
+    use_kernel: bool,
+    rng: Rng,
+}
+
+impl Lisa {
+    pub fn new(spec: &ModelSpec, t_inner: usize, use_kernel: bool, seed: u64) -> Self {
+        let n_layers = spec.config.n_layers;
+        let mut layers = vec![Vec::new(); n_layers];
+        let mut dense = Vec::new();
+        for (i, p) in spec.params.iter().enumerate() {
+            if p.layer >= 0 {
+                layers[p.layer as usize].push(i);
+            } else if matches!(p.kind, ModuleKind::Embed | ModuleKind::Head) {
+                dense.push((i, AdamState::zeros(p.numel())));
+            }
+        }
+        let mut rng = Rng::new(seed ^ 0x4C495341); // "LISA"
+        let active_layer = rng.below(n_layers);
+        Lisa {
+            hyper: AdamHyper::default(),
+            layers,
+            dense,
+            active_layer,
+            states: Vec::new(),
+            t_inner,
+            inner_t: 0,
+            use_kernel,
+            rng,
+        }
+    }
+}
+
+impl Optimizer for Lisa {
+    fn name(&self) -> String {
+        format!("LISA(T={})", self.t_inner)
+    }
+
+    fn step(&mut self, sess: &mut Session, out: &StepOutput, lr: f32) -> Result<()> {
+        if self.states.is_empty() {
+            self.states = self.layers[self.active_layer]
+                .iter()
+                .map(|&i| AdamState::zeros(sess.spec.params[i].numel()))
+                .collect();
+        }
+        let indices = self.layers[self.active_layer].clone();
+        for (slot, &idx) in indices.iter().enumerate() {
+            let g = &out.grads[idx];
+            if self.use_kernel && sess.spec.params[idx].shape.len() == 2 {
+                let st = &self.states[slot];
+                let (m, v, _) = sess.adam_update(idx, g, &st.m, &st.v, lr)?;
+                self.states[slot].m = m;
+                self.states[slot].v = v;
+            } else {
+                let mut p = std::mem::take(&mut sess.host[idx]);
+                self.states[slot].step(&mut p, g, lr, self.hyper);
+                sess.set_param(idx, p)?;
+            }
+        }
+        // embedding + head always trained (dense Adam, persistent states)
+        for (idx, st) in &mut self.dense {
+            let mut p = std::mem::take(&mut sess.host[*idx]);
+            st.step(&mut p, &out.grads[*idx], lr, self.hyper);
+            sess.set_param(*idx, p)?;
+        }
+        self.inner_t += 1;
+        if self.inner_t >= self.t_inner {
+            self.active_layer = self.rng.below(self.layers.len());
+            self.states.clear();
+            self.inner_t = 0;
+        }
+        Ok(())
+    }
+
+    fn mem_profile(&self) -> MemProfile {
+        let layer_opt: u64 = self.states.iter().map(|s| s.elems()).sum();
+        let dense_opt: u64 = self.dense.iter().map(|(_, s)| s.elems()).sum();
+        MemProfile {
+            grad_elems: (layer_opt + dense_opt) / 2,
+            optim_elems: layer_opt + dense_opt,
+            adapter_elems: 0,
+            active_indices: {
+                let mut v = self.layers[self.active_layer].clone();
+                v.extend(self.dense.iter().map(|(i, _)| *i));
+                v
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelspec::Manifest;
+    use std::path::Path;
+
+    fn spec() -> ModelSpec {
+        let text = "\
+version 1
+config t
+  field vocab 64
+  field dim 8
+  field n_layers 4
+  field n_heads 2
+  field n_kv_heads 1
+  field ffn_dim 16
+  field seq_len 8
+  field batch 2
+  param layers.0.wq wq 0 2 8 8
+  param layers.1.wq wq 1 2 8 8
+  param layers.2.wq wq 2 2 8 8
+  param layers.3.wq wq 3 2 8 8
+  param embed embed -1 2 64 8
+  param head head -1 2 8 64
+";
+        Manifest::parse(Path::new("/tmp"), text).unwrap().models[0].clone()
+    }
+
+    #[test]
+    fn embed_and_head_always_active() {
+        let l = Lisa::new(&spec(), 10, false, 1);
+        assert_eq!(l.dense.len(), 2);
+        let prof = l.mem_profile();
+        assert!(prof.active_indices.contains(&4));
+        assert!(prof.active_indices.contains(&5));
+    }
+
+    #[test]
+    fn layer_choice_is_uniform_ish() {
+        // over many constructions each layer gets picked sometimes
+        let mut seen = [false; 4];
+        for seed in 0..64 {
+            let l = Lisa::new(&spec(), 10, false, seed);
+            seen[l.active_layer] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "{seen:?}");
+    }
+}

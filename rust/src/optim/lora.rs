@@ -1,0 +1,350 @@
+//! LoRA and DoRA baselines.
+//!
+//! LoRA (Hu et al., 2021): `W_eff = W0 + (α/r)·A·B` with `A ∈ R^{in×r}`
+//! Gaussian-init, `B ∈ R^{r×out}` zero-init. The coordinator derives the
+//! adapter gradients from the full weight gradient the fwd/bwd graph
+//! already produces:
+//!
+//! ```text
+//! dA = (α/r) · dW · Bᵀ,   dB = (α/r) · Aᵀ · dW
+//! ```
+//!
+//! (chain rule through W_eff — no second backward pass needed), runs
+//! host Adam on the adapters, re-merges W_eff and uploads only the
+//! target modules.
+//!
+//! DoRA (Liu et al., 2024): weight-decomposed LoRA. `V = W0 + (α/r)AB`,
+//! `W_eff = mag ⊙ V / ||V||_col` with the column norm **detached** (the
+//! DoRA paper's practical gradient trick):
+//!
+//! ```text
+//! dV ≈ (mag/||V||_col) ⊙ dW,   dmag_j = Σ_i dW_ij · V_ij/||V_j||
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::modelspec::{ModelSpec, ModuleKind};
+use crate::optim::adam::{AdamHyper, AdamState};
+use crate::optim::{MemProfile, Optimizer};
+use crate::runtime::{Session, StepOutput};
+use crate::tensor::{matmul, matmul_nt, matmul_tn, Mat};
+use crate::util::Rng;
+
+/// Default LoRA target modules (paper Table 17: W_q, W_k, W_v, W_up,
+/// W_down; Table 21 adds the rest — configurable).
+pub fn default_targets() -> Vec<ModuleKind> {
+    vec![
+        ModuleKind::Wq,
+        ModuleKind::Wk,
+        ModuleKind::Wv,
+        ModuleKind::Wup,
+        ModuleKind::Wdown,
+    ]
+}
+
+/// One adapted module.
+pub struct Adapter {
+    /// frozen base weight
+    pub w0: Mat,
+    pub a: Mat,
+    pub b: Mat,
+    pub state_a: AdamState,
+    pub state_b: AdamState,
+    /// DoRA magnitude vector + its state (None for plain LoRA)
+    pub mag: Option<(Vec<f32>, AdamState)>,
+}
+
+pub struct Lora {
+    pub rank: usize,
+    pub alpha: f32,
+    dora: bool,
+    hyper: AdamHyper,
+    /// param index -> adapter
+    pub adapters: HashMap<usize, Adapter>,
+    /// stable iteration order
+    order: Vec<usize>,
+}
+
+impl Lora {
+    pub fn new(spec: &ModelSpec, sess_host: &[Vec<f32>], rank: usize, alpha: f32,
+               targets: &[ModuleKind], seed: u64) -> Self {
+        Self::build(spec, sess_host, rank, alpha, targets, seed, false)
+    }
+
+    fn build(spec: &ModelSpec, sess_host: &[Vec<f32>], rank: usize, alpha: f32,
+             targets: &[ModuleKind], seed: u64, dora: bool) -> Self {
+        let mut rng = Rng::new(seed ^ 0x4C6F5241);
+        let mut adapters = HashMap::new();
+        let mut order = Vec::new();
+        for (i, p) in spec.params.iter().enumerate() {
+            if p.shape.len() == 2 && targets.contains(&p.kind) {
+                let (rows, cols) = (p.shape[0], p.shape[1]);
+                let w0 = Mat::from_vec(rows, cols, sess_host[i].clone());
+                let a = Mat::randn(rows, rank, (rows as f32).powf(-0.5), &mut rng);
+                let b = Mat::zeros(rank, cols);
+                let mag = if dora {
+                    let norms = w0.col_norms();
+                    let n = norms.len();
+                    Some((norms, AdamState::zeros(n)))
+                } else {
+                    None
+                };
+                adapters.insert(
+                    i,
+                    Adapter {
+                        w0,
+                        state_a: AdamState::zeros(rows * rank),
+                        state_b: AdamState::zeros(rank * cols),
+                        a,
+                        b,
+                        mag,
+                    },
+                );
+                order.push(i);
+            }
+        }
+        Lora { rank, alpha, dora, hyper: AdamHyper::default(), adapters, order }
+    }
+
+    pub fn scale(&self) -> f32 {
+        self.alpha / self.rank as f32
+    }
+
+    /// Effective weight of one adapter: LoRA merge (+ DoRA magnitude).
+    pub fn effective_weight(&self, idx: usize) -> Mat {
+        let ad = &self.adapters[&idx];
+        let mut w = ad.w0.clone();
+        let delta = matmul(&ad.a, &ad.b);
+        w.axpy(self.scale(), &delta);
+        if let Some((mag, _)) = &ad.mag {
+            let norms = w.col_norms();
+            for r in 0..w.rows {
+                for c in 0..w.cols {
+                    let n = norms[c].max(1e-8);
+                    *w.at_mut(r, c) *= mag[c] / n;
+                }
+            }
+        }
+        w
+    }
+
+    pub fn trainable_elems(&self) -> u64 {
+        self.adapters
+            .values()
+            .map(|a| {
+                (a.a.data.len() + a.b.data.len()
+                    + a.mag.as_ref().map_or(0, |(m, _)| m.len())) as u64
+            })
+            .sum()
+    }
+
+    pub fn adapter_order(&self) -> &[usize] {
+        &self.order
+    }
+
+    /// Apply one adapter update from the full-weight gradient; returns
+    /// the new effective weight. Exposed for LoRA+MISA (Appendix B.2).
+    pub fn update_adapter(&mut self, idx: usize, dw_full: &[f32], lr: f32) -> Mat {
+        let scale = self.scale();
+        let hyper = self.hyper;
+        let ad = self.adapters.get_mut(&idx).unwrap();
+        let (rows, cols) = (ad.w0.rows, ad.w0.cols);
+        let mut dw = Mat::from_vec(rows, cols, dw_full.to_vec());
+        if let Some((mag, mag_state)) = &mut ad.mag {
+            // DoRA: gradient w.r.t. magnitude + rescaled direction grad
+            let mut v = ad.w0.clone();
+            let delta = matmul(&ad.a, &ad.b);
+            v.axpy(scale, &delta);
+            let norms = v.col_norms();
+            let mut dmag = vec![0.0f32; cols];
+            for r in 0..rows {
+                for c in 0..cols {
+                    let n = norms[c].max(1e-8);
+                    dmag[c] += dw.at(r, c) * v.at(r, c) / n;
+                }
+            }
+            for r in 0..rows {
+                for c in 0..cols {
+                    let n = norms[c].max(1e-8);
+                    *dw.at_mut(r, c) *= mag[c] / n;
+                }
+            }
+            let mut m = std::mem::take(mag);
+            mag_state.step(&mut m, &dmag, lr, hyper);
+            *mag = m;
+        }
+        // dA = scale * dW @ B^T ; dB = scale * A^T @ dW
+        let mut da = matmul_nt(&dw, &ad.b);
+        da.scale(scale);
+        let mut db = matmul_tn(&ad.a, &dw);
+        db.scale(scale);
+        ad.state_a.step(&mut ad.a.data, &da.data, lr, hyper);
+        ad.state_b.step(&mut ad.b.data, &db.data, lr, hyper);
+        self.effective_weight(idx)
+    }
+}
+
+impl Optimizer for Lora {
+    fn name(&self) -> String {
+        format!("{}(r={})", if self.dora { "DoRA" } else { "LoRA" }, self.rank)
+    }
+
+    fn step(&mut self, sess: &mut Session, out: &StepOutput, lr: f32) -> Result<()> {
+        for idx in self.order.clone() {
+            let w_eff = self.update_adapter(idx, &out.grads[idx], lr);
+            sess.set_param(idx, w_eff.data)?;
+        }
+        Ok(())
+    }
+
+    fn mem_profile(&self) -> MemProfile {
+        let adapters = self.trainable_elems();
+        MemProfile {
+            grad_elems: adapters,
+            optim_elems: 2 * adapters,
+            adapter_elems: adapters,
+            active_indices: self.order.clone(),
+        }
+    }
+}
+
+/// DoRA constructor (Weight-Decomposed LoRA).
+pub struct Dora;
+
+impl Dora {
+    pub fn new(spec: &ModelSpec, sess_host: &[Vec<f32>], rank: usize, alpha: f32,
+               targets: &[ModuleKind], seed: u64) -> Lora {
+        Lora::build(spec, sess_host, rank, alpha, targets, seed, true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelspec::Manifest;
+    use std::path::Path;
+
+    fn spec() -> ModelSpec {
+        let text = "\
+version 1
+config t
+  field vocab 64
+  field dim 8
+  field n_layers 1
+  field n_heads 2
+  field n_kv_heads 1
+  field ffn_dim 16
+  field seq_len 8
+  field batch 2
+  param layers.0.wq wq 0 2 8 8
+  param layers.0.wo wo 0 2 8 8
+  param layers.0.wup wup 0 2 8 16
+  param embed embed -1 2 64 8
+";
+        Manifest::parse(Path::new("/tmp"), text).unwrap().models[0].clone()
+    }
+
+    fn host(spec: &ModelSpec, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        spec.params
+            .iter()
+            .map(|p| {
+                let mut v = vec![0.0f32; p.numel()];
+                rng.fill_normal(&mut v, 0.1);
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn zero_b_init_means_identity_at_start() {
+        let s = spec();
+        let h = host(&s, 1);
+        let lora = Lora::new(&s, &h, 4, 8.0, &default_targets(), 0);
+        // W_eff == W0 before any update (B = 0)
+        for (&idx, ad) in &lora.adapters {
+            let w = lora.effective_weight(idx);
+            assert_eq!(w.data, ad.w0.data, "module {idx}");
+        }
+    }
+
+    #[test]
+    fn targets_respected() {
+        let s = spec();
+        let h = host(&s, 1);
+        let lora = Lora::new(&s, &h, 4, 8.0, &[ModuleKind::Wq], 0);
+        assert_eq!(lora.adapter_order(), &[0]);
+    }
+
+    #[test]
+    fn update_moves_effective_weight_against_gradient() {
+        let s = spec();
+        let h = host(&s, 2);
+        let mut lora = Lora::new(&s, &h, 4, 8.0, &default_targets(), 0);
+        // two updates with the same dW: after the first, B != 0, so the
+        // second must move W_eff opposite to dW on average
+        let dw = vec![1.0f32; 64];
+        lora.update_adapter(0, &dw, 0.01);
+        let w1 = lora.effective_weight(0);
+        lora.update_adapter(0, &dw, 0.01);
+        let w2 = lora.effective_weight(0);
+        let drift: f32 = w2.data.iter().zip(&w1.data).map(|(a, b)| a - b).sum();
+        assert!(drift < 0.0, "drift {drift} should be negative (descent)");
+    }
+
+    #[test]
+    fn lora_gradient_matches_finite_difference() {
+        // loss = <dW, W_eff> is linear, so dL/dA = scale * dW @ B^T
+        // exactly; check one entry numerically.
+        let s = spec();
+        let h = host(&s, 3);
+        let mut lora = Lora::new(&s, &h, 2, 2.0, &[ModuleKind::Wq], 0);
+        // push B away from zero first
+        let mut rng = Rng::new(9);
+        {
+            let ad = lora.adapters.get_mut(&0).unwrap();
+            rng.fill_normal(&mut ad.b.data, 0.3);
+        }
+        let dw: Vec<f32> = (0..64).map(|i| ((i % 5) as f32 - 2.0) * 0.1).collect();
+        let scale = lora.scale();
+        let ad = &lora.adapters[&0];
+        let dwm = Mat::from_vec(8, 8, dw.clone());
+        let da = matmul_nt(&dwm, &ad.b); // analytic (pre-scale)
+        // finite difference on A[0,0]: d<dW, W0 + s A B>/dA00 = s (dW B^T)[0,0]
+        let eps = 1e-3f32;
+        let mut a_plus = ad.a.clone();
+        *a_plus.at_mut(0, 0) += eps;
+        let loss = |a: &Mat| {
+            let mut w = ad.w0.clone();
+            w.axpy(scale, &matmul(a, &ad.b));
+            w.data.iter().zip(&dw).map(|(x, g)| x * g).sum::<f32>()
+        };
+        let fd = (loss(&a_plus) - loss(&ad.a)) / eps;
+        let analytic = scale * da.at(0, 0);
+        assert!((fd - analytic).abs() < 1e-2, "fd {fd} vs {analytic}");
+    }
+
+    #[test]
+    fn dora_effective_weight_has_magnitude_column_norms() {
+        let s = spec();
+        let h = host(&s, 4);
+        let dora = Dora::new(&s, &h, 4, 8.0, &[ModuleKind::Wq], 0);
+        let w = dora.effective_weight(0);
+        let (mag, _) = dora.adapters[&0].mag.as_ref().unwrap();
+        let norms = w.col_norms();
+        for (n, m) in norms.iter().zip(mag) {
+            assert!((n - m).abs() < 1e-4, "col norm {n} vs mag {m}");
+        }
+    }
+
+    #[test]
+    fn trainable_elems_counts_adapters() {
+        let s = spec();
+        let h = host(&s, 5);
+        let lora = Lora::new(&s, &h, 4, 8.0, &[ModuleKind::Wq, ModuleKind::Wup], 0);
+        // wq: 8x4 + 4x8 = 64; wup: 8x4 + 4x16 = 96
+        assert_eq!(lora.trainable_elems(), 64 + 96);
+    }
+}

@@ -1,0 +1,79 @@
+//! Optimizers: MISA (the paper's method) and every baseline it is
+//! evaluated against.
+//!
+//! | paper method | module |
+//! |---|---|
+//! | MISA (Alg. 1/2/3)       | [`misa`] |
+//! | full fine-tuning (Adam) | [`adam`] |
+//! | BAdam (cyclic layers)   | [`badam`] |
+//! | LISA (random layers)    | [`lisa`] |
+//! | LoRA                    | [`lora`] |
+//! | DoRA                    | [`lora`] (magnitude variant) |
+//! | GaLore                  | [`galore`] |
+//! | LoRA+MISA (App. B.2)    | [`lora_misa`] |
+//!
+//! All optimizers speak the same [`Optimizer`] interface: the trainer
+//! runs fwd/bwd through the runtime, hands over grads + Pallas-computed
+//! squared norms, and the optimizer mutates the session parameters
+//! (through the fused-Adam kernel executables where shapes allow) and
+//! reports its memory profile for the simulated allocator.
+
+pub mod adam;
+pub mod badam;
+pub mod galore;
+pub mod lisa;
+pub mod lora;
+pub mod lora_misa;
+pub mod misa;
+pub mod sampler;
+
+pub use adam::{AdamHyper, AdamState, FullAdam};
+pub use badam::BAdam;
+pub use galore::Galore;
+pub use lisa::Lisa;
+pub use lora::{Dora, Lora};
+pub use lora_misa::LoraMisa;
+pub use misa::{Misa, MisaConfig};
+pub use sampler::{ImportanceSampler, SamplerConfig, ScoreFn, Strategy};
+
+use anyhow::Result;
+
+use crate::runtime::{Session, StepOutput};
+
+/// What a method keeps resident, in f32 elements — consumed by the
+/// simulated allocator and the Mem columns.
+#[derive(Clone, Debug, Default)]
+pub struct MemProfile {
+    /// parameters whose gradients must be stored this step
+    pub grad_elems: u64,
+    /// optimizer state (m, v, projections, …)
+    pub optim_elems: u64,
+    /// extra trainable structures (LoRA adapters, magnitudes)
+    pub adapter_elems: u64,
+    /// indices of currently-active modules (activation surcharge)
+    pub active_indices: Vec<usize>,
+}
+
+/// The common optimizer interface.
+pub trait Optimizer {
+    fn name(&self) -> String;
+
+    /// Apply one update given the step output. `lr` comes from the
+    /// trainer's schedule. Must keep `sess.host` and the device buffers
+    /// coherent (use `sess.adam_update` / `sess.set_param`).
+    fn step(&mut self, sess: &mut Session, out: &StepOutput, lr: f32) -> Result<()>;
+
+    /// Current memory profile (post-step), for the allocator ledger.
+    fn mem_profile(&self) -> MemProfile;
+
+    /// Per-module sampling counts (Fig. 11), if the method samples.
+    fn sampling_counts(&self) -> Option<Vec<(usize, u64)>> {
+        None
+    }
+}
+
+/// Scaled squared gradient norm of parameter `i` (Appendix A.2):
+/// ||g||_F^2 / |m| — computed from the Pallas sq-norm by-product.
+pub fn scaled_sq_norm(out: &StepOutput, numel: usize, i: usize) -> f64 {
+    out.sq_norms[i] as f64 / numel as f64
+}

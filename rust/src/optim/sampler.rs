@@ -1,0 +1,443 @@
+//! The module-wise importance sampler — the paper's core contribution.
+//!
+//! * Eq. 4: per-module EMA of the scaled squared gradient norm,
+//!   `G_b^n = β G_b^{n-1} + (1-β) (1/T) Σ_t ||g_b^{n,t}||²_scaled`,
+//!   updated only for sampled modules.
+//! * Prop. 1 / Eq. 3: sampling distribution `p_b ∝ exp(η G_b)` — the
+//!   closed-form solution of the KL-regularized importance-sampling
+//!   objective (exploitation ↔ exploration dial η).
+//! * Algorithm 2: greedy δ-budget selection — draw modules without
+//!   replacement by `p`, keep those that fit the trainable-parameter
+//!   budget `δ · n_model`, until the pool is exhausted.
+//! * Ablations: Uniform / Top-K / Bottom-K strategies (Table 10) and
+//!   weight-norm / param-count scoring (Table 11).
+
+use crate::util::Rng;
+
+/// What to score modules by (paper Table 11).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScoreFn {
+    /// Eq. 4 scaled gradient norm EMA (MISA default)
+    GradNorm,
+    /// ||W||_F / sqrt(|m|)
+    WeightNorm,
+    /// |m| (parameter count)
+    ParamCount,
+}
+
+/// How to turn scores into an active set (paper Table 10).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Strategy {
+    /// Prop. 1 softmax sampling with temperature η + Alg. 2 budget
+    Importance { eta: f64 },
+    /// uniform random without importance
+    Uniform,
+    /// highest scores first, deterministic
+    TopK,
+    /// lowest scores first, deterministic (the paper's negative control)
+    BottomK,
+}
+
+/// Sampler configuration.
+#[derive(Clone, Debug)]
+pub struct SamplerConfig {
+    pub strategy: Strategy,
+    pub score_fn: ScoreFn,
+    /// EMA coefficient β of Eq. 4
+    pub beta: f64,
+    /// trainable-parameter ratio δ
+    pub delta: f64,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        SamplerConfig {
+            strategy: Strategy::Importance { eta: 1.0 },
+            score_fn: ScoreFn::GradNorm,
+            beta: 0.9,
+            delta: 0.03,
+        }
+    }
+}
+
+/// Importance sampler over `B` modules with parameter counts `numel`.
+#[derive(Clone, Debug)]
+pub struct ImportanceSampler {
+    pub cfg: SamplerConfig,
+    /// per-module smoothed importance G_b (Eq. 4)
+    pub scores: Vec<f64>,
+    /// parameter count per module
+    numel: Vec<u64>,
+    /// total model parameters (δ budget base)
+    n_model: u64,
+    /// times each module was sampled (Fig. 11)
+    pub counts: Vec<u64>,
+    /// whether a module has ever been scored (cold-start exploration)
+    seen: Vec<bool>,
+    rounds: u64,
+}
+
+impl ImportanceSampler {
+    pub fn new(cfg: SamplerConfig, numel: Vec<u64>, n_model: u64) -> Self {
+        let b = numel.len();
+        assert!(b > 0);
+        ImportanceSampler {
+            cfg,
+            scores: vec![0.0; b],
+            counts: vec![0; b],
+            seen: vec![false; b],
+            numel,
+            n_model,
+            rounds: 0,
+        }
+    }
+
+    pub fn n_modules(&self) -> usize {
+        self.numel.len()
+    }
+
+    /// Eq. 4 EMA update for one sampled module: `avg` is the inner-loop
+    /// average of the scaled squared gradient norm.
+    pub fn update_score(&mut self, module: usize, avg: f64) {
+        let b = self.cfg.beta;
+        if self.seen[module] {
+            self.scores[module] = b * self.scores[module] + (1.0 - b) * avg;
+        } else {
+            // first observation seeds the EMA directly (G^0 = 0 in the
+            // paper; seeding avoids the cold-start bias toward 0)
+            self.scores[module] = avg;
+            self.seen[module] = true;
+        }
+    }
+
+    /// Inject non-gradient scores (WeightNorm / ParamCount ablations).
+    pub fn set_static_scores(&mut self, scores: Vec<f64>) {
+        assert_eq!(scores.len(), self.scores.len());
+        self.scores = scores;
+        self.seen.fill(true);
+    }
+
+    /// Prop. 1 sampling probabilities: softmax(η · G) (numerically
+    /// stable host implementation; the Pallas `probs` artifact computes
+    /// the identical expression on the kernel path).
+    pub fn probabilities(&self) -> Vec<f64> {
+        let eta = match self.cfg.strategy {
+            Strategy::Importance { eta } => eta,
+            // uniform = η → 0 limit (paper Sec. 3.2)
+            _ => 0.0,
+        };
+        softmax_tempered(&self.scores, eta)
+    }
+
+    /// Select the active set for the next block epoch (Algorithm 2 for
+    /// the sampling strategies; deterministic sweeps for Top-K/Bottom-K).
+    pub fn select(&mut self, rng: &mut Rng) -> Vec<usize> {
+        let budget = (self.cfg.delta * self.n_model as f64).max(1.0) as u64;
+        let order: Vec<usize> = match self.cfg.strategy {
+            Strategy::Importance { .. } | Strategy::Uniform => {
+                self.draw_without_replacement(rng)
+            }
+            Strategy::TopK => {
+                let mut idx: Vec<usize> = (0..self.n_modules()).collect();
+                idx.sort_by(|&a, &b| self.scores[b].total_cmp(&self.scores[a]));
+                idx
+            }
+            Strategy::BottomK => {
+                let mut idx: Vec<usize> = (0..self.n_modules()).collect();
+                idx.sort_by(|&a, &b| self.scores[a].total_cmp(&self.scores[b]));
+                idx
+            }
+        };
+        // Algorithm 2: walk the draw order, admit while the budget holds.
+        let mut active = Vec::new();
+        let mut used = 0u64;
+        for i in order {
+            if used + self.numel[i] <= budget {
+                used += self.numel[i];
+                active.push(i);
+            }
+        }
+        if active.is_empty() {
+            // δ smaller than every module: activate the single smallest
+            // (the paper guarantees ≥1 active module per epoch)
+            let smallest = (0..self.n_modules())
+                .min_by_key(|&i| self.numel[i])
+                .unwrap();
+            active.push(smallest);
+        }
+        for &i in &active {
+            self.counts[i] += 1;
+        }
+        self.rounds += 1;
+        active
+    }
+
+    /// Weighted draw of ALL modules without replacement (Alg. 2 line 3),
+    /// using the Prop. 1 probabilities (or uniform).
+    fn draw_without_replacement(&self, rng: &mut Rng) -> Vec<usize> {
+        let mut probs = self.probabilities();
+        let mut remaining: Vec<usize> = (0..self.n_modules()).collect();
+        let mut order = Vec::with_capacity(remaining.len());
+        while !remaining.is_empty() {
+            let weights: Vec<f64> = remaining.iter().map(|&i| probs[i].max(1e-300)).collect();
+            let pick = rng.weighted(&weights);
+            order.push(remaining.swap_remove(pick));
+            // note: probs renormalize implicitly through `weighted`
+            let _ = &mut probs;
+        }
+        order
+    }
+
+    /// Budget actually used by an active set (params).
+    pub fn active_params(&self, active: &[usize]) -> u64 {
+        active.iter().map(|&i| self.numel[i]).sum()
+    }
+
+    /// Corollary 1 lower bound: with bounded scores, every probability
+    /// is ≥ 1/(B e^{η π*}).
+    pub fn probability_lower_bound(&self) -> f64 {
+        let eta = match self.cfg.strategy {
+            Strategy::Importance { eta } => eta,
+            _ => 0.0,
+        };
+        let max_score = self.scores.iter().cloned().fold(0.0f64, f64::max);
+        1.0 / (self.n_modules() as f64 * (eta * max_score).exp())
+    }
+}
+
+/// Numerically stable tempered softmax: p_i ∝ exp(eta * s_i).
+pub fn softmax_tempered(scores: &[f64], eta: f64) -> Vec<f64> {
+    let mx = scores
+        .iter()
+        .cloned()
+        .fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = scores.iter().map(|&s| (eta * (s - mx)).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    exps.into_iter().map(|e| e / z).collect()
+}
+
+/// Proposition 2 objective: Σ p_i s_i — used by tests to verify that
+/// module-wise sampling dominates layer-wise sampling.
+pub fn importance_objective(probs: &[f64], scores: &[f64]) -> f64 {
+    probs.iter().zip(scores).map(|(p, s)| p * s).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sampler(b: usize, delta: f64, eta: f64) -> ImportanceSampler {
+        let numel: Vec<u64> = (0..b).map(|i| 100 + (i as u64 % 7) * 50).collect();
+        let n_model: u64 = numel.iter().sum::<u64>() * 3; // modules ≈ third of model
+        ImportanceSampler::new(
+            SamplerConfig {
+                strategy: Strategy::Importance { eta },
+                score_fn: ScoreFn::GradNorm,
+                beta: 0.9,
+                delta,
+            },
+            numel,
+            n_model,
+        )
+    }
+
+    #[test]
+    fn probabilities_form_simplex() {
+        crate::prop!("simplex", |rng| {
+            let mut s = sampler(rng.range(1, 60), 0.1, rng.f64() * 10.0);
+            for i in 0..s.n_modules() {
+                s.update_score(i, rng.f64() * 5.0);
+            }
+            let p = s.probabilities();
+            let sum: f64 = p.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9);
+            assert!(p.iter().all(|&x| x >= 0.0));
+        });
+    }
+
+    #[test]
+    fn corollary1_probability_lower_bound_holds() {
+        crate::prop!("cor1", |rng| {
+            let mut s = sampler(rng.range(2, 40), 0.1, rng.f64() * 3.0);
+            for i in 0..s.n_modules() {
+                s.update_score(i, rng.f64() * 2.0);
+            }
+            let bound = s.probability_lower_bound();
+            for &p in &s.probabilities() {
+                assert!(p >= bound - 1e-12, "p {p} < bound {bound}");
+            }
+        });
+    }
+
+    #[test]
+    fn algorithm2_budget_never_exceeded() {
+        crate::prop!("alg2_budget", |rng| {
+            let delta = 0.01 + rng.f64() * 0.3;
+            let mut s = sampler(rng.range(2, 80), delta, 1.0);
+            for i in 0..s.n_modules() {
+                s.update_score(i, rng.f64());
+            }
+            let active = s.select(rng);
+            assert!(!active.is_empty());
+            let budget = (delta * (s.n_model as f64)) as u64;
+            let used = s.active_params(&active);
+            // either within budget, or the single-smallest fallback fired
+            assert!(
+                used <= budget || active.len() == 1,
+                "used {used} > budget {budget}"
+            );
+            // no duplicates
+            let mut sorted = active.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), active.len());
+        });
+    }
+
+    #[test]
+    fn algorithm2_fills_budget_greedily() {
+        // with plenty of equal modules the greedy walk should pack close
+        // to the budget
+        let mut rng = Rng::new(1);
+        let numel = vec![100u64; 50];
+        let mut s = ImportanceSampler::new(
+            SamplerConfig { delta: 0.1, ..Default::default() },
+            numel,
+            50 * 100,
+        );
+        let active = s.select(&mut rng);
+        assert_eq!(s.active_params(&active), 500); // exactly δ·n
+    }
+
+    #[test]
+    fn eta_zero_is_uniform_and_large_eta_concentrates() {
+        let mut s = sampler(10, 0.5, 0.0);
+        for i in 0..10 {
+            s.update_score(i, i as f64);
+        }
+        let p = s.probabilities();
+        for &x in &p {
+            assert!((x - 0.1).abs() < 1e-12);
+        }
+        s.cfg.strategy = Strategy::Importance { eta: 50.0 };
+        let p = s.probabilities();
+        assert!(p[9] > 0.99);
+    }
+
+    #[test]
+    fn ema_update_follows_eq4() {
+        let mut s = sampler(3, 0.5, 1.0);
+        s.update_score(0, 4.0); // first observation seeds
+        assert!((s.scores[0] - 4.0).abs() < 1e-12);
+        s.update_score(0, 2.0); // then EMA: 0.9*4 + 0.1*2 = 3.8
+        assert!((s.scores[0] - 3.8).abs() < 1e-12);
+        // unsampled modules keep their score (Eq. 4 "otherwise" branch)
+        assert_eq!(s.scores[1], 0.0);
+    }
+
+    #[test]
+    fn importance_sampling_prefers_high_scores() {
+        let mut rng = Rng::new(3);
+        let mut s = sampler(20, 0.05, 5.0);
+        for i in 0..20 {
+            s.update_score(i, if i == 7 { 10.0 } else { 0.1 });
+        }
+        let mut hits7 = 0;
+        for _ in 0..200 {
+            if s.select(&mut rng).contains(&7) {
+                hits7 += 1;
+            }
+        }
+        assert!(hits7 > 150, "module 7 sampled only {hits7}/200");
+    }
+
+    #[test]
+    fn but_low_scores_still_explored() {
+        // the KL term keeps exploration alive: every module must appear
+        // eventually (paper Table 10's critique of Top-K)
+        let mut rng = Rng::new(4);
+        let mut s = sampler(10, 0.15, 1.0);
+        for i in 0..10 {
+            s.update_score(i, if i == 0 { 5.0 } else { 0.1 });
+        }
+        for _ in 0..400 {
+            s.select(&mut rng);
+        }
+        for (i, &c) in s.counts.iter().enumerate() {
+            assert!(c > 0, "module {i} never sampled");
+        }
+    }
+
+    #[test]
+    fn topk_is_deterministic_and_bottomk_opposite() {
+        let mut rng = Rng::new(5);
+        let numel = vec![100u64; 10];
+        let mk = |strategy| {
+            let mut s = ImportanceSampler::new(
+                SamplerConfig { strategy, delta: 0.07, ..Default::default() },
+                numel.clone(),
+                3000,
+            );
+            for i in 0..10 {
+                s.update_score(i, i as f64);
+            }
+            s
+        };
+        let mut top = mk(Strategy::TopK);
+        let a = top.select(&mut rng);
+        assert_eq!(a, vec![9, 8]); // 2 × 100 ≤ 210 budget
+        let mut bot = mk(Strategy::BottomK);
+        let b = bot.select(&mut rng);
+        assert_eq!(b, vec![0, 1]);
+    }
+
+    #[test]
+    fn proposition2_module_beats_layer_sampling() {
+        // Prop. 2: the optimal module-wise distribution achieves an
+        // objective ≥ any layer-wise distribution split uniformly over
+        // its modules.
+        crate::prop!("prop2", |rng| {
+            let layers = rng.range(1, 6);
+            let k = rng.range(1, 5); // modules per layer
+            let scores: Vec<f64> = (0..layers * k).map(|_| rng.f64() * 3.0).collect();
+            let eta = 0.5 + rng.f64() * 2.0;
+            // layer-wise: probabilities over layer sums, split uniformly
+            let layer_scores: Vec<f64> = (0..layers)
+                .map(|l| scores[l * k..(l + 1) * k].iter().sum::<f64>() / k as f64)
+                .collect();
+            let layer_probs = softmax_tempered(&layer_scores, eta);
+            let spread: Vec<f64> = (0..layers * k)
+                .map(|i| layer_probs[i / k] / k as f64)
+                .collect();
+            // module-wise: direct softmax over module scores
+            let module_probs = softmax_tempered(&scores, eta);
+            let lw = importance_objective(&spread, &scores);
+            let mw = importance_objective(&module_probs, &scores);
+            assert!(mw >= lw - 1e-9, "module {mw} < layer {lw}");
+        });
+    }
+
+    #[test]
+    fn fallback_when_delta_below_smallest_module() {
+        let mut rng = Rng::new(6);
+        let numel = vec![1000u64, 2000, 500];
+        let mut s = ImportanceSampler::new(
+            SamplerConfig { delta: 1e-6, ..Default::default() },
+            numel,
+            1_000_000,
+        );
+        let active = s.select(&mut rng);
+        assert_eq!(active, vec![2]); // smallest module
+    }
+
+    #[test]
+    fn counts_accumulate() {
+        let mut rng = Rng::new(7);
+        let mut s = sampler(5, 0.5, 0.0);
+        for _ in 0..50 {
+            s.select(&mut rng);
+        }
+        let total: u64 = s.counts.iter().sum();
+        assert!(total >= 50);
+    }
+}

@@ -1,0 +1,332 @@
+//! PJRT runtime: load AOT artifacts, manage device-resident parameters,
+//! execute the training/eval/optimizer graphs.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute_b`.
+//! Parameters live as device buffers (`PjRtBuffer`) and are passed by
+//! reference on every step — only changed modules are re-uploaded, and
+//! only the output tuple (loss, grads, norms) crosses back to the host.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use crate::modelspec::{Manifest, ModelSpec, ModuleKind};
+use crate::util::Rng;
+
+/// Wrapper over the PJRT CPU client + compiled-executable cache.
+pub struct Engine {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    exe_cache: HashMap<String, Rc<PjRtLoadedExecutable>>,
+}
+
+impl Engine {
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine { client, manifest, exe_cache: HashMap::new() })
+    }
+
+    /// Load + compile an HLO-text artifact (cached by file name).
+    pub fn load(&mut self, file: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if !self.exe_cache.contains_key(file) {
+            let path = self.manifest.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
+            self.exe_cache.insert(file.to_string(), Rc::new(exe));
+        }
+        Ok(Rc::clone(self.exe_cache.get(file).unwrap()))
+    }
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload f32 {dims:?}: {e:?}"))
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload i32 {dims:?}: {e:?}"))
+    }
+}
+
+/// Output of one fwd/bwd execution.
+pub struct StepOutput {
+    pub loss: f32,
+    /// per-parameter gradients, registry order
+    pub grads: Vec<Vec<f32>>,
+    /// per-parameter squared Frobenius norms (Pallas by-product)
+    pub sq_norms: Vec<f32>,
+}
+
+/// Output of one predict execution.
+pub struct EvalOutput {
+    pub loss: f32,
+    /// [b*s] 1.0 where argmax == target
+    pub correct: Vec<f32>,
+}
+
+/// A model session: device-resident parameters + the compiled graphs.
+pub struct Session {
+    pub spec: ModelSpec,
+    /// host mirror of the parameters, registry order
+    pub host: Vec<Vec<f32>>,
+    /// device-resident parameter buffers, registry order
+    device: Vec<PjRtBuffer>,
+    fwd_bwd: Rc<PjRtLoadedExecutable>,
+    predict: Rc<PjRtLoadedExecutable>,
+    /// fused-Adam executable per shape key
+    adam: HashMap<String, Rc<PjRtLoadedExecutable>>,
+    /// momentum-tail executable per shape key
+    tail: HashMap<String, Rc<PjRtLoadedExecutable>>,
+    client: PjRtClient,
+}
+
+impl Session {
+    /// Build a session for `config`, initializing parameters from `seed`.
+    pub fn create(engine: &mut Engine, config: &str, seed: u64) -> Result<Self> {
+        let spec = engine.manifest.model(config)?.clone();
+        let host = init_params(&spec, seed);
+        Self::with_params(engine, spec, host)
+    }
+
+    /// Build a session around existing host parameters (checkpoint load).
+    pub fn with_params(engine: &mut Engine, spec: ModelSpec, host: Vec<Vec<f32>>) -> Result<Self> {
+        anyhow::ensure!(host.len() == spec.params.len(), "param count mismatch");
+        let fwd_bwd = {
+            let f = spec.graphs.get("fwd_bwd").ok_or_else(|| anyhow!("no fwd_bwd graph"))?;
+            engine.load(&f.clone())?
+        };
+        let predict = {
+            let f = spec.graphs.get("predict").ok_or_else(|| anyhow!("no predict graph"))?;
+            engine.load(&f.clone())?
+        };
+        let mut adam = HashMap::new();
+        let mut tail = HashMap::new();
+        for p in &spec.params {
+            let key = p.shape_key();
+            if !adam.contains_key(&key) {
+                if let Some(f) = spec.graphs.get(&format!("adam.{key}")) {
+                    adam.insert(key.clone(), engine.load(&f.clone())?);
+                }
+                if let Some(f) = spec.graphs.get(&format!("tail.{key}")) {
+                    tail.insert(key.clone(), engine.load(&f.clone())?);
+                }
+            }
+        }
+        let mut device = Vec::with_capacity(host.len());
+        for (p, data) in spec.params.iter().zip(&host) {
+            device.push(engine.upload_f32(data, &p.shape)?);
+        }
+        Ok(Session {
+            spec,
+            host,
+            device,
+            fwd_bwd,
+            predict,
+            adam,
+            tail,
+            client: engine.client.clone(),
+        })
+    }
+
+    /// Re-upload one parameter from its host mirror.
+    pub fn sync_param(&mut self, idx: usize) -> Result<()> {
+        let p = &self.spec.params[idx];
+        self.device[idx] = self
+            .client
+            .buffer_from_host_buffer(&self.host[idx], &p.shape, None)
+            .map_err(|e| anyhow!("sync {}: {e:?}", p.name))?;
+        Ok(())
+    }
+
+    /// Re-upload a set of parameters.
+    pub fn sync_params(&mut self, indices: &[usize]) -> Result<()> {
+        for &i in indices {
+            self.sync_param(i)?;
+        }
+        Ok(())
+    }
+
+    /// Overwrite one parameter (host + device).
+    pub fn set_param(&mut self, idx: usize, data: Vec<f32>) -> Result<()> {
+        anyhow::ensure!(data.len() == self.spec.params[idx].numel(), "size mismatch");
+        self.host[idx] = data;
+        self.sync_param(idx)
+    }
+
+    fn batch_buffers(&self, batch: &crate::data::Batch) -> Result<[PjRtBuffer; 3]> {
+        let dims = [batch.batch, batch.seq_len];
+        let t = self
+            .client
+            .buffer_from_host_buffer(&batch.tokens, &dims, None)
+            .map_err(|e| anyhow!("tokens upload: {e:?}"))?;
+        let g = self
+            .client
+            .buffer_from_host_buffer(&batch.targets, &dims, None)
+            .map_err(|e| anyhow!("targets upload: {e:?}"))?;
+        let m = self
+            .client
+            .buffer_from_host_buffer(&batch.mask, &dims, None)
+            .map_err(|e| anyhow!("mask upload: {e:?}"))?;
+        Ok([t, g, m])
+    }
+
+    /// One fwd/bwd step: returns loss, all grads, and the Pallas-computed
+    /// per-parameter squared gradient norms.
+    pub fn fwd_bwd(&self, batch: &crate::data::Batch) -> Result<StepOutput> {
+        let [t, g, m] = self.batch_buffers(batch)?;
+        let mut args: Vec<&PjRtBuffer> = self.device.iter().collect();
+        args.push(&t);
+        args.push(&g);
+        args.push(&m);
+        let out = self
+            .fwd_bwd
+            .execute_b(&args)
+            .map_err(|e| anyhow!("fwd_bwd execute: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fwd_bwd output: {e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let n = self.spec.params.len();
+        anyhow::ensure!(parts.len() == n + 2, "unexpected output arity {}", parts.len());
+        let loss = parts[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("loss: {e:?}"))?[0];
+        let mut grads = Vec::with_capacity(n);
+        for part in &parts[1..=n] {
+            grads.push(part.to_vec::<f32>().map_err(|e| anyhow!("grad: {e:?}"))?);
+        }
+        let sq_norms = parts[n + 1]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("sq_norms: {e:?}"))?;
+        Ok(StepOutput { loss, grads, sq_norms })
+    }
+
+    /// One eval step via the predict graph.
+    pub fn predict(&self, batch: &crate::data::Batch) -> Result<EvalOutput> {
+        let [t, g, m] = self.batch_buffers(batch)?;
+        let mut args: Vec<&PjRtBuffer> = self.device.iter().collect();
+        args.push(&t);
+        args.push(&g);
+        args.push(&m);
+        let out = self
+            .predict
+            .execute_b(&args)
+            .map_err(|e| anyhow!("predict execute: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("predict output: {e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let loss = parts[0].to_vec::<f32>().map_err(|e| anyhow!("loss: {e:?}"))?[0];
+        let correct = parts[1]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("correct: {e:?}"))?;
+        Ok(EvalOutput { loss, correct })
+    }
+
+    /// Fused Adam update (Pallas kernel) of parameter `idx` on the hot
+    /// path: consumes grad + moments, updates host+device param in place,
+    /// returns (m', v', sum(g^2)).
+    pub fn adam_update(
+        &mut self,
+        idx: usize,
+        grad: &[f32],
+        m: &[f32],
+        v: &[f32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        let p = &self.spec.params[idx];
+        let key = p.shape_key();
+        let exe = self
+            .adam
+            .get(&key)
+            .ok_or_else(|| anyhow!("no adam graph for shape {key}"))?;
+        let shape = &p.shape;
+        let gbuf = self.client.buffer_from_host_buffer(grad, shape, None)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let mbuf = self.client.buffer_from_host_buffer(m, shape, None)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let vbuf = self.client.buffer_from_host_buffer(v, shape, None)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let lrbuf = self.client.buffer_from_host_buffer(&[lr], &[1], None)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let args: Vec<&PjRtBuffer> = vec![&self.device[idx], &gbuf, &mbuf, &vbuf, &lrbuf];
+        let out = exe.execute_b(&args).map_err(|e| anyhow!("adam execute: {e:?}"))?;
+        let lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+        let p_new = parts[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let m_new = parts[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let v_new = parts[2].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let sq = parts[3].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0];
+        self.host[idx] = p_new;
+        self.sync_param(idx)?;
+        Ok((m_new, v_new, sq))
+    }
+
+    /// The additional momentum step (Alg. 1 line 16) via the Pallas tail
+    /// kernel.
+    pub fn tail_update(&mut self, idx: usize, m: &[f32], v: &[f32], lr: f32) -> Result<()> {
+        let p = &self.spec.params[idx];
+        let key = p.shape_key();
+        let exe = self
+            .tail
+            .get(&key)
+            .ok_or_else(|| anyhow!("no tail graph for shape {key}"))?;
+        let shape = &p.shape;
+        let mbuf = self.client.buffer_from_host_buffer(m, shape, None)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let vbuf = self.client.buffer_from_host_buffer(v, shape, None)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let lrbuf = self.client.buffer_from_host_buffer(&[lr], &[1], None)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let args: Vec<&PjRtBuffer> = vec![&self.device[idx], &mbuf, &vbuf, &lrbuf];
+        let out = exe.execute_b(&args).map_err(|e| anyhow!("tail execute: {e:?}"))?;
+        let lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
+        let p_new = lit
+            .to_tuple1()
+            .map_err(|e| anyhow!("{e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        self.host[idx] = p_new;
+        self.sync_param(idx)
+    }
+}
+
+/// Initialize host parameters (norms = 1, matrices = N(0, fan_in^-1/2),
+/// embed/head = N(0, 0.02) — mirrors python/compile/model.init_params).
+pub fn init_params(spec: &ModelSpec, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    spec.params
+        .iter()
+        .map(|p| {
+            let mut data = vec![0.0f32; p.numel()];
+            match p.kind {
+                ModuleKind::Norm => data.fill(1.0),
+                ModuleKind::Embed | ModuleKind::Head => rng.fill_normal(&mut data, 0.02),
+                _ => {
+                    let std = (p.shape[0] as f32).powf(-0.5);
+                    rng.fill_normal(&mut data, std);
+                }
+            }
+            data
+        })
+        .collect()
+}
+
+/// Helper: extract a Literal's f32 data.
+pub fn literal_f32(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal_f32: {e:?}"))
+}

@@ -1,0 +1,338 @@
+//! Host linear algebra for coordinator-side math.
+//!
+//! The heavy compute (transformer fwd/bwd, fused optimizer updates) runs
+//! through the AOT XLA artifacts; this module covers the small dense
+//! pieces the baselines do *outside* the graph: LoRA/DoRA adapter
+//! projections, GaLore's low-rank range finder, column norms, and the
+//! householder-free QR used for subspace orthonormalization.
+
+use crate::util::Rng;
+
+/// Dense row-major f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    /// Gaussian-initialized matrix with given std.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, std);
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    /// Frobenius norm squared.
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    /// Per-column L2 norms (DoRA's magnitude decomposition).
+    pub fn col_norms(&self) -> Vec<f32> {
+        let mut out = vec![0.0f64; self.cols];
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for (c, &x) in row.iter().enumerate() {
+                out[c] += (x as f64) * (x as f64);
+            }
+        }
+        out.into_iter().map(|v| v.sqrt() as f32).collect()
+    }
+
+    /// self += alpha * other
+    pub fn axpy(&mut self, alpha: f32, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+}
+
+/// C = A @ B. Cache-friendly i-k-j loop with an accumulation row.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+    let mut c = Mat::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
+        for (k, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b.data[k * b.cols..(k + 1) * b.cols];
+            for (cj, &bkj) in crow.iter_mut().zip(brow) {
+                *cj += aik * bkj;
+            }
+        }
+    }
+    c
+}
+
+/// C = A^T @ B without materializing A^T.
+pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows, "matmul_tn shape mismatch");
+    let mut c = Mat::zeros(a.cols, b.cols);
+    for r in 0..a.rows {
+        let arow = a.row(r);
+        let brow = b.row(r);
+        for (i, &ari) in arow.iter().enumerate() {
+            if ari == 0.0 {
+                continue;
+            }
+            let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
+            for (cj, &bj) in crow.iter_mut().zip(brow) {
+                *cj += ari * bj;
+            }
+        }
+    }
+    c
+}
+
+/// C = A @ B^T without materializing B^T.
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_nt shape mismatch");
+    let mut c = Mat::zeros(a.rows, b.rows);
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        for j in 0..b.rows {
+            let brow = b.row(j);
+            let mut s = 0.0f32;
+            for (&x, &y) in arow.iter().zip(brow) {
+                s += x * y;
+            }
+            c.data[i * b.rows + j] = s;
+        }
+    }
+    c
+}
+
+/// In-place modified Gram–Schmidt: orthonormalize the columns of `m`.
+/// Columns with negligible residual norm are replaced by random unit
+/// vectors re-orthogonalized against the previous ones (keeps the basis
+/// full rank even when the input is rank-deficient).
+pub fn orthonormalize_cols(m: &mut Mat, rng: &mut Rng) {
+    let (rows, cols) = (m.rows, m.cols);
+    for c in 0..cols {
+        // original column norm: the degeneracy test below must be
+        // *relative* — normalizing a residual that is pure fp noise
+        // amplifies its spurious correlation with earlier columns
+        let orig_norm: f64 = (0..rows)
+            .map(|r| (m.at(r, c) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        for prev in 0..c {
+            let mut dot = 0.0f64;
+            for r in 0..rows {
+                dot += m.at(r, prev) as f64 * m.at(r, c) as f64;
+            }
+            for r in 0..rows {
+                *m.at_mut(r, c) -= (dot as f32) * m.at(r, prev);
+            }
+        }
+        let mut norm = 0.0f64;
+        for r in 0..rows {
+            norm += (m.at(r, c) as f64).powi(2);
+        }
+        let mut norm = norm.sqrt();
+        if norm < 1e-4 * orig_norm.max(1e-30) {
+            // degenerate column: re-draw
+            for r in 0..rows {
+                *m.at_mut(r, c) = rng.normal() as f32;
+            }
+            for prev in 0..c {
+                let mut dot = 0.0f64;
+                for r in 0..rows {
+                    dot += m.at(r, prev) as f64 * m.at(r, c) as f64;
+                }
+                for r in 0..rows {
+                    *m.at_mut(r, c) -= (dot as f32) * m.at(r, prev);
+                }
+            }
+            norm = (0..rows).map(|r| (m.at(r, c) as f64).powi(2)).sum::<f64>().sqrt();
+        }
+        let inv = (1.0 / norm) as f32;
+        for r in 0..rows {
+            *m.at_mut(r, c) *= inv;
+        }
+    }
+}
+
+/// Randomized range finder (Halko et al.): an orthonormal `rows x rank`
+/// basis approximating the column space of `g`. This is the SVD-free
+/// subspace computation our GaLore substitute uses (DESIGN.md Sec. 3);
+/// one extra power iteration sharpens the spectrum.
+pub fn range_finder(g: &Mat, rank: usize, rng: &mut Rng) -> Mat {
+    let rank = rank.min(g.rows).min(g.cols);
+    let omega = Mat::randn(g.cols, rank, 1.0, rng);
+    let mut y = matmul(g, &omega); // [rows, rank]
+    orthonormalize_cols(&mut y, rng);
+    // one power iteration: Y = G (G^T Y)
+    let z = matmul_tn(g, &y); // [cols, rank]
+    let mut y = matmul(g, &z);
+    orthonormalize_cols(&mut y, rng);
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a.at(i, k) * b.at(k, j);
+                }
+                *c.at_mut(i, j) = s;
+            }
+        }
+        c
+    }
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f32) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() <= tol, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        crate::prop!("matmul", |rng| {
+            let (m, k, n) = (rng.range(1, 12), rng.range(1, 12), rng.range(1, 12));
+            let a = Mat::randn(m, k, 1.0, rng);
+            let b = Mat::randn(k, n, 1.0, rng);
+            assert_close(&matmul(&a, &b), &naive_matmul(&a, &b), 1e-4);
+        });
+    }
+
+    #[test]
+    fn matmul_tn_and_nt_match_transpose() {
+        crate::prop!("matmul_t", |rng| {
+            let (m, k, n) = (rng.range(1, 10), rng.range(1, 10), rng.range(1, 10));
+            let a = Mat::randn(k, m, 1.0, rng);
+            let b = Mat::randn(k, n, 1.0, rng);
+            assert_close(&matmul_tn(&a, &b), &matmul(&a.transpose(), &b), 1e-4);
+            let a2 = Mat::randn(m, k, 1.0, rng);
+            let b2 = Mat::randn(n, k, 1.0, rng);
+            assert_close(&matmul_nt(&a2, &b2), &matmul(&a2, &b2.transpose()), 1e-4);
+        });
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(5);
+        let a = Mat::randn(7, 3, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn col_norms_match_definition() {
+        let m = Mat::from_vec(2, 2, vec![3.0, 0.0, 4.0, 2.0]);
+        let n = m.col_norms();
+        assert!((n[0] - 5.0).abs() < 1e-6);
+        assert!((n[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn orthonormalize_produces_orthonormal_basis() {
+        crate::prop!("qr", |rng| {
+            let rows = rng.range(4, 20);
+            let cols = rng.range(1, rows.min(8) + 1);
+            let mut m = Mat::randn(rows, cols, 1.0, rng);
+            orthonormalize_cols(&mut m, rng);
+            let gram = matmul_tn(&m, &m);
+            for i in 0..cols {
+                for j in 0..cols {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((gram.at(i, j) - want).abs() < 1e-3,
+                            "gram[{i},{j}]={}", gram.at(i, j));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn orthonormalize_handles_rank_deficiency() {
+        let mut rng = Rng::new(17);
+        // two identical columns
+        let mut m = Mat::from_vec(3, 2, vec![1.0, 1.0, 2.0, 2.0, 3.0, 3.0]);
+        orthonormalize_cols(&mut m, &mut rng);
+        let gram = matmul_tn(&m, &m);
+        assert!((gram.at(0, 0) - 1.0).abs() < 1e-4);
+        assert!((gram.at(1, 1) - 1.0).abs() < 1e-4);
+        assert!(gram.at(0, 1).abs() < 1e-4);
+    }
+
+    #[test]
+    fn range_finder_captures_low_rank_matrix() {
+        // G = U V with rank 3: the basis must reconstruct G almost exactly
+        let mut rng = Rng::new(23);
+        let u = Mat::randn(20, 3, 1.0, &mut rng);
+        let v = Mat::randn(3, 15, 1.0, &mut rng);
+        let g = matmul(&u, &v);
+        let p = range_finder(&g, 3, &mut rng);
+        // reconstruction P P^T G
+        let ptg = matmul_tn(&p, &g);
+        let rec = matmul(&p, &ptg);
+        let mut err = 0.0f64;
+        for (a, b) in rec.data.iter().zip(&g.data) {
+            err += ((a - b) as f64).powi(2);
+        }
+        let rel = err / g.sq_norm();
+        assert!(rel < 1e-6, "relative reconstruction error {rel}");
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = Mat::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let b = Mat::from_vec(1, 3, vec![1.0, 1.0, 1.0]);
+        a.axpy(2.0, &b);
+        assert_eq!(a.data, vec![3.0, 4.0, 5.0]);
+        a.scale(0.5);
+        assert_eq!(a.data, vec![1.5, 2.0, 2.5]);
+    }
+}

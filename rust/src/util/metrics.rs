@@ -1,0 +1,147 @@
+//! JSONL metrics sink + in-memory run history.
+//!
+//! Each trainer step appends one JSON object per line to
+//! `results/<run>/metrics.jsonl` (hand-serialized — no serde offline).
+//! The experiment harness reads the in-memory history to print paper
+//! tables and figure series.
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+/// One logged scalar record.
+#[derive(Clone, Debug)]
+pub struct Record {
+    pub step: u64,
+    pub wall_s: f64,
+    pub fields: Vec<(String, f64)>,
+}
+
+/// Metrics sink: JSONL file (optional) + in-memory history.
+pub struct MetricsSink {
+    writer: Option<BufWriter<File>>,
+    pub history: Vec<Record>,
+    start: std::time::Instant,
+}
+
+impl MetricsSink {
+    /// In-memory only (tests, sweeps).
+    pub fn memory() -> Self {
+        MetricsSink { writer: None, history: Vec::new(), start: std::time::Instant::now() }
+    }
+
+    /// Backed by `dir/metrics.jsonl` (directory is created).
+    pub fn to_dir(dir: &Path) -> Result<Self> {
+        fs::create_dir_all(dir)?;
+        let f = File::create(dir.join("metrics.jsonl"))?;
+        Ok(MetricsSink {
+            writer: Some(BufWriter::new(f)),
+            history: Vec::new(),
+            start: std::time::Instant::now(),
+        })
+    }
+
+    pub fn log(&mut self, step: u64, fields: &[(&str, f64)]) {
+        let rec = Record {
+            step,
+            wall_s: self.start.elapsed().as_secs_f64(),
+            fields: fields.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        };
+        if let Some(w) = self.writer.as_mut() {
+            let mut line = format!("{{\"step\":{},\"wall_s\":{:.3}", rec.step, rec.wall_s);
+            for (k, v) in &rec.fields {
+                line.push_str(&format!(",\"{}\":{}", k, json_f64(*v)));
+            }
+            line.push('}');
+            let _ = writeln!(w, "{line}");
+        }
+        self.history.push(rec);
+    }
+
+    pub fn flush(&mut self) {
+        if let Some(w) = self.writer.as_mut() {
+            let _ = w.flush();
+        }
+    }
+
+    /// Series of (step, value) for a field name.
+    pub fn series(&self, field: &str) -> Vec<(u64, f64)> {
+        self.history
+            .iter()
+            .filter_map(|r| {
+                r.fields
+                    .iter()
+                    .find(|(k, _)| k == field)
+                    .map(|(_, v)| (r.step, *v))
+            })
+            .collect()
+    }
+
+    /// Series of (wall seconds, value) for a field name (Fig. 3 x-axis).
+    pub fn series_wall(&self, field: &str) -> Vec<(f64, f64)> {
+        self.history
+            .iter()
+            .filter_map(|r| {
+                r.fields
+                    .iter()
+                    .find(|(k, _)| k == field)
+                    .map(|(_, v)| (r.wall_s, *v))
+            })
+            .collect()
+    }
+
+    pub fn last(&self, field: &str) -> Option<f64> {
+        self.series(field).last().map(|&(_, v)| v)
+    }
+}
+
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Write a text report (paper table / figure series) under `results/`.
+pub fn write_report(path: &Path, body: &str) -> Result<PathBuf> {
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    fs::write(path, body)?;
+    Ok(path.to_path_buf())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_sink_series() {
+        let mut m = MetricsSink::memory();
+        m.log(1, &[("loss", 2.0)]);
+        m.log(2, &[("loss", 1.5), ("acc", 0.3)]);
+        assert_eq!(m.series("loss"), vec![(1, 2.0), (2, 1.5)]);
+        assert_eq!(m.series("acc"), vec![(2, 0.3)]);
+        assert_eq!(m.last("loss"), Some(1.5));
+    }
+
+    #[test]
+    fn jsonl_file_written() {
+        let dir = std::env::temp_dir().join(format!("misa_metrics_{}", std::process::id()));
+        let mut m = MetricsSink::to_dir(&dir).unwrap();
+        m.log(0, &[("x", 1.0)]);
+        m.flush();
+        let text = std::fs::read_to_string(dir.join("metrics.jsonl")).unwrap();
+        assert!(text.contains("\"x\":1"), "{text}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn non_finite_serializes_as_null() {
+        assert_eq!(json_f64(f64::NAN), "null");
+        assert_eq!(json_f64(1.5), "1.5");
+    }
+}

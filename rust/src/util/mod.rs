@@ -1,0 +1,73 @@
+//! Small self-contained utilities: PRNG, metrics sink, property harness.
+//!
+//! The offline build environment only ships the `xla` crate's dependency
+//! closure, so `rand`, `serde`, `proptest` and friends are hand-rolled
+//! here at the minimal size this project needs.
+
+pub mod metrics;
+pub mod prop;
+pub mod rng;
+
+pub use metrics::MetricsSink;
+pub use rng::Rng;
+
+/// Format a byte count as GiB with two decimals (memory tables).
+pub fn gib(bytes: u64) -> f64 {
+    bytes as f64 / (1024.0 * 1024.0 * 1024.0)
+}
+
+/// Wall-clock seconds since an `Instant`.
+pub fn secs_since(t: std::time::Instant) -> f64 {
+    t.elapsed().as_secs_f64()
+}
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Ordinary-least-squares slope of y against x (convergence-rate fits).
+pub fn ols_slope(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (&a, &b) in x.iter().zip(y) {
+        num += (a - mx) * (b - my);
+        den += (a - mx) * (a - mx);
+    }
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gib_converts() {
+        assert!((gib(1 << 30) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_handles_empty() {
+        assert_eq!(mean(&[]), 0.0);
+        assert!((mean(&[1.0, 3.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ols_slope_recovers_line() {
+        let x: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| 3.0 * v + 1.0).collect();
+        assert!((ols_slope(&x, &y) - 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,71 @@
+//! Mini property-testing harness.
+//!
+//! `proptest` cannot be vendored in this offline environment, so this is
+//! a deliberately small stand-in: run a property over N randomized cases
+//! drawn from an explicit `Rng`, report the failing seed/case on panic.
+//! Coordinator invariants (routing, batching, sampler state) are tested
+//! through this harness — see the paper-invariant tests in
+//! `optim::sampler`, `memory`, and `coordinator`.
+
+use super::rng::Rng;
+
+/// Number of cases per property (kept modest: each case may build a
+/// sampler or allocator).
+pub const DEFAULT_CASES: usize = 200;
+
+/// Run `f` over `cases` randomized inputs. On failure the panic message
+/// includes the case index and the master seed so the case replays.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, seed: u64, cases: usize, mut f: F) {
+    for case in 0..cases {
+        let mut rng = Rng::new(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property {name:?} failed at case {case} (seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Shorthand macro so property tests read like proptest blocks:
+/// `prop!(name, |rng| { ... });`
+#[macro_export]
+macro_rules! prop {
+    ($name:expr, |$rng:ident| $body:block) => {
+        $crate::util::prop::check($name, 0xC0FFEE, $crate::util::prop::DEFAULT_CASES, |$rng| {
+            let $rng = $rng;
+            $body
+        })
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("count", 1, 50, |_| n += 1);
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at case")]
+    fn failing_property_reports_case() {
+        check("fails", 1, 50, |rng| {
+            assert!(rng.f64() < 0.9, "drew a large value");
+        });
+    }
+
+    #[test]
+    fn prop_macro_compiles() {
+        prop!("macro", |rng| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+}
