@@ -1,6 +1,8 @@
 //! `cargo bench --bench paper_tables` — regenerates EVERY table and
 //! figure of the paper's evaluation through the experiment harness
 //! (fast profile). Reports land under `results/` and are echoed here.
+//! Runs on the host backend (builtin registry) when `artifacts/` is
+//! absent, so it works in a fresh offline checkout.
 //!
 //! criterion is not vendorable offline; this is a plain harness=false
 //! bench binary, which also suits these end-to-end (minutes-long)

@@ -32,9 +32,9 @@ pub fn save(path: &Path, params: &[Vec<f32>]) -> Result<()> {
 }
 
 pub fn load(path: &Path) -> Result<Vec<Vec<f32>>> {
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
-    );
+    let file = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let file_len = file.metadata().with_context(|| format!("stat {path:?}"))?.len();
+    let mut f = std::io::BufReader::new(file);
     let mut magic = [0u8; 4];
     f.read_exact(&mut magic)?;
     if &magic != MAGIC {
@@ -43,13 +43,36 @@ pub fn load(path: &Path) -> Result<Vec<Vec<f32>>> {
     let mut u32b = [0u8; 4];
     f.read_exact(&mut u32b)?;
     let count = u32::from_le_bytes(u32b) as usize;
+    // every param needs at least its 8-byte length header
+    let mut remaining = file_len.saturating_sub(8);
+    if (count as u64).saturating_mul(8) > remaining {
+        bail!(
+            "{path:?}: header declares {count} params but only {remaining} \
+             bytes follow — corrupt or truncated checkpoint"
+        );
+    }
     let mut out = Vec::with_capacity(count);
-    for _ in 0..count {
+    for i in 0..count {
         let mut u64b = [0u8; 8];
         f.read_exact(&mut u64b)?;
-        let n = u64::from_le_bytes(u64b) as usize;
-        let mut bytes = vec![0u8; n * 4];
+        remaining -= 8;
+        let n64 = u64::from_le_bytes(u64b);
+        // validate the declared element count against the bytes actually
+        // present BEFORE allocating: a corrupt header must not be able to
+        // request a multi-GiB buffer.
+        let byte_len = n64
+            .checked_mul(4)
+            .filter(|&b| b <= remaining)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "{path:?}: param {i} declares {n64} elements but only \
+                     {remaining} bytes remain — corrupt or truncated checkpoint"
+                )
+            })?;
+        let n = n64 as usize;
+        let mut bytes = vec![0u8; byte_len as usize];
         f.read_exact(&mut bytes)?;
+        remaining -= byte_len;
         let mut p = Vec::with_capacity(n);
         for c in bytes.chunks_exact(4) {
             p.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
@@ -77,6 +100,68 @@ mod tests {
     fn rejects_garbage() {
         let path = std::env::temp_dir().join(format!("misa_bad_{}.bin", std::process::id()));
         std::fs::write(&path, b"nope").unwrap();
+        assert!(load(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_oversized_declared_length() {
+        // magic + count=1 + a param declaring 2^40 elements backed by
+        // 8 actual bytes: load must error out without attempting the
+        // multi-GiB allocation.
+        let path =
+            std::env::temp_dir().join(format!("misa_oversize_{}.bin", std::process::id()));
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"MISA");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&(1u64 << 40).to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 8]);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("corrupt or truncated"), "{err:#}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_overflowing_declared_length() {
+        // u64::MAX elements: n * 4 overflows u64; must be caught by the
+        // checked multiply, not wrap around.
+        let path =
+            std::env::temp_dir().join(format!("misa_overflow_{}.bin", std::process::id()));
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"MISA");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rejects_overdeclared_param_count() {
+        // count says 1000 params but the file ends after the header
+        let path =
+            std::env::temp_dir().join(format!("misa_count_{}.bin", std::process::id()));
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"MISA");
+        bytes.extend_from_slice(&1000u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("1000 params"), "{err:#}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn truncated_data_region_errors() {
+        // well-formed header, param declares 100 elements, only 10 bytes
+        let path =
+            std::env::temp_dir().join(format!("misa_trunc_{}.bin", std::process::id()));
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"MISA");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&100u64.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 10]);
+        std::fs::write(&path, &bytes).unwrap();
         assert!(load(&path).is_err());
         let _ = std::fs::remove_file(&path);
     }

@@ -4,22 +4,31 @@
 //! Layer-3 **Rust coordinator**: it owns the training event loop, the
 //! module-wise importance sampler (the paper's contribution), every
 //! baseline optimizer the paper compares against, the analytical memory
-//! model of Appendix E, the synthetic data substrate, and the PJRT
-//! runtime that executes the AOT-compiled JAX/Pallas compute graphs
-//! (Layers 2/1, built once by `make artifacts`).
+//! model of Appendix E, the synthetic data substrate, and a pluggable
+//! **execution-backend subsystem** that runs the compute graphs.
 //!
-//! Python never runs on the training path — the `misa` binary is
-//! self-contained once `artifacts/` exists.
+//! Two backends implement the execution ABI (`runtime::backend`):
+//!
+//! - **host** (default) — the transformer forward/backward, loss,
+//!   per-parameter gradient norms and fused optimizer updates in pure
+//!   Rust. Trains end-to-end offline: no Python, no artifacts, no
+//!   compiled-graph sidecar.
+//! - **pjrt** (cargo feature `pjrt`) — the AOT path: PJRT client
+//!   executing the XLA/Pallas graphs lowered by `python/compile`
+//!   (`make artifacts`), with device-resident parameters.
 //!
 //! Module map (see DESIGN.md for the full inventory):
 //!
 //! - [`util`] — PRNG, metrics JSONL, mini property-test harness.
 //! - [`tensor`] — host linear algebra for adapter/projection math.
-//! - [`modelspec`] — the parameter/module registry (the L2 ABI).
+//! - [`modelspec`] — the parameter/module registry (the L2 ABI) +
+//!   the builtin model registry (artifact-free mirror of configs.py).
 //! - [`memory`] — Appendix-E analytical peak-memory model + simulated
 //!   device allocator.
 //! - [`data`] — synthetic corpus + task families + dataloaders.
-//! - [`runtime`] — PJRT client wrapper, artifact cache, param store.
+//! - [`runtime`] — `Engine`/`Session` + the `runtime::backend`
+//!   subsystem (`Backend` trait, `HostBackend`, feature-gated
+//!   `PjrtBackend`).
 //! - [`optim`] — MISA (Algorithm 1/2/3) and all baselines: Adam, BAdam,
 //!   LISA, LoRA, DoRA, GaLore, LoRA+MISA.
 //! - [`coordinator`] — trainer orchestration, evaluation, experiments.

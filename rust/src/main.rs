@@ -3,19 +3,25 @@
 //! Subcommands:
 //!   train [--config run.toml] [--model M] [--method NAME] [--steps N] …
 //!   exp <name|all|list> [--full]       regenerate paper tables/figures
-//!   info                               manifest + memory-model summary
+//!   info                               registry + memory-model summary
 //!
-//! Hand-rolled flag parsing — clap is not vendorable offline.
+//! Every subcommand takes `--backend host|pjrt` (default: host — the
+//! pure-Rust backend that needs no artifacts). `--host` is kept as the
+//! legacy switch for "host Adam loops instead of fused kernels".
+//!
+//! Hand-rolled flag parsing — clap is not vendorable offline. Unknown
+//! flags and valued flags missing their value are hard errors.
 
+use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use misa::config::{DataSpec, Doc, RunConfig};
 use misa::coordinator::experiments::{self, ExpCtx};
 use misa::coordinator::Trainer;
 use misa::memory::{self, Arch, Method, Workload};
-use misa::runtime::Engine;
+use misa::runtime::{BackendKind, Engine};
 
 fn usage() -> ! {
     eprintln!(
@@ -23,42 +29,57 @@ fn usage() -> ! {
          USAGE:\n  misa train [--config FILE] [--model M] [--method NAME] [--steps N]\n\
          \x20           [--lr F] [--delta F] [--eta F] [--t-inner N] [--data D]\n\
          \x20           [--pretrain] [--seed N] [--out DIR] [--artifacts DIR]\n\
-         \x20 misa exp <name|all|list> [--full] [--artifacts DIR]\n\
-         \x20 misa info [--artifacts DIR]\n"
+         \x20           [--backend host|pjrt] [--host]\n\
+         \x20 misa exp <name|all|list> [--full] [--artifacts DIR] [--backend B]\n\
+         \x20 misa info [--artifacts DIR] [--backend B]\n"
     );
     std::process::exit(2)
 }
 
+/// Flags that take a value. Anything else starting with `--` must be a
+/// known switch — unknown flags are errors, not silent switches.
+const VALUED_FLAGS: &[&str] = &[
+    "config", "model", "method", "steps", "lr", "delta", "eta", "t-inner", "rank", "alpha",
+    "data", "seed", "out", "artifacts", "backend",
+];
+
+/// Boolean switches.
+const SWITCHES: &[&str] = &["pretrain", "full", "host"];
+
 struct Args {
     positional: Vec<String>,
-    flags: std::collections::HashMap<String, String>,
-    switches: std::collections::HashSet<String>,
+    flags: HashMap<String, String>,
+    switches: HashSet<String>,
 }
 
-fn parse_args(argv: &[String]) -> Args {
+fn parse_args(argv: &[String]) -> Result<Args> {
     let mut a = Args {
         positional: Vec::new(),
-        flags: Default::default(),
-        switches: Default::default(),
+        flags: HashMap::new(),
+        switches: HashSet::new(),
     };
     let mut i = 0;
     while i < argv.len() {
         let arg = &argv[i];
         if let Some(name) = arg.strip_prefix("--") {
-            // switch or valued flag?
-            let takes_value = i + 1 < argv.len() && !argv[i + 1].starts_with("--");
-            if matches!(name, "pretrain" | "full" | "host") || !takes_value {
+            if SWITCHES.contains(&name) {
                 a.switches.insert(name.to_string());
-            } else {
-                a.flags.insert(name.to_string(), argv[i + 1].clone());
+            } else if VALUED_FLAGS.contains(&name) {
+                let val = argv
+                    .get(i + 1)
+                    .filter(|v| !v.starts_with("--"))
+                    .ok_or_else(|| anyhow!("flag --{name} requires a value"))?;
+                a.flags.insert(name.to_string(), val.clone());
                 i += 1;
+            } else {
+                bail!("unknown flag --{name}");
             }
         } else {
             a.positional.push(arg.clone());
         }
         i += 1;
     }
-    a
+    Ok(a)
 }
 
 fn artifact_dir(args: &Args) -> PathBuf {
@@ -66,6 +87,17 @@ fn artifact_dir(args: &Args) -> PathBuf {
         .get("artifacts")
         .map(PathBuf::from)
         .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+fn backend_kind(args: &Args) -> Result<BackendKind> {
+    match args.flags.get("backend") {
+        Some(b) => BackendKind::parse(b),
+        None => Ok(BackendKind::Host),
+    }
+}
+
+fn make_engine(args: &Args) -> Result<Engine> {
+    Engine::with_backend(&artifact_dir(args), backend_kind(args)?)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -115,9 +147,16 @@ fn cmd_train(args: &Args) -> Result<()> {
         ))?)?;
         rc.method = parsed.method;
     }
-    println!("run: model={} method={} data={:?} steps={} lr={}",
-             rc.model, rc.method.label(), rc.data, rc.steps, rc.lr);
-    let mut engine = Engine::new(&artifact_dir(args))?;
+    let mut engine = make_engine(args)?;
+    println!(
+        "run: model={} method={} data={:?} steps={} lr={} backend={}",
+        rc.model,
+        rc.method.label(),
+        rc.data,
+        rc.steps,
+        rc.lr,
+        engine.backend_name()
+    );
     let mut t = Trainer::new(&mut engine, rc.clone())?;
     let eval_every = rc.eval_every.max(1);
     let mut remaining = rc.steps;
@@ -151,7 +190,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
         }
         return Ok(());
     }
-    let mut engine = Engine::new(&artifact_dir(args))?;
+    let mut engine = make_engine(args)?;
     let fast = !args.switches.contains("full");
     let mut ctx = ExpCtx::new(&mut engine, fast);
     if name == "all" {
@@ -172,8 +211,9 @@ fn cmd_exp(args: &Args) -> Result<()> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let engine = Engine::new(&artifact_dir(args))?;
-    println!("platform: {}", engine.client.platform_name());
+    let engine = make_engine(args)?;
+    println!("backend: {}", engine.backend_name());
+    println!("registry: {}", engine.manifest.dir.display());
     println!("configs:");
     for m in &engine.manifest.models {
         let c = &m.config;
@@ -208,7 +248,13 @@ fn main() {
     if argv.is_empty() {
         usage();
     }
-    let args = parse_args(&argv);
+    let args = match parse_args(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e:#}\n");
+            usage();
+        }
+    };
     let result = match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
         Some("exp") => cmd_exp(&args),
@@ -218,5 +264,62 @@ fn main() {
     if let Err(e) = result {
         eprintln!("error: {e:#}");
         std::process::exit(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_positionals_flags_and_switches() {
+        let a = parse_args(&v(&[
+            "train", "--model", "tiny", "--steps", "20", "--pretrain", "--backend", "host",
+        ]))
+        .unwrap();
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.flags.get("model").unwrap(), "tiny");
+        assert_eq!(a.flags.get("steps").unwrap(), "20");
+        assert_eq!(a.flags.get("backend").unwrap(), "host");
+        assert!(a.switches.contains("pretrain"));
+        assert_eq!(backend_kind(&a).unwrap(), BackendKind::Host);
+    }
+
+    #[test]
+    fn unknown_flag_is_an_error() {
+        let err = parse_args(&v(&["train", "--bogus"])).unwrap_err();
+        assert!(err.to_string().contains("--bogus"), "{err}");
+        // previously silently absorbed as a switch
+        assert!(parse_args(&v(&["train", "--bogus", "3"])).is_err());
+    }
+
+    #[test]
+    fn valued_flag_missing_value_is_an_error() {
+        // at end of argv
+        let err = parse_args(&v(&["train", "--steps"])).unwrap_err();
+        assert!(err.to_string().contains("--steps"), "{err}");
+        // followed by another flag
+        assert!(parse_args(&v(&["train", "--steps", "--lr", "0.1"])).is_err());
+    }
+
+    #[test]
+    fn switches_never_consume_values() {
+        let a = parse_args(&v(&["train", "--pretrain", "50"])).unwrap();
+        assert!(a.switches.contains("pretrain"));
+        assert_eq!(a.positional, vec!["train", "50"]);
+    }
+
+    #[test]
+    fn backend_flag_parses_and_rejects() {
+        let a = parse_args(&v(&["info", "--backend", "pjrt"])).unwrap();
+        assert_eq!(backend_kind(&a).unwrap(), BackendKind::Pjrt);
+        let a = parse_args(&v(&["info", "--backend", "tpu"])).unwrap();
+        assert!(backend_kind(&a).is_err());
+        let a = parse_args(&v(&["info"])).unwrap();
+        assert_eq!(backend_kind(&a).unwrap(), BackendKind::Host);
     }
 }

@@ -129,6 +129,18 @@ pub struct ModelConfig {
     pub batch: usize,
 }
 
+impl ModelConfig {
+    /// Per-head dimension (dim / n_heads).
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.n_heads
+    }
+
+    /// Total key/value width (n_kv_heads * head_dim) — GQA.
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim()
+    }
+}
+
 /// A model configuration plus its parameter registry and graph artifacts.
 #[derive(Clone, Debug)]
 pub struct ModelSpec {
@@ -168,6 +180,67 @@ impl ModelSpec {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Builtin registry — mirror of python/compile/configs.py.
+//
+// The HostBackend needs no AOT artifacts, so the model registry must be
+// available without a manifest.txt. These constants are the single Rust
+// copy of the CONFIGS list (the ABI order of `param_specs` is identical).
+// ---------------------------------------------------------------------------
+
+/// The builtin model configurations (python/compile/configs.py CONFIGS).
+pub fn builtin_configs() -> Vec<ModelConfig> {
+    let mk = |name: &str, vocab, dim, n_layers, n_heads, n_kv_heads, ffn_dim, seq_len, batch| {
+        ModelConfig {
+            name: name.to_string(),
+            vocab,
+            dim,
+            n_layers,
+            n_heads,
+            n_kv_heads,
+            ffn_dim,
+            seq_len,
+            batch,
+        }
+    };
+    vec![
+        mk("tiny", 256, 64, 2, 4, 2, 176, 32, 4),
+        mk("small", 512, 128, 4, 4, 2, 344, 64, 8),
+        mk("pt130", 1024, 192, 4, 6, 3, 512, 64, 8),
+        mk("pt350", 1024, 320, 6, 8, 4, 864, 64, 8),
+        mk("e2e", 8192, 768, 12, 12, 6, 2048, 64, 4),
+    ]
+}
+
+/// Build the parameter registry for a configuration, in ABI order —
+/// the Rust mirror of python/compile/configs.py::param_specs.
+pub fn spec_for(config: ModelConfig) -> ModelSpec {
+    let (d, f, v, kd) = (config.dim, config.ffn_dim, config.vocab, config.kv_dim());
+    let mut params = Vec::new();
+    for i in 0..config.n_layers {
+        let layer = i as i32;
+        let p = |suffix: &str| format!("layers.{i}.{suffix}");
+        params.push(ParamSpec { name: p("attn_norm"), kind: ModuleKind::Norm, layer, shape: vec![d] });
+        params.push(ParamSpec { name: p("wq"), kind: ModuleKind::Wq, layer, shape: vec![d, d] });
+        params.push(ParamSpec { name: p("wk"), kind: ModuleKind::Wk, layer, shape: vec![d, kd] });
+        params.push(ParamSpec { name: p("wv"), kind: ModuleKind::Wv, layer, shape: vec![d, kd] });
+        params.push(ParamSpec { name: p("wo"), kind: ModuleKind::Wo, layer, shape: vec![d, d] });
+        params.push(ParamSpec { name: p("mlp_norm"), kind: ModuleKind::Norm, layer, shape: vec![d] });
+        params.push(ParamSpec { name: p("wgate"), kind: ModuleKind::Wgate, layer, shape: vec![d, f] });
+        params.push(ParamSpec { name: p("wup"), kind: ModuleKind::Wup, layer, shape: vec![d, f] });
+        params.push(ParamSpec { name: p("wdown"), kind: ModuleKind::Wdown, layer, shape: vec![f, d] });
+    }
+    params.push(ParamSpec {
+        name: "final_norm".into(),
+        kind: ModuleKind::Norm,
+        layer: -1,
+        shape: vec![d],
+    });
+    params.push(ParamSpec { name: "embed".into(), kind: ModuleKind::Embed, layer: -1, shape: vec![v, d] });
+    params.push(ParamSpec { name: "head".into(), kind: ModuleKind::Head, layer: -1, shape: vec![d, v] });
+    ModelSpec { config, params, graphs: HashMap::new() }
+}
+
 /// The parsed artifact manifest: the L3 entry point.
 #[derive(Clone, Debug)]
 pub struct Manifest {
@@ -178,6 +251,25 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// The artifact-free manifest: builtin model registry, no graphs.
+    /// This is what the host backend runs on in a fresh checkout.
+    pub fn builtin() -> Self {
+        Manifest {
+            dir: PathBuf::from("<builtin>"),
+            models: builtin_configs().into_iter().map(spec_for).collect(),
+            probs: HashMap::new(),
+        }
+    }
+
+    /// Parse `dir/manifest.txt` when present, else the builtin registry.
+    pub fn load_or_builtin(dir: &Path) -> Result<Self> {
+        if dir.join("manifest.txt").exists() {
+            Self::load(dir)
+        } else {
+            Ok(Self::builtin())
+        }
+    }
+
     pub fn load(dir: &Path) -> Result<Self> {
         let path = dir.join("manifest.txt");
         let text = std::fs::read_to_string(&path)
@@ -347,5 +439,51 @@ probs 14 probs.14.hlo.txt
         assert!(m.model("nope").is_err());
         let spec = m.model("tiny").unwrap();
         assert!(m.graph_path(spec, "predict").is_err());
+    }
+
+    #[test]
+    fn builtin_registry_mirrors_configs_py() {
+        let m = Manifest::builtin();
+        assert_eq!(m.models.len(), 5);
+        let tiny = m.model("tiny").unwrap();
+        // 9 params per layer + final_norm + embed + head
+        assert_eq!(tiny.params.len(), 2 * 9 + 3);
+        assert_eq!(tiny.config.kv_dim(), 32);
+        assert_eq!(tiny.config.head_dim(), 16);
+        // ABI order: attn_norm, wq, wk, wv, wo, mlp_norm, wgate, wup, wdown
+        let kinds: Vec<ModuleKind> = tiny.params[..9].iter().map(|p| p.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                ModuleKind::Norm,
+                ModuleKind::Wq,
+                ModuleKind::Wk,
+                ModuleKind::Wv,
+                ModuleKind::Wo,
+                ModuleKind::Norm,
+                ModuleKind::Wgate,
+                ModuleKind::Wup,
+                ModuleKind::Wdown,
+            ]
+        );
+        assert_eq!(tiny.params[1].shape, vec![64, 64]);
+        assert_eq!(tiny.params[2].shape, vec![64, 32]); // GQA: kv_dim
+        assert_eq!(tiny.params[8].shape, vec![176, 64]); // wdown [f, d]
+        let last = &tiny.params[tiny.params.len() - 1];
+        assert_eq!(last.name, "head");
+        assert_eq!(last.shape, vec![64, 256]);
+        // every config has matrix modules for the sampler
+        for spec in &m.models {
+            assert_eq!(
+                spec.matrix_module_indices().len(),
+                7 * spec.config.n_layers
+            );
+        }
+    }
+
+    #[test]
+    fn load_or_builtin_falls_back() {
+        let m = Manifest::load_or_builtin(Path::new("/definitely/not/a/dir")).unwrap();
+        assert_eq!(m.models.len(), 5);
     }
 }

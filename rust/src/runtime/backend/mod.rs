@@ -1,0 +1,115 @@
+//! Execution backends — the subsystem that runs the compute graphs.
+//!
+//! The coordinator (trainer, optimizers, experiments) speaks one small
+//! execution ABI, [`Backend`]: fwd/bwd, predict, the fused-Adam update,
+//! the momentum-tail update, and parameter upload. Two implementations
+//! exist:
+//!
+//! - [`HostBackend`] (default): the full transformer forward/backward,
+//!   masked cross-entropy, per-parameter squared gradient norms, and
+//!   fused Adam in pure Rust — numerically mirroring the JAX oracles in
+//!   `python/compile/kernels/ref.py` and `python/compile/model.py`.
+//!   Runs anywhere, deterministically, with no compiled-graph sidecar.
+//! - `PjrtBackend` (behind the `pjrt` cargo feature): the original
+//!   AOT-artifact path — PJRT client + compiled HLO executables with
+//!   device-resident parameters.
+//!
+//! `Session` owns a `Box<dyn Backend>`; everything above it is
+//! backend-agnostic.
+
+pub mod host;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub use host::HostBackend;
+
+use anyhow::{bail, Result};
+
+use crate::data::Batch;
+use crate::runtime::{EvalOutput, StepOutput};
+
+/// Which backend a run executes on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust host execution (default; no artifacts required).
+    Host,
+    /// PJRT + AOT HLO artifacts (requires the `pjrt` cargo feature and
+    /// an `artifacts/` directory produced by `make artifacts`).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "host" => Ok(BackendKind::Host),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => bail!("unknown backend {other:?} (expected \"host\" or \"pjrt\")"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Host => "host",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// The execution ABI between the coordinator and the compute substrate.
+///
+/// `host` is the registry-ordered host mirror of the parameters owned by
+/// `Session`; backends that keep device-resident copies (PJRT) ignore it
+/// on the execute calls and refresh their copies through `sync_param`.
+pub trait Backend {
+    /// Human-readable backend name ("host" / "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// (Re)upload one parameter from its host mirror. No-op on backends
+    /// that execute directly from host memory.
+    fn sync_param(&mut self, idx: usize, data: &[f32]) -> Result<()>;
+
+    /// One fwd/bwd step: loss, all grads (registry order), and the
+    /// per-parameter squared Frobenius gradient norms.
+    fn fwd_bwd(&self, host: &[Vec<f32>], batch: &Batch) -> Result<StepOutput>;
+
+    /// One eval step: masked loss + per-position teacher-forced hits.
+    fn predict(&self, host: &[Vec<f32>], batch: &Batch) -> Result<EvalOutput>;
+
+    /// Fused Adam update of parameter `idx` (Algorithm 1 lines 9-11, no
+    /// bias correction): updates `p` in place and returns
+    /// `(m', v', sum(g^2))` — the `ref.py::adam_ref` contract.
+    fn adam_update(
+        &mut self,
+        idx: usize,
+        p: &mut Vec<f32>,
+        grad: &[f32],
+        m: &[f32],
+        v: &[f32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)>;
+
+    /// The additional momentum step (Algorithm 1 line 16): updates `p`
+    /// in place — the `ref.py::momentum_tail_ref` contract.
+    fn tail_update(
+        &mut self,
+        idx: usize,
+        p: &mut Vec<f32>,
+        m: &[f32],
+        v: &[f32],
+        lr: f32,
+    ) -> Result<()>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_roundtrip() {
+        assert_eq!(BackendKind::parse("host").unwrap(), BackendKind::Host);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(BackendKind::Host.as_str(), "host");
+        assert_eq!(BackendKind::Pjrt.as_str(), "pjrt");
+    }
+}

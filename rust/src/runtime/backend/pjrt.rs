@@ -1,0 +1,266 @@
+//! `PjrtBackend` — the AOT-artifact execution path (feature `pjrt`).
+//!
+//! This is the original runtime: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute_b`,
+//! with parameters resident as device buffers that are passed by
+//! reference on every step. Only changed modules are re-uploaded
+//! (`sync_param`), and only the output tuple (loss, grads, norms)
+//! crosses back to the host.
+//!
+//! Compiled executables are cached per artifact file in [`PjrtCompiler`]
+//! (owned by `Engine`) and shared across sessions via `Rc`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+use xla::{PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use crate::data::Batch;
+use crate::modelspec::ModelSpec;
+use crate::runtime::backend::Backend;
+use crate::runtime::{EvalOutput, StepOutput};
+
+/// PJRT client + compiled-executable cache (one per `Engine`).
+pub struct PjrtCompiler {
+    pub client: PjRtClient,
+    dir: PathBuf,
+    exe_cache: HashMap<String, Rc<PjRtLoadedExecutable>>,
+}
+
+impl PjrtCompiler {
+    pub fn new(dir: &Path) -> Result<Self> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(PjrtCompiler { client, dir: dir.to_path_buf(), exe_cache: HashMap::new() })
+    }
+
+    /// Load + compile an HLO-text artifact (cached by file name).
+    pub fn load(&mut self, file: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if !self.exe_cache.contains_key(file) {
+            let path = self.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
+            self.exe_cache.insert(file.to_string(), Rc::new(exe));
+        }
+        Ok(Rc::clone(self.exe_cache.get(file).unwrap()))
+    }
+}
+
+/// One session's device residency: parameter buffers + compiled graphs.
+pub struct PjrtBackend {
+    spec: ModelSpec,
+    /// device-resident parameter buffers, registry order
+    device: Vec<PjRtBuffer>,
+    fwd_bwd: Rc<PjRtLoadedExecutable>,
+    predict: Rc<PjRtLoadedExecutable>,
+    /// fused-Adam executable per shape key
+    adam: HashMap<String, Rc<PjRtLoadedExecutable>>,
+    /// momentum-tail executable per shape key
+    tail: HashMap<String, Rc<PjRtLoadedExecutable>>,
+    client: PjRtClient,
+}
+
+impl PjrtBackend {
+    pub fn create(comp: &mut PjrtCompiler, spec: &ModelSpec, host: &[Vec<f32>]) -> Result<Self> {
+        let fwd_bwd = {
+            let f = spec.graphs.get("fwd_bwd").ok_or_else(|| anyhow!("no fwd_bwd graph"))?;
+            comp.load(&f.clone())?
+        };
+        let predict = {
+            let f = spec.graphs.get("predict").ok_or_else(|| anyhow!("no predict graph"))?;
+            comp.load(&f.clone())?
+        };
+        let mut adam = HashMap::new();
+        let mut tail = HashMap::new();
+        for p in &spec.params {
+            let key = p.shape_key();
+            if !adam.contains_key(&key) {
+                if let Some(f) = spec.graphs.get(&format!("adam.{key}")) {
+                    adam.insert(key.clone(), comp.load(&f.clone())?);
+                }
+                if let Some(f) = spec.graphs.get(&format!("tail.{key}")) {
+                    tail.insert(key.clone(), comp.load(&f.clone())?);
+                }
+            }
+        }
+        let mut device = Vec::with_capacity(host.len());
+        for (p, data) in spec.params.iter().zip(host) {
+            device.push(
+                comp.client
+                    .buffer_from_host_buffer(data, &p.shape, None)
+                    .map_err(|e| anyhow!("upload {}: {e:?}", p.name))?,
+            );
+        }
+        Ok(PjrtBackend {
+            spec: spec.clone(),
+            device,
+            fwd_bwd,
+            predict,
+            adam,
+            tail,
+            client: comp.client.clone(),
+        })
+    }
+
+    fn batch_buffers(&self, batch: &Batch) -> Result<[PjRtBuffer; 3]> {
+        let dims = [batch.batch, batch.seq_len];
+        let t = self
+            .client
+            .buffer_from_host_buffer(&batch.tokens, &dims, None)
+            .map_err(|e| anyhow!("tokens upload: {e:?}"))?;
+        let g = self
+            .client
+            .buffer_from_host_buffer(&batch.targets, &dims, None)
+            .map_err(|e| anyhow!("targets upload: {e:?}"))?;
+        let m = self
+            .client
+            .buffer_from_host_buffer(&batch.mask, &dims, None)
+            .map_err(|e| anyhow!("mask upload: {e:?}"))?;
+        Ok([t, g, m])
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn sync_param(&mut self, idx: usize, data: &[f32]) -> Result<()> {
+        let p = &self.spec.params[idx];
+        self.device[idx] = self
+            .client
+            .buffer_from_host_buffer(data, &p.shape, None)
+            .map_err(|e| anyhow!("sync {}: {e:?}", p.name))?;
+        Ok(())
+    }
+
+    fn fwd_bwd(&self, _host: &[Vec<f32>], batch: &Batch) -> Result<StepOutput> {
+        let [t, g, m] = self.batch_buffers(batch)?;
+        let mut args: Vec<&PjRtBuffer> = self.device.iter().collect();
+        args.push(&t);
+        args.push(&g);
+        args.push(&m);
+        let out = self
+            .fwd_bwd
+            .execute_b(&args)
+            .map_err(|e| anyhow!("fwd_bwd execute: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fwd_bwd output: {e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let n = self.spec.params.len();
+        anyhow::ensure!(parts.len() == n + 2, "unexpected output arity {}", parts.len());
+        let loss = parts[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("loss: {e:?}"))?[0];
+        let mut grads = Vec::with_capacity(n);
+        for part in &parts[1..=n] {
+            grads.push(part.to_vec::<f32>().map_err(|e| anyhow!("grad: {e:?}"))?);
+        }
+        let sq_norms = parts[n + 1]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("sq_norms: {e:?}"))?;
+        Ok(StepOutput { loss, grads, sq_norms })
+    }
+
+    fn predict(&self, _host: &[Vec<f32>], batch: &Batch) -> Result<EvalOutput> {
+        let [t, g, m] = self.batch_buffers(batch)?;
+        let mut args: Vec<&PjRtBuffer> = self.device.iter().collect();
+        args.push(&t);
+        args.push(&g);
+        args.push(&m);
+        let out = self
+            .predict
+            .execute_b(&args)
+            .map_err(|e| anyhow!("predict execute: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("predict output: {e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let loss = parts[0].to_vec::<f32>().map_err(|e| anyhow!("loss: {e:?}"))?[0];
+        let correct = parts[1]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("correct: {e:?}"))?;
+        Ok(EvalOutput { loss, correct })
+    }
+
+    /// Fused Adam update (Pallas kernel): consumes grad + moments,
+    /// updates the host mirror + device buffer, returns (m', v', sum(g^2)).
+    fn adam_update(
+        &mut self,
+        idx: usize,
+        p: &mut Vec<f32>,
+        grad: &[f32],
+        m: &[f32],
+        v: &[f32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        let shape = self.spec.params[idx].shape.clone();
+        let key = self.spec.params[idx].shape_key();
+        let exe = self
+            .adam
+            .get(&key)
+            .ok_or_else(|| anyhow!("no adam graph for shape {key}"))?;
+        let gbuf = self.client.buffer_from_host_buffer(grad, &shape, None)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let mbuf = self.client.buffer_from_host_buffer(m, &shape, None)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let vbuf = self.client.buffer_from_host_buffer(v, &shape, None)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let lrbuf = self.client.buffer_from_host_buffer(&[lr], &[1], None)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let args: Vec<&PjRtBuffer> = vec![&self.device[idx], &gbuf, &mbuf, &vbuf, &lrbuf];
+        let out = exe.execute_b(&args).map_err(|e| anyhow!("adam execute: {e:?}"))?;
+        let lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+        let p_new = parts[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let m_new = parts[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let v_new = parts[2].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let sq = parts[3].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0];
+        *p = p_new;
+        self.sync_param(idx, p)?;
+        Ok((m_new, v_new, sq))
+    }
+
+    /// The additional momentum step (Alg. 1 line 16) via the Pallas tail
+    /// kernel: updates the host mirror + device buffer.
+    fn tail_update(
+        &mut self,
+        idx: usize,
+        p: &mut Vec<f32>,
+        m: &[f32],
+        v: &[f32],
+        lr: f32,
+    ) -> Result<()> {
+        let shape = self.spec.params[idx].shape.clone();
+        let key = self.spec.params[idx].shape_key();
+        let exe = self
+            .tail
+            .get(&key)
+            .ok_or_else(|| anyhow!("no tail graph for shape {key}"))?;
+        let mbuf = self.client.buffer_from_host_buffer(m, &shape, None)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let vbuf = self.client.buffer_from_host_buffer(v, &shape, None)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let lrbuf = self.client.buffer_from_host_buffer(&[lr], &[1], None)
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let args: Vec<&PjRtBuffer> = vec![&self.device[idx], &mbuf, &vbuf, &lrbuf];
+        let out = exe.execute_b(&args).map_err(|e| anyhow!("tail execute: {e:?}"))?;
+        let lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
+        let p_new = lit
+            .to_tuple1()
+            .map_err(|e| anyhow!("{e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        *p = p_new;
+        self.sync_param(idx, p)
+    }
+}

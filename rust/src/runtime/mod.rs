@@ -1,73 +1,38 @@
-//! PJRT runtime: load AOT artifacts, manage device-resident parameters,
-//! execute the training/eval/optimizer graphs.
+//! Runtime: execution engines, model sessions, parameter initialization.
 //!
-//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute_b`.
-//! Parameters live as device buffers (`PjRtBuffer`) and are passed by
-//! reference on every step — only changed modules are re-uploaded, and
-//! only the output tuple (loss, grads, norms) crosses back to the host.
+//! The runtime is split into a thin coordinator-facing layer (this
+//! module: [`Engine`], [`Session`], [`StepOutput`], [`EvalOutput`]) and
+//! the pluggable [`backend`] subsystem that actually executes the
+//! compute:
+//!
+//! - [`backend::HostBackend`] (default) — pure-Rust transformer
+//!   fwd/bwd + fused optimizer math; no artifacts, runs anywhere.
+//! - `backend::PjrtBackend` (cargo feature `pjrt`) — the AOT path:
+//!   PJRT client, compiled HLO executables, device-resident parameters.
+//!
+//! `Session` owns the host parameter mirror (the source of truth) and a
+//! `Box<dyn Backend>`; the trainer and every optimizer are
+//! backend-agnostic.
 
-use std::collections::HashMap;
+pub mod backend;
+
 use std::path::Path;
-use std::rc::Rc;
 
-use anyhow::{anyhow, Result};
-use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+use anyhow::Result;
 
 use crate::modelspec::{Manifest, ModelSpec, ModuleKind};
 use crate::util::Rng;
 
-/// Wrapper over the PJRT CPU client + compiled-executable cache.
-pub struct Engine {
-    pub client: PjRtClient,
-    pub manifest: Manifest,
-    exe_cache: HashMap<String, Rc<PjRtLoadedExecutable>>,
-}
-
-impl Engine {
-    pub fn new(artifact_dir: &Path) -> Result<Self> {
-        let manifest = Manifest::load(artifact_dir)?;
-        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Engine { client, manifest, exe_cache: HashMap::new() })
-    }
-
-    /// Load + compile an HLO-text artifact (cached by file name).
-    pub fn load(&mut self, file: &str) -> Result<Rc<PjRtLoadedExecutable>> {
-        if !self.exe_cache.contains_key(file) {
-            let path = self.manifest.dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
-            self.exe_cache.insert(file.to_string(), Rc::new(exe));
-        }
-        Ok(Rc::clone(self.exe_cache.get(file).unwrap()))
-    }
-
-    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(data, dims, None)
-            .map_err(|e| anyhow!("upload f32 {dims:?}: {e:?}"))
-    }
-
-    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(data, dims, None)
-            .map_err(|e| anyhow!("upload i32 {dims:?}: {e:?}"))
-    }
-}
+pub use backend::{Backend, BackendKind, HostBackend};
+#[cfg(feature = "pjrt")]
+pub use backend::pjrt::PjrtBackend;
 
 /// Output of one fwd/bwd execution.
 pub struct StepOutput {
     pub loss: f32,
     /// per-parameter gradients, registry order
     pub grads: Vec<Vec<f32>>,
-    /// per-parameter squared Frobenius norms (Pallas by-product)
+    /// per-parameter squared Frobenius norms (kernel by-product)
     pub sq_norms: Vec<f32>,
 }
 
@@ -78,20 +43,106 @@ pub struct EvalOutput {
     pub correct: Vec<f32>,
 }
 
-/// A model session: device-resident parameters + the compiled graphs.
+/// The execution engine: model registry + backend factory.
+///
+/// With the host backend the registry comes from `artifacts/manifest.txt`
+/// when present and falls back to the builtin registry (the Rust mirror
+/// of python/compile/configs.py) otherwise, so a fresh checkout trains
+/// with no compiled-graph sidecar. The PJRT backend requires a real
+/// manifest plus the `pjrt` cargo feature.
+pub struct Engine {
+    pub manifest: Manifest,
+    pub kind: BackendKind,
+    #[cfg(feature = "pjrt")]
+    compiler: Option<backend::pjrt::PjrtCompiler>,
+}
+
+impl Engine {
+    /// Host-backend engine rooted at `artifact_dir` (manifest optional).
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        Self::with_backend(artifact_dir, BackendKind::Host)
+    }
+
+    /// Host-backend engine on the builtin registry (tests, benches).
+    pub fn host() -> Self {
+        Engine {
+            manifest: Manifest::builtin(),
+            kind: BackendKind::Host,
+            #[cfg(feature = "pjrt")]
+            compiler: None,
+        }
+    }
+
+    /// Engine with an explicit backend selection.
+    pub fn with_backend(artifact_dir: &Path, kind: BackendKind) -> Result<Self> {
+        match kind {
+            BackendKind::Host => {
+                let manifest = Manifest::load_or_builtin(artifact_dir)?;
+                Ok(Engine {
+                    manifest,
+                    kind,
+                    #[cfg(feature = "pjrt")]
+                    compiler: None,
+                })
+            }
+            BackendKind::Pjrt => Self::new_pjrt(artifact_dir),
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn new_pjrt(artifact_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let compiler = backend::pjrt::PjrtCompiler::new(artifact_dir)?;
+        Ok(Engine { manifest, kind: BackendKind::Pjrt, compiler: Some(compiler) })
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn new_pjrt(_artifact_dir: &Path) -> Result<Self> {
+        anyhow::bail!(
+            "this binary was built without the `pjrt` feature; \
+             rebuild with `cargo build --features pjrt` or use the host backend"
+        )
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.kind.as_str()
+    }
+
+    /// Construct the session backend for `spec`, uploading `host` where
+    /// the backend keeps device-resident parameters.
+    fn make_backend(&mut self, spec: &ModelSpec, host: &[Vec<f32>]) -> Result<Box<dyn Backend>> {
+        match self.kind {
+            BackendKind::Host => {
+                let _ = host; // host backend executes from the session mirror
+                Ok(Box::new(HostBackend::new(spec.clone())?))
+            }
+            BackendKind::Pjrt => self.make_pjrt_backend(spec, host),
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn make_pjrt_backend(&mut self, spec: &ModelSpec, host: &[Vec<f32>])
+                         -> Result<Box<dyn Backend>> {
+        let comp = self
+            .compiler
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("pjrt engine has no compiler"))?;
+        Ok(Box::new(backend::pjrt::PjrtBackend::create(comp, spec, host)?))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn make_pjrt_backend(&mut self, _spec: &ModelSpec, _host: &[Vec<f32>])
+                         -> Result<Box<dyn Backend>> {
+        anyhow::bail!("built without the `pjrt` feature")
+    }
+}
+
+/// A model session: the host parameter mirror + the execution backend.
 pub struct Session {
     pub spec: ModelSpec,
-    /// host mirror of the parameters, registry order
+    /// host mirror of the parameters, registry order (source of truth)
     pub host: Vec<Vec<f32>>,
-    /// device-resident parameter buffers, registry order
-    device: Vec<PjRtBuffer>,
-    fwd_bwd: Rc<PjRtLoadedExecutable>,
-    predict: Rc<PjRtLoadedExecutable>,
-    /// fused-Adam executable per shape key
-    adam: HashMap<String, Rc<PjRtLoadedExecutable>>,
-    /// momentum-tail executable per shape key
-    tail: HashMap<String, Rc<PjRtLoadedExecutable>>,
-    client: PjRtClient,
+    backend: Box<dyn Backend>,
 }
 
 impl Session {
@@ -105,51 +156,21 @@ impl Session {
     /// Build a session around existing host parameters (checkpoint load).
     pub fn with_params(engine: &mut Engine, spec: ModelSpec, host: Vec<Vec<f32>>) -> Result<Self> {
         anyhow::ensure!(host.len() == spec.params.len(), "param count mismatch");
-        let fwd_bwd = {
-            let f = spec.graphs.get("fwd_bwd").ok_or_else(|| anyhow!("no fwd_bwd graph"))?;
-            engine.load(&f.clone())?
-        };
-        let predict = {
-            let f = spec.graphs.get("predict").ok_or_else(|| anyhow!("no predict graph"))?;
-            engine.load(&f.clone())?
-        };
-        let mut adam = HashMap::new();
-        let mut tail = HashMap::new();
-        for p in &spec.params {
-            let key = p.shape_key();
-            if !adam.contains_key(&key) {
-                if let Some(f) = spec.graphs.get(&format!("adam.{key}")) {
-                    adam.insert(key.clone(), engine.load(&f.clone())?);
-                }
-                if let Some(f) = spec.graphs.get(&format!("tail.{key}")) {
-                    tail.insert(key.clone(), engine.load(&f.clone())?);
-                }
-            }
-        }
-        let mut device = Vec::with_capacity(host.len());
         for (p, data) in spec.params.iter().zip(&host) {
-            device.push(engine.upload_f32(data, &p.shape)?);
+            anyhow::ensure!(data.len() == p.numel(), "param {} size mismatch", p.name);
         }
-        Ok(Session {
-            spec,
-            host,
-            device,
-            fwd_bwd,
-            predict,
-            adam,
-            tail,
-            client: engine.client.clone(),
-        })
+        let backend = engine.make_backend(&spec, &host)?;
+        Ok(Session { spec, host, backend })
+    }
+
+    /// Name of the executing backend ("host" / "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     /// Re-upload one parameter from its host mirror.
     pub fn sync_param(&mut self, idx: usize) -> Result<()> {
-        let p = &self.spec.params[idx];
-        self.device[idx] = self
-            .client
-            .buffer_from_host_buffer(&self.host[idx], &p.shape, None)
-            .map_err(|e| anyhow!("sync {}: {e:?}", p.name))?;
-        Ok(())
+        self.backend.sync_param(idx, &self.host[idx])
     }
 
     /// Re-upload a set of parameters.
@@ -160,86 +181,27 @@ impl Session {
         Ok(())
     }
 
-    /// Overwrite one parameter (host + device).
+    /// Overwrite one parameter (host mirror + backend copy).
     pub fn set_param(&mut self, idx: usize, data: Vec<f32>) -> Result<()> {
         anyhow::ensure!(data.len() == self.spec.params[idx].numel(), "size mismatch");
         self.host[idx] = data;
         self.sync_param(idx)
     }
 
-    fn batch_buffers(&self, batch: &crate::data::Batch) -> Result<[PjRtBuffer; 3]> {
-        let dims = [batch.batch, batch.seq_len];
-        let t = self
-            .client
-            .buffer_from_host_buffer(&batch.tokens, &dims, None)
-            .map_err(|e| anyhow!("tokens upload: {e:?}"))?;
-        let g = self
-            .client
-            .buffer_from_host_buffer(&batch.targets, &dims, None)
-            .map_err(|e| anyhow!("targets upload: {e:?}"))?;
-        let m = self
-            .client
-            .buffer_from_host_buffer(&batch.mask, &dims, None)
-            .map_err(|e| anyhow!("mask upload: {e:?}"))?;
-        Ok([t, g, m])
-    }
-
-    /// One fwd/bwd step: returns loss, all grads, and the Pallas-computed
-    /// per-parameter squared gradient norms.
+    /// One fwd/bwd step: returns loss, all grads, and the per-parameter
+    /// squared gradient norms (the sampler's importance indicator).
     pub fn fwd_bwd(&self, batch: &crate::data::Batch) -> Result<StepOutput> {
-        let [t, g, m] = self.batch_buffers(batch)?;
-        let mut args: Vec<&PjRtBuffer> = self.device.iter().collect();
-        args.push(&t);
-        args.push(&g);
-        args.push(&m);
-        let out = self
-            .fwd_bwd
-            .execute_b(&args)
-            .map_err(|e| anyhow!("fwd_bwd execute: {e:?}"))?;
-        let lit = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fwd_bwd output: {e:?}"))?;
-        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        let n = self.spec.params.len();
-        anyhow::ensure!(parts.len() == n + 2, "unexpected output arity {}", parts.len());
-        let loss = parts[0]
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("loss: {e:?}"))?[0];
-        let mut grads = Vec::with_capacity(n);
-        for part in &parts[1..=n] {
-            grads.push(part.to_vec::<f32>().map_err(|e| anyhow!("grad: {e:?}"))?);
-        }
-        let sq_norms = parts[n + 1]
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("sq_norms: {e:?}"))?;
-        Ok(StepOutput { loss, grads, sq_norms })
+        self.backend.fwd_bwd(&self.host, batch)
     }
 
     /// One eval step via the predict graph.
     pub fn predict(&self, batch: &crate::data::Batch) -> Result<EvalOutput> {
-        let [t, g, m] = self.batch_buffers(batch)?;
-        let mut args: Vec<&PjRtBuffer> = self.device.iter().collect();
-        args.push(&t);
-        args.push(&g);
-        args.push(&m);
-        let out = self
-            .predict
-            .execute_b(&args)
-            .map_err(|e| anyhow!("predict execute: {e:?}"))?;
-        let lit = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("predict output: {e:?}"))?;
-        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        let loss = parts[0].to_vec::<f32>().map_err(|e| anyhow!("loss: {e:?}"))?[0];
-        let correct = parts[1]
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("correct: {e:?}"))?;
-        Ok(EvalOutput { loss, correct })
+        self.backend.predict(&self.host, batch)
     }
 
-    /// Fused Adam update (Pallas kernel) of parameter `idx` on the hot
-    /// path: consumes grad + moments, updates host+device param in place,
-    /// returns (m', v', sum(g^2)).
+    /// Fused Adam update of parameter `idx` on the hot path: consumes
+    /// grad + moments, updates the parameter in place (host mirror and
+    /// any backend copy), returns (m', v', sum(g^2)).
     pub fn adam_update(
         &mut self,
         idx: usize,
@@ -248,60 +210,18 @@ impl Session {
         v: &[f32],
         lr: f32,
     ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
-        let p = &self.spec.params[idx];
-        let key = p.shape_key();
-        let exe = self
-            .adam
-            .get(&key)
-            .ok_or_else(|| anyhow!("no adam graph for shape {key}"))?;
-        let shape = &p.shape;
-        let gbuf = self.client.buffer_from_host_buffer(grad, shape, None)
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let mbuf = self.client.buffer_from_host_buffer(m, shape, None)
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let vbuf = self.client.buffer_from_host_buffer(v, shape, None)
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let lrbuf = self.client.buffer_from_host_buffer(&[lr], &[1], None)
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let args: Vec<&PjRtBuffer> = vec![&self.device[idx], &gbuf, &mbuf, &vbuf, &lrbuf];
-        let out = exe.execute_b(&args).map_err(|e| anyhow!("adam execute: {e:?}"))?;
-        let lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
-        let parts = lit.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
-        let p_new = parts[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
-        let m_new = parts[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
-        let v_new = parts[2].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
-        let sq = parts[3].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?[0];
-        self.host[idx] = p_new;
-        self.sync_param(idx)?;
-        Ok((m_new, v_new, sq))
+        let mut p = std::mem::take(&mut self.host[idx]);
+        let result = self.backend.adam_update(idx, &mut p, grad, m, v, lr);
+        self.host[idx] = p;
+        result
     }
 
-    /// The additional momentum step (Alg. 1 line 16) via the Pallas tail
-    /// kernel.
+    /// The additional momentum step (Alg. 1 line 16).
     pub fn tail_update(&mut self, idx: usize, m: &[f32], v: &[f32], lr: f32) -> Result<()> {
-        let p = &self.spec.params[idx];
-        let key = p.shape_key();
-        let exe = self
-            .tail
-            .get(&key)
-            .ok_or_else(|| anyhow!("no tail graph for shape {key}"))?;
-        let shape = &p.shape;
-        let mbuf = self.client.buffer_from_host_buffer(m, shape, None)
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let vbuf = self.client.buffer_from_host_buffer(v, shape, None)
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let lrbuf = self.client.buffer_from_host_buffer(&[lr], &[1], None)
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let args: Vec<&PjRtBuffer> = vec![&self.device[idx], &mbuf, &vbuf, &lrbuf];
-        let out = exe.execute_b(&args).map_err(|e| anyhow!("tail execute: {e:?}"))?;
-        let lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
-        let p_new = lit
-            .to_tuple1()
-            .map_err(|e| anyhow!("{e:?}"))?
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("{e:?}"))?;
-        self.host[idx] = p_new;
-        self.sync_param(idx)
+        let mut p = std::mem::take(&mut self.host[idx]);
+        let result = self.backend.tail_update(idx, &mut p, m, v, lr);
+        self.host[idx] = p;
+        result
     }
 }
 
@@ -326,7 +246,44 @@ pub fn init_params(spec: &ModelSpec, seed: u64) -> Vec<Vec<f32>> {
         .collect()
 }
 
-/// Helper: extract a Literal's f32 data.
-pub fn literal_f32(lit: &Literal) -> Result<Vec<f32>> {
-    lit.to_vec::<f32>().map_err(|e| anyhow!("literal_f32: {e:?}"))
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_host_serves_builtin_models() {
+        let mut eng = Engine::host();
+        assert_eq!(eng.backend_name(), "host");
+        let sess = Session::create(&mut eng, "tiny", 0).unwrap();
+        assert_eq!(sess.backend_name(), "host");
+        assert_eq!(sess.host.len(), sess.spec.params.len());
+    }
+
+    #[test]
+    fn engine_new_falls_back_without_artifacts() {
+        let eng = Engine::new(Path::new("/definitely/not/artifacts")).unwrap();
+        assert!(eng.manifest.model("small").is_ok());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_backend_requires_feature() {
+        let err = match Engine::with_backend(Path::new("artifacts"), BackendKind::Pjrt) {
+            Ok(_) => panic!("pjrt must be rejected without the feature"),
+            Err(e) => e,
+        };
+        assert!(format!("{err:#}").contains("pjrt"));
+    }
+
+    #[test]
+    fn init_params_shapes_and_norm_fill() {
+        let spec = crate::modelspec::Manifest::builtin().model("tiny").unwrap().clone();
+        let host = init_params(&spec, 7);
+        for (p, data) in spec.params.iter().zip(&host) {
+            assert_eq!(data.len(), p.numel());
+            if p.kind == ModuleKind::Norm {
+                assert!(data.iter().all(|&x| x == 1.0));
+            }
+        }
+    }
 }

@@ -1,0 +1,252 @@
+//! HostBackend numerics: finite-difference gradient checks against the
+//! hand-derived backward pass, and the sq_norms/fused-update contracts
+//! (`python/compile/kernels/ref.py` semantics).
+
+use misa::data::Batch;
+use misa::modelspec::{spec_for, ModelConfig, ModelSpec};
+use misa::optim::{AdamHyper, AdamState};
+use misa::runtime::{init_params, Backend, HostBackend};
+use misa::util::Rng;
+
+/// A micro model: 1 layer, GQA (2 query heads over 1 kv head), RoPE-even
+/// head_dim — big enough to exercise every code path, small enough for
+/// dense finite differencing.
+fn micro_spec() -> ModelSpec {
+    spec_for(ModelConfig {
+        name: "micro".into(),
+        vocab: 32,
+        dim: 8,
+        n_layers: 1,
+        n_heads: 2,
+        n_kv_heads: 1,
+        ffn_dim: 12,
+        seq_len: 4,
+        batch: 2,
+    })
+}
+
+/// A two-layer variant so cross-layer backprop (residual stream into a
+/// lower layer) is also covered.
+fn micro_spec_2l() -> ModelSpec {
+    spec_for(ModelConfig {
+        name: "micro2".into(),
+        vocab: 32,
+        dim: 8,
+        n_layers: 2,
+        n_heads: 2,
+        n_kv_heads: 2,
+        ffn_dim: 10,
+        seq_len: 4,
+        batch: 2,
+    })
+}
+
+fn random_batch(spec: &ModelSpec, seed: u64) -> Batch {
+    let mc = &spec.config;
+    let (b, s, v) = (mc.batch, mc.seq_len, mc.vocab);
+    let mut rng = Rng::new(seed);
+    let n = b * s;
+    let tokens: Vec<i32> = (0..n).map(|_| rng.below(v) as i32).collect();
+    let targets: Vec<i32> = (0..n).map(|_| rng.below(v) as i32).collect();
+    // mixed mask: some positions supervised, some not
+    let mask: Vec<f32> = (0..n).map(|i| if i % 3 == 0 { 0.0 } else { 1.0 }).collect();
+    Batch { batch: b, seq_len: s, tokens, targets, mask, kinds: vec![None; b] }
+}
+
+/// Central finite difference of the f64 loss along one coordinate.
+fn fd_at(be: &HostBackend, host: &[Vec<f32>], batch: &Batch, pi: usize, j: usize,
+         eps: f32) -> f64 {
+    let mut plus = host.to_vec();
+    plus[pi][j] += eps;
+    let mut minus = host.to_vec();
+    minus[pi][j] -= eps;
+    let lp = be.loss_f64(&plus, batch).unwrap();
+    let lm = be.loss_f64(&minus, batch).unwrap();
+    (lp - lm) / (2.0 * eps as f64)
+}
+
+#[test]
+fn gradients_match_finite_differences_per_param() {
+    for (spec, seed) in [(micro_spec(), 11u64), (micro_spec_2l(), 13)] {
+        let host = init_params(&spec, seed);
+        let be = HostBackend::new(spec.clone()).unwrap();
+        let batch = random_batch(&spec, seed ^ 0xBA7C4);
+        let out = be.fwd_bwd(&host, &batch).unwrap();
+        assert!(out.loss.is_finite());
+        let mut rng = Rng::new(seed ^ 0xFD);
+        let eps = 1e-2f32;
+        // probe two random coordinates of every registry parameter —
+        // norms, attention, MLP, embed and head all get checked
+        for (pi, p) in spec.params.iter().enumerate() {
+            for _ in 0..2 {
+                let j = rng.below(p.numel());
+                let fd = fd_at(&be, &host, &batch, pi, j, eps);
+                let an = out.grads[pi][j] as f64;
+                assert!(
+                    (fd - an).abs() <= 1.5e-3 + 0.02 * fd.abs().max(an.abs()),
+                    "{} ({}): coord {j} analytic {an} vs fd {fd}",
+                    p.name,
+                    spec.config.name,
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn directional_derivative_matches_gradient() {
+    // aggregate check over ALL coordinates at once: d/dε L(p + ε·u)
+    // must equal <∇L, u> for random directions u
+    let spec = micro_spec();
+    let host = init_params(&spec, 3);
+    let be = HostBackend::new(spec.clone()).unwrap();
+    let batch = random_batch(&spec, 17);
+    let out = be.fwd_bwd(&host, &batch).unwrap();
+    let mut rng = Rng::new(23);
+    for trial in 0..4 {
+        let dirs: Vec<Vec<f32>> = spec
+            .params
+            .iter()
+            .map(|p| {
+                let mut d = vec![0.0f32; p.numel()];
+                rng.fill_normal(&mut d, 1.0);
+                d
+            })
+            .collect();
+        let eps = 5e-3f32;
+        let mut plus = host.clone();
+        let mut minus = host.clone();
+        for (pi, dir) in dirs.iter().enumerate() {
+            for (j, &u) in dir.iter().enumerate() {
+                plus[pi][j] += eps * u;
+                minus[pi][j] -= eps * u;
+            }
+        }
+        let lp = be.loss_f64(&plus, &batch).unwrap();
+        let lm = be.loss_f64(&minus, &batch).unwrap();
+        let fd = (lp - lm) / (2.0 * eps as f64);
+        let analytic: f64 = out
+            .grads
+            .iter()
+            .zip(&dirs)
+            .map(|(g, u)| {
+                g.iter().zip(u).map(|(&a, &b)| (a as f64) * (b as f64)).sum::<f64>()
+            })
+            .sum();
+        let tol = 2e-3 + 0.02 * analytic.abs().max(fd.abs());
+        assert!(
+            (fd - analytic).abs() <= tol,
+            "trial {trial}: directional fd {fd} vs analytic {analytic}"
+        );
+    }
+}
+
+#[test]
+fn sq_norms_equal_sum_of_squared_grads() {
+    let spec = micro_spec_2l();
+    let host = init_params(&spec, 5);
+    let be = HostBackend::new(spec.clone()).unwrap();
+    let batch = random_batch(&spec, 29);
+    let out = be.fwd_bwd(&host, &batch).unwrap();
+    assert_eq!(out.sq_norms.len(), spec.params.len());
+    for (i, g) in out.grads.iter().enumerate() {
+        let want: f64 = g.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        let got = out.sq_norms[i] as f64;
+        assert!(
+            (want - got).abs() <= 1e-4 * want.max(1e-9),
+            "param {i}: sq_norm {got} vs sum-of-squares {want}"
+        );
+    }
+}
+
+#[test]
+fn all_zero_mask_is_safe() {
+    // denom clamps to 1 (python: max(sum(mask), 1)); loss and grads are
+    // all zero, not NaN
+    let spec = micro_spec();
+    let host = init_params(&spec, 7);
+    let be = HostBackend::new(spec.clone()).unwrap();
+    let mut batch = random_batch(&spec, 31);
+    batch.mask.iter_mut().for_each(|m| *m = 0.0);
+    let out = be.fwd_bwd(&host, &batch).unwrap();
+    assert_eq!(out.loss, 0.0);
+    for g in &out.grads {
+        assert!(g.iter().all(|&x| x == 0.0));
+    }
+}
+
+#[test]
+fn out_of_vocab_tokens_are_rejected() {
+    let spec = micro_spec();
+    let host = init_params(&spec, 7);
+    let be = HostBackend::new(spec.clone()).unwrap();
+    let mut batch = random_batch(&spec, 37);
+    batch.tokens[0] = spec.config.vocab as i32; // one past the end
+    assert!(be.fwd_bwd(&host, &batch).is_err());
+    let mut batch2 = random_batch(&spec, 37);
+    batch2.targets[1] = -1;
+    assert!(be.predict(&host, &batch2).is_err());
+}
+
+#[test]
+fn predict_correct_flags_are_binary_and_loss_matches() {
+    let spec = micro_spec_2l();
+    let host = init_params(&spec, 9);
+    let be = HostBackend::new(spec.clone()).unwrap();
+    let batch = random_batch(&spec, 41);
+    let a = be.fwd_bwd(&host, &batch).unwrap();
+    let e = be.predict(&host, &batch).unwrap();
+    assert!((a.loss - e.loss).abs() < 1e-5);
+    assert_eq!(e.correct.len(), batch.batch * batch.seq_len);
+    assert!(e.correct.iter().all(|&c| c == 0.0 || c == 1.0));
+}
+
+#[test]
+fn fused_updates_match_ref_py_oracles() {
+    // adam_update == ref.py::adam_ref; tail_update == momentum_tail_ref
+    let spec = micro_spec();
+    let mut be = HostBackend::new(spec).unwrap();
+    let mut rng = Rng::new(43);
+    let n = 24;
+    let mut p: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let g: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let m: Vec<f32> = (0..n).map(|_| 0.1 * rng.normal() as f32).collect();
+    let v: Vec<f32> = (0..n).map(|_| (rng.normal() as f32).powi(2)).collect();
+    let p0 = p.clone();
+    let (m1, v1, sq) = be.adam_update(0, &mut p, &g, &m, &v, 1e-2).unwrap();
+    let h = AdamHyper::default();
+    let mut want_p = p0.clone();
+    let mut st = AdamState { m: m.clone(), v: v.clone() };
+    st.step(&mut want_p, &g, 1e-2, h);
+    for i in 0..n {
+        assert!((p[i] - want_p[i]).abs() < 1e-6);
+        assert!((m1[i] - st.m[i]).abs() < 1e-7);
+        assert!((v1[i] - st.v[i]).abs() < 1e-7);
+    }
+    let want_sq: f64 = g.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    assert!((sq as f64 - want_sq).abs() < 1e-3 * want_sq);
+    // momentum tail
+    let mut p_tail = p.clone();
+    be.tail_update(0, &mut p_tail, &m1, &v1, 1e-2).unwrap();
+    let mut want_tail = p.clone();
+    let st2 = AdamState { m: m1.clone(), v: v1.clone() };
+    st2.momentum_tail(&mut want_tail, 1e-2, h);
+    for i in 0..n {
+        assert!((p_tail[i] - want_tail[i]).abs() < 1e-6);
+    }
+    // mismatched lengths are rejected
+    assert!(be.adam_update(0, &mut p, &g[..n - 1], &m, &v, 1e-2).is_err());
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let spec = micro_spec_2l();
+    let host = init_params(&spec, 13);
+    let be = HostBackend::new(spec.clone()).unwrap();
+    let batch = random_batch(&spec, 47);
+    let a = be.fwd_bwd(&host, &batch).unwrap();
+    let b = be.fwd_bwd(&host, &batch).unwrap();
+    assert_eq!(a.loss, b.loss);
+    assert_eq!(a.grads, b.grads);
+    assert_eq!(a.sq_norms, b.sq_norms);
+}

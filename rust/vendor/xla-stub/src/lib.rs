@@ -1,0 +1,137 @@
+//! Offline **stub** of the `xla` PJRT bindings.
+//!
+//! This crate exists so the `misa` coordinator's `pjrt` feature compiles
+//! in environments where the real XLA/PJRT binding (and its C++
+//! dependency closure) is not vendorable. It reproduces exactly the API
+//! surface `misa::runtime::backend::pjrt` consumes; every operation that
+//! would touch a real PJRT runtime returns an error at runtime instead.
+//!
+//! To run against a real PJRT build, replace this path dependency with
+//! the real `xla` crate (same signatures) via a `[patch]` section or by
+//! editing `rust/Cargo.toml`.
+
+/// Stub error: carries a message explaining that no PJRT runtime exists.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: PJRT runtime not available (offline `xla` stub); \
+         link a real xla binding to use the pjrt backend"
+    )))
+}
+
+/// Element types accepted by `buffer_from_host_buffer`.
+pub trait NativeType: Copy {}
+
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u32 {}
+impl NativeType for u8 {}
+
+/// PJRT client handle (stub).
+#[derive(Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Device-resident buffer handle (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// Host-side literal value (stub).
+pub struct Literal;
+
+impl Literal {
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        unavailable("Literal::to_tuple1")
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Parsed HLO module proto (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation handle (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_errors() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+        let exe = PjRtLoadedExecutable;
+        assert!(exe.execute_b(&[]).is_err());
+        let lit = Literal;
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}
