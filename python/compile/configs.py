@@ -117,7 +117,7 @@ def unique_matrix_shapes(cfg: ModelConfig) -> List[Tuple[int, ...]]:
 
 # ---------------------------------------------------------------------------
 # The artifact set. Sizes are scaled-down substitutes for the paper's
-# testbeds (see DESIGN.md Sec. 3): "tiny" drives tests, "small" drives the
+# testbeds (see DESIGN.md Sec. 4): "tiny" drives tests, "small" drives the
 # fine-tuning tables, "pt130"/"pt350" are the pre-training analogues of
 # LLaMA2-130M/350M (Table 6 / Fig. 4), "e2e" is the ~100M-parameter
 # end-to-end training example required by examples/pretrain_e2e.rs.

@@ -1,0 +1,92 @@
+//! `cargo bench --bench serve` — serving-path benchmarks on the host
+//! backend: prefill latency, per-token decode latency, single-stream
+//! generation, and continuous-batching throughput at several
+//! concurrency levels. Artifact-free (builtin registry, random init).
+
+use std::time::Instant;
+
+use misa::runtime::{Engine, Session};
+use misa::serve::{generate, GenerateCfg, Request, SamplerCfg, Scheduler, SchedulerCfg};
+use misa::util::Rng;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    f(); // warmup
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    let unit = if per >= 1.0 {
+        format!("{per:.2} s")
+    } else if per >= 1e-3 {
+        format!("{:.2} ms", per * 1e3)
+    } else {
+        format!("{:.2} µs", per * 1e6)
+    };
+    println!("{name:<44} {unit:>12}/iter  ({iters} iters)");
+}
+
+fn prompt(len: usize, vocab: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    let mut p = vec![1i32];
+    while p.len() < len {
+        p.push(rng.range(32, vocab) as i32);
+    }
+    p
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== serving benchmarks (host backend, builtin registry) ==");
+    for model in ["tiny", "small"] {
+        let mut eng = Engine::host();
+        let sess = Session::create(&mut eng, model, 0)?;
+        let vocab = sess.spec.config.vocab;
+        let p16 = prompt(16, vocab, 1);
+
+        bench(&format!("{model}: prefill 16 tokens"), 30, || {
+            let mut cache = sess.kv_cache(16).unwrap();
+            sess.prefill(&p16, &mut cache).unwrap();
+        });
+
+        let mut cache = sess.kv_cache(256)?;
+        let mut logits = sess.prefill(&p16, &mut cache)?;
+        bench(&format!("{model}: decode step (ctx ~16+)"), 100, || {
+            let next = misa::serve::argmax(&logits) as i32;
+            logits = sess.decode_step(next, cache.len(), &mut cache).unwrap();
+        });
+
+        bench(&format!("{model}: generate 32 greedy tokens"), 5, || {
+            let cfg = GenerateCfg { max_new: 32, ..GenerateCfg::default() };
+            generate(&sess, &p16, &cfg).unwrap();
+        });
+
+        for slots in [1usize, 4] {
+            let t0 = Instant::now();
+            let mut sched =
+                Scheduler::new(SchedulerCfg { max_slots: slots, token_budget: 4096 });
+            let n_req = 8;
+            let max_new = 24;
+            for id in 0..n_req as u64 {
+                sched.submit(Request {
+                    id,
+                    prompt: prompt(8, vocab, 2 + id),
+                    max_new,
+                    sampler: SamplerCfg { temperature: 0.8, top_k: 32, top_p: 0.95 },
+                    seed: id,
+                    eos: None,
+                })?;
+            }
+            let done = sched.run(&sess)?;
+            let wall = t0.elapsed().as_secs_f64();
+            let toks: usize = done.iter().map(|c| c.tokens.len()).sum();
+            let ttft =
+                done.iter().map(|c| c.ttft_s).sum::<f64>() / done.len() as f64 * 1e3;
+            println!(
+                "{model}: bench-serve {n_req} reqs @ {slots} slots      \
+                 {:>8.1} tok/s  mean ttft {ttft:.1} ms",
+                toks as f64 / wall.max(1e-9),
+            );
+        }
+    }
+    Ok(())
+}

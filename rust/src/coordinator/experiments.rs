@@ -1,7 +1,7 @@
 //! The paper-experiment harness: one function per table and figure.
 //!
 //! Each experiment trains real models through the runtime on the
-//! synthetic substitute workloads (DESIGN.md Sec. 3), prints the same
+//! synthetic substitute workloads (DESIGN.md Sec. 4), prints the same
 //! rows/series the paper reports, and writes the report under
 //! `results/`. "Mem.(GB)" columns come from the Appendix-E analytical
 //! model evaluated at the *paper's* architecture constants, so they are

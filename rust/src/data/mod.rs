@@ -2,7 +2,7 @@
 //!
 //! The paper fine-tunes on Commonsense170K/MATH10K/Alpaca-GPT4 and
 //! pre-trains on C4 — none of which are available in this offline,
-//! CPU-only environment. Per DESIGN.md Sec. 3 we substitute:
+//! CPU-only environment. Per DESIGN.md Sec. 4 we substitute:
 //!
 //! - [`corpus`]: a Zipf–Markov token stream with learnable bigram
 //!   structure (the C4 stand-in; perplexity decreases smoothly and the

@@ -32,6 +32,8 @@
 //! - [`optim`] — MISA (Algorithm 1/2/3) and all baselines: Adam, BAdam,
 //!   LISA, LoRA, DoRA, GaLore, LoRA+MISA.
 //! - [`coordinator`] — trainer orchestration, evaluation, experiments.
+//! - [`serve`] — inference serving: KV-cache incremental decode, token
+//!   samplers, single-stream generation, continuous-batching scheduler.
 //! - [`config`] — TOML-subset run configuration.
 
 pub mod config;
@@ -41,6 +43,7 @@ pub mod memory;
 pub mod modelspec;
 pub mod optim;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;
 

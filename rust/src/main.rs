@@ -2,8 +2,10 @@
 //!
 //! Subcommands:
 //!   train [--config run.toml] [--model M] [--method NAME] [--steps N] …
-//!   exp <name|all|list> [--full]       regenerate paper tables/figures
-//!   info                               registry + memory-model summary
+//!   generate --ckpt PATH [--prompt IDS] …   incremental decode from a checkpoint
+//!   bench-serve [--requests N] …            continuous-batching throughput bench
+//!   exp <name|all|list> [--full]            regenerate paper tables/figures
+//!   info                                    registry + memory-model summary
 //!
 //! Every subcommand takes `--backend host|pjrt` (default: host — the
 //! pure-Rust backend that needs no artifacts). `--host` is kept as the
@@ -19,9 +21,12 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use misa::config::{DataSpec, Doc, RunConfig};
 use misa::coordinator::experiments::{self, ExpCtx};
-use misa::coordinator::Trainer;
+use misa::coordinator::{ckpt, Trainer};
 use misa::memory::{self, Arch, Method, Workload};
-use misa::runtime::{BackendKind, Engine};
+use misa::modelspec::ModelSpec;
+use misa::runtime::{BackendKind, Engine, KvCache, Session};
+use misa::serve::{generate, GenerateCfg, Request, SamplerCfg, Scheduler, SchedulerCfg};
+use misa::util::Rng;
 
 fn usage() -> ! {
     eprintln!(
@@ -29,7 +34,12 @@ fn usage() -> ! {
          USAGE:\n  misa train [--config FILE] [--model M] [--method NAME] [--steps N]\n\
          \x20           [--lr F] [--delta F] [--eta F] [--t-inner N] [--data D]\n\
          \x20           [--pretrain] [--seed N] [--out DIR] [--artifacts DIR]\n\
-         \x20           [--backend host|pjrt] [--host]\n\
+         \x20           [--save-ckpt FILE] [--backend host|pjrt] [--host]\n\
+         \x20 misa generate --ckpt FILE [--model M] [--prompt \"1,2,3\"] [--max-new N]\n\
+         \x20           [--temp F] [--top-k N] [--top-p F] [--eos TOK] [--seed N]\n\
+         \x20 misa bench-serve [--ckpt FILE] [--model M] [--requests N] [--max-new N]\n\
+         \x20           [--prompt-len N] [--slots N] [--token-budget N] [--temp F]\n\
+         \x20           [--top-k N] [--top-p F] [--seed N]\n\
          \x20 misa exp <name|all|list> [--full] [--artifacts DIR] [--backend B]\n\
          \x20 misa info [--artifacts DIR] [--backend B]\n"
     );
@@ -40,7 +50,9 @@ fn usage() -> ! {
 /// known switch — unknown flags are errors, not silent switches.
 const VALUED_FLAGS: &[&str] = &[
     "config", "model", "method", "steps", "lr", "delta", "eta", "t-inner", "rank", "alpha",
-    "data", "seed", "out", "artifacts", "backend",
+    "data", "seed", "out", "artifacts", "backend", "save-ckpt", "ckpt", "prompt",
+    "max-new", "temp", "top-k", "top-p", "eos", "requests", "prompt-len", "slots",
+    "token-budget",
 ];
 
 /// Boolean switches.
@@ -178,6 +190,215 @@ fn cmd_train(args: &Args) -> Result<()> {
     let (fb, op) = t.avg_times_ms();
     println!("avg per-step: fwd+bwd {fb:.1} ms, optimizer {op:.1} ms");
     t.metrics.flush();
+    if let Some(path) = args.flags.get("save-ckpt") {
+        ckpt::save(Path::new(path), &t.sess.host)?;
+        println!("checkpoint written: {path}");
+    }
+    Ok(())
+}
+
+/// Parse `--prompt "1,2,3"` (comma- and/or whitespace-separated token
+/// ids). Defaults to a single BOS token when the flag is absent.
+fn parse_prompt(args: &Args) -> Result<Vec<i32>> {
+    let Some(raw) = args.flags.get("prompt") else {
+        return Ok(vec![misa::data::tok::BOS]);
+    };
+    let toks: Vec<i32> = raw
+        .split(|c: char| c == ',' || c.is_whitespace())
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse::<i32>().with_context(|| format!("--prompt token {s:?}")))
+        .collect::<Result<_>>()?;
+    if toks.is_empty() {
+        bail!("--prompt contains no token ids");
+    }
+    Ok(toks)
+}
+
+fn sampler_from(args: &Args) -> Result<SamplerCfg> {
+    let mut cfg = SamplerCfg::greedy();
+    if let Some(t) = args.flags.get("temp") {
+        cfg.temperature = t.parse().context("--temp")?;
+    }
+    if let Some(k) = args.flags.get("top-k") {
+        cfg.top_k = k.parse().context("--top-k")?;
+    }
+    if let Some(p) = args.flags.get("top-p") {
+        cfg.top_p = p.parse().context("--top-p")?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Resolve the model config for a loaded checkpoint: `--model` when
+/// given, else inferred by matching parameter shapes against the
+/// registry (every builtin config has a distinct registry signature).
+fn spec_for_ckpt<'a>(
+    engine: &'a Engine,
+    args: &Args,
+    params: &[Vec<f32>],
+) -> Result<&'a ModelSpec> {
+    if let Some(name) = args.flags.get("model") {
+        return engine.manifest.model(name);
+    }
+    let matches: Vec<&ModelSpec> = engine
+        .manifest
+        .models
+        .iter()
+        .filter(|m| {
+            m.params.len() == params.len()
+                && m.params.iter().zip(params).all(|(p, d)| p.numel() == d.len())
+        })
+        .collect();
+    match matches.as_slice() {
+        [one] => Ok(one),
+        [] => bail!(
+            "checkpoint matches no registry config ({} params); pass --model",
+            params.len()
+        ),
+        many => bail!(
+            "checkpoint shape is ambiguous across configs {:?}; pass --model",
+            many.iter().map(|m| m.config.name.as_str()).collect::<Vec<_>>()
+        ),
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let ckpt_path = args
+        .flags
+        .get("ckpt")
+        .ok_or_else(|| anyhow!("generate requires --ckpt FILE"))?;
+    let params = ckpt::load(Path::new(ckpt_path))?;
+    let mut engine = make_engine(args)?;
+    let spec = spec_for_ckpt(&engine, args, &params)?.clone();
+    let sess = Session::with_params(&mut engine, spec, params)?;
+    let prompt = parse_prompt(args)?;
+    let vocab = sess.spec.config.vocab;
+    for &t in &prompt {
+        if t < 0 || t as usize >= vocab {
+            bail!("prompt token {t} outside vocab {vocab}");
+        }
+    }
+    let cfg = GenerateCfg {
+        max_new: match args.flags.get("max-new") {
+            Some(n) => n.parse().context("--max-new")?,
+            None => 32,
+        },
+        sampler: sampler_from(args)?,
+        seed: match args.flags.get("seed") {
+            Some(s) => s.parse().context("--seed")?,
+            None => 0,
+        },
+        eos: match args.flags.get("eos") {
+            Some(e) => Some(e.parse().context("--eos")?),
+            None => None,
+        },
+    };
+    println!(
+        "generate: model={} backend={} ckpt={ckpt_path} prompt_len={} max_new={} \
+         temp={} top_k={} top_p={} seed={}",
+        sess.spec.config.name,
+        sess.backend_name(),
+        prompt.len(),
+        cfg.max_new,
+        cfg.sampler.temperature,
+        cfg.sampler.top_k,
+        cfg.sampler.top_p,
+        cfg.seed,
+    );
+    let g = generate(&sess, &prompt, &cfg)?;
+    let rendered: Vec<String> = g.tokens.iter().map(|t| t.to_string()).collect();
+    println!("tokens: {}", rendered.join(" "));
+    println!(
+        "ttft {:.1} ms · decode {:.1} tok/s · {} new tokens",
+        g.ttft_s * 1e3,
+        g.decode_tps,
+        g.tokens.len(),
+    );
+    Ok(())
+}
+
+fn cmd_bench_serve(args: &Args) -> Result<()> {
+    let mut engine = make_engine(args)?;
+    let seed: u64 = match args.flags.get("seed") {
+        Some(s) => s.parse().context("--seed")?,
+        None => 0,
+    };
+    let sess = if let Some(path) = args.flags.get("ckpt") {
+        let params = ckpt::load(Path::new(path))?;
+        let spec = spec_for_ckpt(&engine, args, &params)?.clone();
+        Session::with_params(&mut engine, spec, params)?
+    } else {
+        let model = args.flags.get("model").map(String::as_str).unwrap_or("tiny");
+        Session::create(&mut engine, model, seed)?
+    };
+    let requests: usize = match args.flags.get("requests") {
+        Some(n) => n.parse().context("--requests")?,
+        None => 16,
+    };
+    let max_new: usize = match args.flags.get("max-new") {
+        Some(n) => n.parse().context("--max-new")?,
+        None => 32,
+    };
+    // prompts always start with BOS, so the effective length is >= 1
+    let prompt_len: usize = match args.flags.get("prompt-len") {
+        Some(n) => n.parse::<usize>().context("--prompt-len")?.max(1),
+        None => 8,
+    };
+    let cfg = SchedulerCfg {
+        max_slots: match args.flags.get("slots") {
+            Some(n) => n.parse().context("--slots")?,
+            None => 4,
+        },
+        token_budget: match args.flags.get("token-budget") {
+            Some(n) => n.parse().context("--token-budget")?,
+            None => 4096,
+        },
+    };
+    let sampler = sampler_from(args)?;
+    let mc = &sess.spec.config;
+    println!(
+        "bench-serve: model={} backend={} requests={requests} max_new={max_new} \
+         prompt_len={prompt_len} slots={} token_budget={}",
+        mc.name, sess.backend_name(), cfg.max_slots, cfg.token_budget,
+    );
+    let mut rng = Rng::new(seed ^ 0x5E57E);
+    let mut sched = Scheduler::new(cfg);
+    let vocab = mc.vocab;
+    for id in 0..requests as u64 {
+        let mut prompt = vec![misa::data::tok::BOS];
+        while prompt.len() < prompt_len {
+            prompt.push(rng.range(misa::data::tok::SYM0 as usize, vocab) as i32);
+        }
+        sched.submit(Request {
+            id,
+            prompt,
+            max_new,
+            sampler,
+            seed: seed ^ (id.wrapping_mul(0x9E3779B9) + 1),
+            eos: None,
+        })?;
+    }
+    let t0 = std::time::Instant::now();
+    let done = sched.run(&sess)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let new_tokens: usize = done.iter().map(|c| c.tokens.len()).sum();
+    let mean_ttft_ms =
+        done.iter().map(|c| c.ttft_s).sum::<f64>() / done.len().max(1) as f64 * 1e3;
+    let mean_tps =
+        done.iter().map(|c| c.decode_tps).sum::<f64>() / done.len().max(1) as f64;
+    let kv_bytes =
+        KvCache::bytes_for(&sess.spec, prompt_len + max_new) * sched.peak_active();
+    println!(
+        "completed {} requests in {wall:.2} s · aggregate {:.1} tok/s · \
+         mean ttft {mean_ttft_ms:.1} ms · mean per-request decode {mean_tps:.1} tok/s",
+        done.len(),
+        new_tokens as f64 / wall.max(1e-9),
+    );
+    println!(
+        "peak concurrency {} slots · peak kv residency {:.2} MiB",
+        sched.peak_active(),
+        kv_bytes as f64 / (1024.0 * 1024.0),
+    );
     Ok(())
 }
 
@@ -257,6 +478,8 @@ fn main() {
     };
     let result = match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
+        Some("generate") => cmd_generate(&args),
+        Some("bench-serve") => cmd_bench_serve(&args),
         Some("exp") => cmd_exp(&args),
         Some("info") => cmd_info(&args),
         _ => usage(),
@@ -311,6 +534,48 @@ mod tests {
         let a = parse_args(&v(&["train", "--pretrain", "50"])).unwrap();
         assert!(a.switches.contains("pretrain"));
         assert_eq!(a.positional, vec!["train", "50"]);
+    }
+
+    #[test]
+    fn serve_flags_parse() {
+        let a = parse_args(&v(&[
+            "generate", "--ckpt", "c.bin", "--prompt", "1, 2 3", "--max-new", "4",
+            "--temp", "0.8", "--top-k", "20", "--top-p", "0.9", "--seed", "7",
+        ]))
+        .unwrap();
+        assert_eq!(parse_prompt(&a).unwrap(), vec![1, 2, 3]);
+        let s = sampler_from(&a).unwrap();
+        assert_eq!(s.top_k, 20);
+        assert!((s.temperature - 0.8).abs() < 1e-6);
+        assert!((s.top_p - 0.9).abs() < 1e-6);
+        // default prompt is a single BOS; default sampler is greedy
+        let a = parse_args(&v(&["generate", "--ckpt", "c.bin"])).unwrap();
+        assert_eq!(parse_prompt(&a).unwrap(), vec![misa::data::tok::BOS]);
+        assert_eq!(sampler_from(&a).unwrap(), SamplerCfg::greedy());
+        // malformed prompts are hard errors
+        let a = parse_args(&v(&["generate", "--prompt", "1,x"])).unwrap();
+        assert!(parse_prompt(&a).is_err());
+        let a = parse_args(&v(&["generate", "--prompt", ", ,"])).unwrap();
+        assert!(parse_prompt(&a).is_err());
+        // invalid sampler configs are rejected at parse time
+        let a = parse_args(&v(&["generate", "--top-p", "0"])).unwrap();
+        assert!(sampler_from(&a).is_err());
+    }
+
+    #[test]
+    fn ckpt_inference_resolves_unique_config() {
+        let eng = Engine::host();
+        let a = parse_args(&v(&["generate"])).unwrap();
+        let tiny = eng.manifest.model("tiny").unwrap();
+        let params: Vec<Vec<f32>> =
+            tiny.params.iter().map(|p| vec![0.0f32; p.numel()]).collect();
+        assert_eq!(spec_for_ckpt(&eng, &a, &params).unwrap().config.name, "tiny");
+        // wrong shape set matches nothing
+        let bad = vec![vec![0.0f32; 3]];
+        assert!(spec_for_ckpt(&eng, &a, &bad).is_err());
+        // explicit --model overrides inference
+        let a = parse_args(&v(&["generate", "--model", "small"])).unwrap();
+        assert_eq!(spec_for_ckpt(&eng, &a, &params).unwrap().config.name, "small");
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! The subspace `P` refreshes every `update_freq` steps. The paper's
 //! GaLore uses an SVD; offline we use the randomized range finder with a
 //! power iteration (`tensor::range_finder`) — the standard
-//! memory-equivalent substitution (DESIGN.md Sec. 3), and the reason the
+//! memory-equivalent substitution (DESIGN.md Sec. 4), and the reason the
 //! paper's Table 8 shows GaLore's optimizer step dominating its runtime
 //! is reproduced by our periodic refresh cost.
 

@@ -19,17 +19,27 @@
 
 use anyhow::{anyhow, ensure, Result};
 
+use std::borrow::Cow;
+
 use crate::data::Batch;
 use crate::modelspec::ModelSpec;
 use crate::optim::adam::{AdamHyper, AdamState};
-use crate::runtime::backend::Backend;
+use crate::runtime::backend::{Backend, KvCache};
 use crate::runtime::{EvalOutput, StepOutput};
+use crate::tensor::{gemm_nn, gemm_nt, gemm_tn_acc};
 
 /// RoPE base frequency (python/compile/configs.py default).
 const ROPE_THETA: f32 = 10_000.0;
 
 /// RMSNorm epsilon (python/compile/model.py `_rms_norm`).
 const NORM_EPS: f32 = 1e-5;
+
+/// Minimum number of positions the precomputed RoPE tables cover. The
+/// tables are built once in [`HostBackend::new`] for
+/// `max(config.seq_len, ROPE_MIN_POSITIONS)` so decode steps can index
+/// them by absolute position well past the training sequence length;
+/// positions beyond the tables fall back to computing the angle inline.
+const ROPE_MIN_POSITIONS: usize = 2048;
 
 /// Registry indices of one transformer layer's parameters.
 struct LayerIdx {
@@ -124,7 +134,7 @@ struct LayerTrace {
 }
 
 /// Whole-model forward intermediates.
-struct Trace {
+struct Trace<'a> {
     layers: Vec<LayerTrace>,
     /// residual stream after the last layer `[n, d]`
     x_last: Vec<f32>,
@@ -134,17 +144,24 @@ struct Trace {
     hf: Vec<f32>,
     /// logits `[n, v]`
     logits: Vec<f32>,
-    cos: Vec<f32>,
-    sin: Vec<f32>,
+    /// RoPE tables: borrowed from the backend's precomputed buffers
+    /// unless the batch is longer than they cover
+    cos: Cow<'a, [f32]>,
+    sin: Cow<'a, [f32]>,
     denom: f64,
     loss: f64,
 }
 
-/// The pure-Rust backend. Stateless beyond the model layout: it executes
-/// directly from the session's host parameter mirror.
+/// The pure-Rust backend. Stateless beyond the model layout and the
+/// precomputed RoPE tables: it executes directly from the session's
+/// host parameter mirror.
 pub struct HostBackend {
     spec: ModelSpec,
     layout: Layout,
+    /// cos/sin tables `[rope_positions, head_dim/2]`, built once
+    rope_cos: Vec<f32>,
+    rope_sin: Vec<f32>,
+    rope_positions: usize,
 }
 
 impl HostBackend {
@@ -156,7 +173,45 @@ impl HostBackend {
                 "n_heads {} not divisible by n_kv_heads {}", mc.n_heads, mc.n_kv_heads);
         ensure!(mc.head_dim() % 2 == 0, "head_dim {} must be even for RoPE", mc.head_dim());
         let layout = Layout::build(&spec)?;
-        Ok(HostBackend { spec, layout })
+        // precompute the RoPE tables once, keyed by the max sequence
+        // length this backend will see (training seq_len, or the serve
+        // horizon, whichever is larger)
+        let rope_positions = mc.seq_len.max(ROPE_MIN_POSITIONS);
+        let (rope_cos, rope_sin) = rope_tables(rope_positions, mc.head_dim(), ROPE_THETA);
+        Ok(HostBackend { spec, layout, rope_cos, rope_sin, rope_positions })
+    }
+
+    /// Precomputed cos/sin tables covering `s` positions; falls back to
+    /// a fresh computation for batches longer than the precomputed span.
+    fn rope_view(&self, s: usize) -> (Cow<'_, [f32]>, Cow<'_, [f32]>) {
+        if s <= self.rope_positions {
+            (Cow::Borrowed(&self.rope_cos[..]), Cow::Borrowed(&self.rope_sin[..]))
+        } else {
+            let (c, sn) = rope_tables(s, self.spec.config.head_dim(), ROPE_THETA);
+            (Cow::Owned(c), Cow::Owned(sn))
+        }
+    }
+
+    /// Rotate one row's heads at absolute position `pos` (decode path).
+    fn rope_row(&self, row: &mut [f32], n_heads: usize, pos: usize) {
+        let hd = self.spec.config.head_dim();
+        let half = hd / 2;
+        for h in 0..n_heads {
+            let off = h * hd;
+            for i in 0..half {
+                let (c, sn) = if pos < self.rope_positions {
+                    (self.rope_cos[pos * half + i], self.rope_sin[pos * half + i])
+                } else {
+                    let freq = ROPE_THETA.powf(-((2 * i) as f32) / hd as f32);
+                    let ang = pos as f32 * freq;
+                    (ang.cos(), ang.sin())
+                };
+                let e = row[off + 2 * i];
+                let o = row[off + 2 * i + 1];
+                row[off + 2 * i] = e * c - o * sn;
+                row[off + 2 * i + 1] = e * sn + o * c;
+            }
+        }
     }
 
     /// Masked mean cross-entropy in f64 — the high-precision entry the
@@ -165,7 +220,7 @@ impl HostBackend {
         Ok(self.forward(host, batch)?.loss)
     }
 
-    fn forward(&self, host: &[Vec<f32>], batch: &Batch) -> Result<Trace> {
+    fn forward(&self, host: &[Vec<f32>], batch: &Batch) -> Result<Trace<'_>> {
         let mc = &self.spec.config;
         let (b, s) = (batch.batch, batch.seq_len);
         let n = b * s;
@@ -185,7 +240,7 @@ impl HostBackend {
         for &t in batch.tokens.iter().chain(&batch.targets) {
             ensure!(t >= 0 && (t as usize) < v, "token id {t} outside vocab {v}");
         }
-        let (cos, sin) = rope_tables(s, hd, ROPE_THETA);
+        let (cos, sin) = self.rope_view(s);
 
         // token embedding
         let embed = &host[self.layout.embed];
@@ -199,25 +254,25 @@ impl HostBackend {
         for lp in &self.layout.layers {
             let x_in = x;
             let (h1, r1) = rms_forward(&x_in, &host[lp.attn_norm], n, d);
-            let mut q = mm(&h1, &host[lp.wq], n, d, d);
-            let mut k = mm(&h1, &host[lp.wk], n, d, kd);
-            let v_proj = mm(&h1, &host[lp.wv], n, d, kd);
+            let mut q = gemm_nn(&h1, &host[lp.wq], n, d, d);
+            let mut k = gemm_nn(&h1, &host[lp.wk], n, d, kd);
+            let v_proj = gemm_nn(&h1, &host[lp.wv], n, d, kd);
             rope_apply(&mut q, n, nh, hd, s, &cos, &sin);
             rope_apply(&mut k, n, nkv, hd, s, &cos, &sin);
             let (att, concat) = attn_forward(&q, &k, &v_proj, b, s, nh, nkv, hd);
-            let attn_out = mm(&concat, &host[lp.wo], n, d, d);
+            let attn_out = gemm_nn(&concat, &host[lp.wo], n, d, d);
             let mut x_mid = x_in.clone();
             for i in 0..n * d {
                 x_mid[i] += attn_out[i];
             }
             let (h2, r2) = rms_forward(&x_mid, &host[lp.mlp_norm], n, d);
-            let gpre = mm(&h2, &host[lp.wgate], n, d, f);
-            let up = mm(&h2, &host[lp.wup], n, d, f);
+            let gpre = gemm_nn(&h2, &host[lp.wgate], n, d, f);
+            let up = gemm_nn(&h2, &host[lp.wup], n, d, f);
             let mut act = vec![0.0f32; n * f];
             for i in 0..n * f {
                 act[i] = silu(gpre[i]) * up[i];
             }
-            let mlp_out = mm(&act, &host[lp.wdown], n, f, d);
+            let mlp_out = gemm_nn(&act, &host[lp.wdown], n, f, d);
             let mut x_out = x_mid.clone();
             for i in 0..n * d {
                 x_out[i] += mlp_out[i];
@@ -242,7 +297,7 @@ impl HostBackend {
         }
 
         let (hf, rf) = rms_forward(&x, &host[self.layout.final_norm], n, d);
-        let logits = mm(&hf, &host[self.layout.head], n, d, v);
+        let logits = gemm_nn(&hf, &host[self.layout.head], n, d, v);
 
         let mask_sum: f64 = batch.mask.iter().map(|&m| m as f64).sum();
         let denom = mask_sum.max(1.0);
@@ -260,9 +315,156 @@ impl HostBackend {
         Ok(Trace { layers, x_last: x, rf, hf, logits, cos, sin, denom, loss })
     }
 
+    /// Uncached full-sequence forward over one prompt: all logits
+    /// `[tokens.len(), vocab]` through the *training* forward pass. This
+    /// is the numerics reference the KV-cache parity tests compare the
+    /// incremental decode path against.
+    pub fn full_logits(&self, host: &[Vec<f32>], tokens: &[i32]) -> Result<Vec<f32>> {
+        ensure!(!tokens.is_empty(), "full_logits: empty token sequence");
+        let batch = Batch {
+            batch: 1,
+            seq_len: tokens.len(),
+            tokens: tokens.to_vec(),
+            targets: vec![0; tokens.len()],
+            mask: vec![1.0; tokens.len()],
+            kinds: vec![None],
+        };
+        Ok(self.forward(host, &batch)?.logits)
+    }
+
+    /// Cache-aware forward over a chunk of `tokens` at absolute
+    /// positions `cache.len()..cache.len() + tokens.len()`: appends each
+    /// position's K/V to the ring buffers, attends over the resident
+    /// window, and returns the final position's logits `[vocab]`.
+    ///
+    /// Prefill is a chunk of the whole prompt; a decode step is a chunk
+    /// of one token. Per-row numerics are identical to the training
+    /// forward pass (same GEMM cores, same softmax accumulation order),
+    /// which is what makes the 1e-5 parity guarantee hold.
+    fn serve_chunk(&self, host: &[Vec<f32>], tokens: &[i32], cache: &mut KvCache)
+                   -> Result<Vec<f32>> {
+        let mc = &self.spec.config;
+        let (d, v, f) = (mc.dim, mc.vocab, mc.ffn_dim);
+        let (nh, nkv) = (mc.n_heads, mc.n_kv_heads);
+        let hd = mc.head_dim();
+        let kd = mc.kv_dim();
+        let rep = nh / nkv;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let t = tokens.len();
+        let start = cache.len();
+        cache.check_spec(&self.spec)?;
+        ensure!(t > 0, "serve: empty token chunk");
+        ensure!(
+            t <= cache.capacity(),
+            "serve: chunk of {t} tokens exceeds kv cache capacity {}",
+            cache.capacity()
+        );
+        ensure!(host.len() == self.spec.params.len(), "param count mismatch");
+        for (p, data) in self.spec.params.iter().zip(host) {
+            ensure!(data.len() == p.numel(), "param {} size mismatch", p.name);
+        }
+        for &tk in tokens {
+            ensure!(tk >= 0 && (tk as usize) < v, "token id {tk} outside vocab {v}");
+        }
+
+        // token embedding
+        let embed = &host[self.layout.embed];
+        let mut x = vec![0.0f32; t * d];
+        for (i, &tk) in tokens.iter().enumerate() {
+            let tok = tk as usize;
+            x[i * d..(i + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
+        }
+
+        for (li, lp) in self.layout.layers.iter().enumerate() {
+            let (h1, _) = rms_forward(&x, &host[lp.attn_norm], t, d);
+            let mut q = gemm_nn(&h1, &host[lp.wq], t, d, d);
+            let mut k = gemm_nn(&h1, &host[lp.wk], t, d, kd);
+            let v_proj = gemm_nn(&h1, &host[lp.wv], t, d, kd);
+            for i in 0..t {
+                self.rope_row(&mut q[i * d..(i + 1) * d], nh, start + i);
+                self.rope_row(&mut k[i * kd..(i + 1) * kd], nkv, start + i);
+            }
+            // causal attention over the resident window. Each position's
+            // K/V is written into the ring right before its own query
+            // attends: writing one position at a time means a wrapping
+            // chunk never clobbers a slot an earlier in-chunk query
+            // still needs — ring slot `p % capacity` frees exactly when
+            // position `p - capacity` has left every remaining window.
+            let capacity = cache.capacity();
+            let (ck, cv) = cache.layer_mut(li);
+            let mut concat = vec![0.0f32; t * d];
+            let mut scores: Vec<f32> = Vec::new();
+            for i in 0..t {
+                let p = start + i;
+                let slot = p % capacity;
+                ck[slot * kd..(slot + 1) * kd].copy_from_slice(&k[i * kd..(i + 1) * kd]);
+                cv[slot * kd..(slot + 1) * kd]
+                    .copy_from_slice(&v_proj[i * kd..(i + 1) * kd]);
+                let lo = (p + 1).saturating_sub(capacity);
+                let w = p + 1 - lo;
+                scores.resize(w, 0.0);
+                for h in 0..nh {
+                    let kvh = h / rep;
+                    let qrow = &q[i * d + h * hd..][..hd];
+                    let mut mx = f32::NEG_INFINITY;
+                    for (jj, sc_out) in scores.iter_mut().enumerate() {
+                        let slot = (lo + jj) % capacity;
+                        let krow = &ck[slot * kd + kvh * hd..][..hd];
+                        let mut sc = 0.0f32;
+                        for tt in 0..hd {
+                            sc += qrow[tt] * krow[tt];
+                        }
+                        let sc = sc * scale;
+                        *sc_out = sc;
+                        mx = mx.max(sc);
+                    }
+                    let mut denom = 0.0f32;
+                    for sc in scores.iter_mut() {
+                        let e = (*sc - mx).exp();
+                        *sc = e;
+                        denom += e;
+                    }
+                    let inv = 1.0 / denom;
+                    let orow = &mut concat[i * d + h * hd..][..hd];
+                    for (jj, &pr) in scores.iter().enumerate() {
+                        let pr = pr * inv;
+                        if pr == 0.0 {
+                            continue;
+                        }
+                        let slot = (lo + jj) % capacity;
+                        let vrow = &cv[slot * kd + kvh * hd..][..hd];
+                        for tt in 0..hd {
+                            orow[tt] += pr * vrow[tt];
+                        }
+                    }
+                }
+            }
+            let attn_out = gemm_nn(&concat, &host[lp.wo], t, d, d);
+            for i in 0..t * d {
+                x[i] += attn_out[i];
+            }
+            let (h2, _) = rms_forward(&x, &host[lp.mlp_norm], t, d);
+            let gpre = gemm_nn(&h2, &host[lp.wgate], t, d, f);
+            let up = gemm_nn(&h2, &host[lp.wup], t, d, f);
+            let mut act = vec![0.0f32; t * f];
+            for i in 0..t * f {
+                act[i] = silu(gpre[i]) * up[i];
+            }
+            let mlp_out = gemm_nn(&act, &host[lp.wdown], t, f, d);
+            for i in 0..t * d {
+                x[i] += mlp_out[i];
+            }
+        }
+        cache.advance(t);
+
+        // only the final position's logits are needed downstream
+        let (hf, _) = rms_forward(&x[(t - 1) * d..], &host[self.layout.final_norm], 1, d);
+        Ok(gemm_nn(&hf, &host[self.layout.head], 1, d, v))
+    }
+
     /// The hand-derived backward pass: gradients for every registry
     /// parameter, plus their squared Frobenius norms.
-    fn backward(&self, host: &[Vec<f32>], batch: &Batch, tr: &Trace)
+    fn backward(&self, host: &[Vec<f32>], batch: &Batch, tr: &Trace<'_>)
                 -> (Vec<Vec<f32>>, Vec<f32>) {
         let mc = &self.spec.config;
         let (b, s) = (batch.batch, batch.seq_len);
@@ -337,8 +539,8 @@ impl HostBackend {
             let lp = &ly.layers[li];
 
             // MLP: x_out = x_mid + (silu(h2@wgate) * (h2@wup)) @ wdown
-            let dact = mm_nt(&dx, &host[lp.wdown], n, d, f);
-            mm_tn_acc(&lt.act, &dx, n, f, d, &mut grads[lp.wdown]);
+            let dact = gemm_nt(&dx, &host[lp.wdown], n, d, f);
+            gemm_tn_acc(&lt.act, &dx, n, f, d, &mut grads[lp.wdown]);
             let mut dgpre = vec![0.0f32; n * f];
             let mut dup = vec![0.0f32; n * f];
             for i in 0..n * f {
@@ -347,10 +549,10 @@ impl HostBackend {
                 dgpre[i] = dact[i] * lt.up[i] * sg * (1.0 + z * (1.0 - sg));
                 dup[i] = dact[i] * z * sg;
             }
-            mm_tn_acc(&lt.h2, &dgpre, n, d, f, &mut grads[lp.wgate]);
-            mm_tn_acc(&lt.h2, &dup, n, d, f, &mut grads[lp.wup]);
-            let mut dh2 = mm_nt(&dgpre, &host[lp.wgate], n, f, d);
-            let dh2b = mm_nt(&dup, &host[lp.wup], n, f, d);
+            gemm_tn_acc(&lt.h2, &dgpre, n, d, f, &mut grads[lp.wgate]);
+            gemm_tn_acc(&lt.h2, &dup, n, d, f, &mut grads[lp.wup]);
+            let mut dh2 = gemm_nt(&dgpre, &host[lp.wgate], n, f, d);
+            let dh2b = gemm_nt(&dup, &host[lp.wup], n, f, d);
             for i in 0..n * d {
                 dh2[i] += dh2b[i];
             }
@@ -369,18 +571,18 @@ impl HostBackend {
             }
 
             // attention: x_mid = x_in + (heads(h1) concat) @ wo
-            let dconcat = mm_nt(&dx_mid, &host[lp.wo], n, d, d);
-            mm_tn_acc(&lt.concat, &dx_mid, n, d, d, &mut grads[lp.wo]);
+            let dconcat = gemm_nt(&dx_mid, &host[lp.wo], n, d, d);
+            gemm_tn_acc(&lt.concat, &dx_mid, n, d, d, &mut grads[lp.wo]);
             let (mut dq, mut dk, dv) =
                 attn_backward(&lt.q, &lt.k, &lt.v, &lt.att, &dconcat, b, s, nh, nkv, hd);
             rope_apply_inv(&mut dq, n, nh, hd, s, &tr.cos, &tr.sin);
             rope_apply_inv(&mut dk, n, nkv, hd, s, &tr.cos, &tr.sin);
-            mm_tn_acc(&lt.h1, &dq, n, d, d, &mut grads[lp.wq]);
-            mm_tn_acc(&lt.h1, &dk, n, d, kd, &mut grads[lp.wk]);
-            mm_tn_acc(&lt.h1, &dv, n, d, kd, &mut grads[lp.wv]);
-            let mut dh1 = mm_nt(&dq, &host[lp.wq], n, d, d);
-            let dh1b = mm_nt(&dk, &host[lp.wk], n, kd, d);
-            let dh1c = mm_nt(&dv, &host[lp.wv], n, kd, d);
+            gemm_tn_acc(&lt.h1, &dq, n, d, d, &mut grads[lp.wq]);
+            gemm_tn_acc(&lt.h1, &dk, n, d, kd, &mut grads[lp.wk]);
+            gemm_tn_acc(&lt.h1, &dv, n, d, kd, &mut grads[lp.wv]);
+            let mut dh1 = gemm_nt(&dq, &host[lp.wq], n, d, d);
+            let dh1b = gemm_nt(&dk, &host[lp.wk], n, kd, d);
+            let dh1c = gemm_nt(&dv, &host[lp.wv], n, kd, d);
             for i in 0..n * d {
                 dh1[i] += dh1b[i] + dh1c[i];
             }
@@ -442,12 +644,7 @@ impl Backend for HostBackend {
         let mut correct = vec![0.0f32; n];
         for t in 0..n {
             let row = &tr.logits[t * v..(t + 1) * v];
-            let mut best = 0usize;
-            for j in 1..v {
-                if row[j] > row[best] {
-                    best = j;
-                }
-            }
+            let best = crate::util::argmax(row);
             correct[t] = if best == batch.targets[t] as usize { 1.0 } else { 0.0 };
         }
         Ok(EvalOutput { loss: tr.loss as f32, correct })
@@ -485,72 +682,29 @@ impl Backend for HostBackend {
         st.momentum_tail(p, lr, AdamHyper::default());
         Ok(())
     }
+
+    fn prefill(&self, host: &[Vec<f32>], tokens: &[i32], cache: &mut KvCache)
+               -> Result<Vec<f32>> {
+        self.serve_chunk(host, tokens, cache)
+    }
+
+    fn decode_step(&self, host: &[Vec<f32>], token: i32, pos: usize, cache: &mut KvCache)
+                   -> Result<Vec<f32>> {
+        ensure!(
+            pos == cache.len(),
+            "decode_step at position {pos} but the cache holds {} positions — \
+             decode must be contiguous",
+            cache.len()
+        );
+        self.serve_chunk(host, &[token], cache)
+    }
 }
 
 // ---------------------------------------------------------------------------
-// Dense kernels over flat row-major buffers.
-//
-// `tensor::Mat` ships equivalent matmul variants, but `Mat` owns its
-// Vec<f32>: routing the weights through it would copy every parameter
-// on every step. These slice-level kernels work in place on the
-// session's host mirror; folding both onto shared slice cores under
-// tensor/ is a known follow-up (ROADMAP).
+// Elementwise + normalization kernels. The GEMMs are the shared slice
+// cores in `tensor::{gemm_nn, gemm_tn_acc, gemm_nt}` — one matmul
+// implementation for the whole repo.
 // ---------------------------------------------------------------------------
-
-/// `out[m, n] = a[m, k] @ b[k, n]` (i-k-j loop, accumulation row).
-fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (kk, &aik) in arow.iter().enumerate() {
-            if aik == 0.0 {
-                continue;
-            }
-            let brow = &b[kk * n..(kk + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += aik * bv;
-            }
-        }
-    }
-    out
-}
-
-/// `out[k, n] += a[m, k]^T @ b[m, n]` — weight-gradient accumulation.
-fn mm_tn_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
-    debug_assert_eq!(out.len(), k * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let brow = &b[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let orow = &mut out[kk * n..(kk + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    }
-}
-
-/// `out[m, k] = a[m, n] @ b[k, n]^T` — input-gradient through a weight.
-fn mm_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * k];
-    for i in 0..m {
-        let arow = &a[i * n..(i + 1) * n];
-        let orow = &mut out[i * k..(i + 1) * k];
-        for (j, o) in orow.iter_mut().enumerate() {
-            let brow = &b[j * n..(j + 1) * n];
-            let mut acc = 0.0f32;
-            for (x, y) in arow.iter().zip(brow) {
-                acc += x * y;
-            }
-            *o = acc;
-        }
-    }
-    out
-}
 
 fn sigmoid(z: f32) -> f32 {
     1.0 / (1.0 + (-z).exp())
@@ -791,63 +945,12 @@ mod tests {
     use super::*;
     use crate::util::Rng;
 
-    fn naive_mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-        let mut out = vec![0.0f32; m * n];
-        for i in 0..m {
-            for j in 0..n {
-                let mut acc = 0.0;
-                for kk in 0..k {
-                    acc += a[i * k + kk] * b[kk * n + j];
-                }
-                out[i * n + j] = acc;
-            }
-        }
-        out
-    }
-
     fn randv(n: usize, rng: &mut Rng) -> Vec<f32> {
         (0..n).map(|_| rng.normal() as f32).collect()
     }
 
-    #[test]
-    fn mm_variants_match_naive() {
-        let mut rng = Rng::new(1);
-        let (m, k, n) = (5, 7, 4);
-        let a = randv(m * k, &mut rng);
-        let b = randv(k * n, &mut rng);
-        let want = naive_mm(&a, &b, m, k, n);
-        let got = mm(&a, &b, m, k, n);
-        for (x, y) in got.iter().zip(&want) {
-            assert!((x - y).abs() < 1e-5);
-        }
-        // mm_nt(a, b_nk) == a @ b_nk^T with a [m, k], b_nk [n, k]
-        let b_nk = randv(n * k, &mut rng);
-        let mut b_t = vec![0.0f32; k * n];
-        for i in 0..n {
-            for j in 0..k {
-                b_t[j * n + i] = b_nk[i * k + j];
-            }
-        }
-        let want2 = naive_mm(&a, &b_t, m, k, n);
-        let got2 = mm_nt(&a, &b_nk, m, k, n);
-        for (x, y) in got2.iter().zip(&want2) {
-            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
-        }
-        // mm_tn_acc(a, c) == a^T @ c
-        let c = randv(m * n, &mut rng);
-        let mut at = vec![0.0f32; k * m];
-        for i in 0..m {
-            for j in 0..k {
-                at[j * m + i] = a[i * k + j];
-            }
-        }
-        let want3 = naive_mm(&at, &c, k, m, n);
-        let mut got3 = vec![0.0f32; k * n];
-        mm_tn_acc(&a, &c, m, k, n, &mut got3);
-        for (x, y) in got3.iter().zip(&want3) {
-            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
-        }
-    }
+    // the GEMM slice cores are pinned against naive matmul in
+    // tensor::tests::slice_cores_match_naive_and_accumulate
 
     #[test]
     fn rope_inv_is_inverse() {

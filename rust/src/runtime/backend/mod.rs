@@ -2,8 +2,9 @@
 //!
 //! The coordinator (trainer, optimizers, experiments) speaks one small
 //! execution ABI, [`Backend`]: fwd/bwd, predict, the fused-Adam update,
-//! the momentum-tail update, and parameter upload. Two implementations
-//! exist:
+//! the momentum-tail update, parameter upload, and the serving entry
+//! points ([`Backend::prefill`] / [`Backend::decode_step`] over a
+//! [`KvCache`]). Two implementations exist:
 //!
 //! - [`HostBackend`] (default): the full transformer forward/backward,
 //!   masked cross-entropy, per-parameter squared gradient norms, and
@@ -23,9 +24,10 @@ pub mod pjrt;
 
 pub use host::HostBackend;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::data::Batch;
+use crate::modelspec::ModelSpec;
 use crate::runtime::{EvalOutput, StepOutput};
 
 /// Which backend a run executes on.
@@ -52,6 +54,113 @@ impl BackendKind {
             BackendKind::Host => "host",
             BackendKind::Pjrt => "pjrt",
         }
+    }
+}
+
+/// Per-layer key/value ring buffers for incremental decode.
+///
+/// One cache belongs to one generation stream (one scheduler slot). Each
+/// layer holds `[capacity, kv_dim]` K and V buffers where `kv_dim =
+/// n_kv_heads * head_dim` — GQA-sized, so a cache is `n_heads /
+/// n_kv_heads` times smaller than the full attention residency. Absolute
+/// position `p` lives in ring slot `p % capacity`; once `len > capacity`
+/// decode degrades gracefully to sliding-window attention over the last
+/// `capacity` positions (RoPE still uses absolute positions).
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    n_layers: usize,
+    kv_dim: usize,
+    capacity: usize,
+    /// absolute positions appended so far (== the next decode position)
+    len: usize,
+    /// per-layer keys, `[capacity * kv_dim]` each
+    k: Vec<Vec<f32>>,
+    /// per-layer values, `[capacity * kv_dim]` each
+    v: Vec<Vec<f32>>,
+}
+
+impl KvCache {
+    /// Cache for `spec` holding up to `capacity` positions.
+    pub fn new(spec: &ModelSpec, capacity: usize) -> Result<Self> {
+        let mc = &spec.config;
+        ensure!(capacity > 0, "kv cache capacity must be > 0");
+        let kv_dim = mc.kv_dim();
+        Ok(KvCache {
+            n_layers: mc.n_layers,
+            kv_dim,
+            capacity,
+            len: 0,
+            k: (0..mc.n_layers).map(|_| vec![0.0; capacity * kv_dim]).collect(),
+            v: (0..mc.n_layers).map(|_| vec![0.0; capacity * kv_dim]).collect(),
+        })
+    }
+
+    /// Positions appended so far — the next decode position.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Maximum resident positions before the ring wraps.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.kv_dim
+    }
+
+    /// Resident K/V bytes (both buffers, all layers) — the scheduler's
+    /// memory-accounting unit.
+    pub fn bytes(&self) -> usize {
+        2 * self.n_layers * self.capacity * self.kv_dim * std::mem::size_of::<f32>()
+    }
+
+    /// [`Self::bytes`] as a closed form, without building a cache.
+    pub fn bytes_for(spec: &ModelSpec, capacity: usize) -> usize {
+        let mc = &spec.config;
+        2 * mc.n_layers * capacity * mc.kv_dim() * std::mem::size_of::<f32>()
+    }
+
+    /// Forget all cached positions (slot reuse).
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    /// Mutable K/V buffers of one layer (backend read/write path).
+    /// Ring indexing is the backend's contract: absolute position `pos`
+    /// lives at slot `pos % capacity`, and the attention window for a
+    /// query at `pos` starts at `(pos + 1).saturating_sub(capacity)`.
+    pub(crate) fn layer_mut(&mut self, layer: usize) -> (&mut [f32], &mut [f32]) {
+        (&mut self.k[layer], &mut self.v[layer])
+    }
+
+    /// Mark `t` freshly written positions as resident.
+    pub(crate) fn advance(&mut self, t: usize) {
+        self.len += t;
+    }
+
+    /// The cache must match the model it is used with.
+    pub(crate) fn check_spec(&self, spec: &ModelSpec) -> Result<()> {
+        let mc = &spec.config;
+        ensure!(
+            self.n_layers == mc.n_layers && self.kv_dim == mc.kv_dim(),
+            "kv cache shape [{} layers, kv_dim {}] does not match model {:?} \
+             [{} layers, kv_dim {}]",
+            self.n_layers,
+            self.kv_dim,
+            mc.name,
+            mc.n_layers,
+            mc.kv_dim(),
+        );
+        Ok(())
     }
 }
 
@@ -98,6 +207,24 @@ pub trait Backend {
         v: &[f32],
         lr: f32,
     ) -> Result<()>;
+
+    /// Serving entry point: run `tokens` (one sequence, absolute
+    /// positions `cache.len()..cache.len() + tokens.len()`), appending
+    /// K/V into `cache`, and return the final position's logits `[v]`.
+    fn prefill(&self, host: &[Vec<f32>], tokens: &[i32], cache: &mut KvCache)
+               -> Result<Vec<f32>> {
+        let _ = (host, tokens, cache);
+        bail!("backend {:?} does not support incremental decode", self.name())
+    }
+
+    /// Serving entry point: decode one token at absolute position `pos`
+    /// (must equal `cache.len()`), appending its K/V, and return the
+    /// next-token logits `[v]`.
+    fn decode_step(&self, host: &[Vec<f32>], token: i32, pos: usize, cache: &mut KvCache)
+                   -> Result<Vec<f32>> {
+        let _ = (host, token, pos, cache);
+        bail!("backend {:?} does not support incremental decode", self.name())
+    }
 }
 
 #[cfg(test)]

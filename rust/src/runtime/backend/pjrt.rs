@@ -19,7 +19,7 @@ use xla::{PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
 use crate::data::Batch;
 use crate::modelspec::ModelSpec;
-use crate::runtime::backend::Backend;
+use crate::runtime::backend::{Backend, KvCache};
 use crate::runtime::{EvalOutput, StepOutput};
 
 /// PJRT client + compiled-executable cache (one per `Engine`).
@@ -262,5 +262,23 @@ impl Backend for PjrtBackend {
             .map_err(|e| anyhow!("{e:?}"))?;
         *p = p_new;
         self.sync_param(idx, p)
+    }
+
+    // The AOT artifacts are lowered for fixed [b, s] training shapes;
+    // no incremental-decode graphs exist, so serving is host-only.
+    fn prefill(&self, _host: &[Vec<f32>], _tokens: &[i32], _cache: &mut KvCache)
+               -> Result<Vec<f32>> {
+        Err(anyhow!(
+            "pjrt backend does not support incremental decode: the AOT artifacts \
+             contain no prefill/decode graphs — serve with --backend host"
+        ))
+    }
+
+    fn decode_step(&self, _host: &[Vec<f32>], _token: i32, _pos: usize,
+                   _cache: &mut KvCache) -> Result<Vec<f32>> {
+        Err(anyhow!(
+            "pjrt backend does not support incremental decode: the AOT artifacts \
+             contain no prefill/decode graphs — serve with --backend host"
+        ))
     }
 }

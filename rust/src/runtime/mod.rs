@@ -23,7 +23,7 @@ use anyhow::Result;
 use crate::modelspec::{Manifest, ModelSpec, ModuleKind};
 use crate::util::Rng;
 
-pub use backend::{Backend, BackendKind, HostBackend};
+pub use backend::{Backend, BackendKind, HostBackend, KvCache};
 #[cfg(feature = "pjrt")]
 pub use backend::pjrt::PjrtBackend;
 
@@ -197,6 +197,25 @@ impl Session {
     /// One eval step via the predict graph.
     pub fn predict(&self, batch: &crate::data::Batch) -> Result<EvalOutput> {
         self.backend.predict(&self.host, batch)
+    }
+
+    /// A KV cache shaped for this session's model, holding `capacity`
+    /// positions (one per concurrent generation stream).
+    pub fn kv_cache(&self, capacity: usize) -> Result<KvCache> {
+        KvCache::new(&self.spec, capacity)
+    }
+
+    /// Serve: run a prompt chunk through the model, appending K/V into
+    /// `cache`; returns the final position's logits `[vocab]`.
+    pub fn prefill(&self, tokens: &[i32], cache: &mut KvCache) -> Result<Vec<f32>> {
+        self.backend.prefill(&self.host, tokens, cache)
+    }
+
+    /// Serve: decode one token at absolute position `pos`
+    /// (= `cache.len()`); returns the next-token logits `[vocab]`.
+    pub fn decode_step(&self, token: i32, pos: usize, cache: &mut KvCache)
+                       -> Result<Vec<f32>> {
+        self.backend.decode_step(&self.host, token, pos, cache)
     }
 
     /// Fused Adam update of parameter `idx` on the hot path: consumes

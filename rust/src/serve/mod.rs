@@ -1,0 +1,36 @@
+//! Inference serving subsystem.
+//!
+//! Training produces checkpoints; this module is how they get *used*.
+//! It layers on the execution ABI's serving entry points
+//! (`Backend::prefill` / `Backend::decode_step` over a
+//! `runtime::KvCache`) and is backend-agnostic like everything else
+//! above the runtime — though only the host backend implements
+//! incremental decode today (PJRT's AOT artifacts carry no decode
+//! graphs and return a clear unsupported error).
+//!
+//! - [`sampler`] — token selection over final-position logits: greedy,
+//!   temperature, top-k, top-p. Driven by the deterministic `util::Rng`
+//!   so generations are seed-reproducible.
+//! - [`generate`] — the single-stream loop: prefill the prompt, then
+//!   decode token-by-token against one KV cache. Powers
+//!   `misa generate`.
+//! - [`scheduler`] — continuous batching: a request queue with
+//!   token-budget admission, per-slot KV caches, iteration-level
+//!   scheduling (new requests are admitted the moment finished ones
+//!   free slots), and per-request TTFT / tokens-per-second metrics
+//!   through `util::metrics`. Powers `misa bench-serve`.
+//!
+//! Memory accounting: one slot's KV cache holds
+//! `2 * n_layers * capacity * kv_dim` f32s (`KvCache::bytes`), where
+//! `capacity = prompt_len + max_new` and `kv_dim = n_kv_heads *
+//! head_dim` — GQA-sized, `n_heads / n_kv_heads` times smaller than
+//! full attention residency. The scheduler's token budget bounds the
+//! sum of slot capacities, which bounds resident KV bytes.
+
+pub mod generate;
+pub mod sampler;
+pub mod scheduler;
+
+pub use generate::{generate, GenerateCfg, Generation};
+pub use sampler::{argmax, sample, SamplerCfg};
+pub use scheduler::{Completion, FinishReason, Request, Scheduler, SchedulerCfg};

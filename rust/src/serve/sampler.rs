@@ -1,0 +1,231 @@
+//! Token samplers over final-position logits.
+//!
+//! Greedy, temperature, top-k and top-p (nucleus) sampling, composed in
+//! the conventional order: temperature scaling → top-k truncation →
+//! top-p truncation → renormalize → draw. All randomness comes from the
+//! caller's deterministic `util::Rng`, so a (seed, prompt, checkpoint)
+//! triple always regenerates the same tokens — the property the CLI
+//! and the serving tests pin.
+
+use anyhow::{ensure, Result};
+
+use crate::util::Rng;
+
+/// Sampling configuration for one generation stream.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SamplerCfg {
+    /// Softmax temperature; `<= 0` selects greedy decoding.
+    pub temperature: f32,
+    /// Keep only the `top_k` highest-logit tokens (`0` disables).
+    pub top_k: usize,
+    /// Nucleus: keep the smallest prefix of the sorted distribution
+    /// whose cumulative mass reaches `top_p` (`>= 1.0` disables).
+    pub top_p: f32,
+}
+
+impl Default for SamplerCfg {
+    fn default() -> Self {
+        SamplerCfg { temperature: 1.0, top_k: 0, top_p: 1.0 }
+    }
+}
+
+impl SamplerCfg {
+    /// Deterministic argmax decoding.
+    pub fn greedy() -> Self {
+        SamplerCfg { temperature: 0.0, top_k: 0, top_p: 1.0 }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.temperature.is_finite(), "temperature must be finite");
+        ensure!(
+            self.top_p > 0.0 && self.top_p.is_finite(),
+            "top-p must be positive (got {}); values >= 1 disable nucleus sampling",
+            self.top_p
+        );
+        Ok(())
+    }
+}
+
+/// Index of the largest logit (first on ties — the shared
+/// [`crate::util::argmax`], the same convention the predict graph uses).
+pub fn argmax(logits: &[f32]) -> usize {
+    crate::util::argmax(logits)
+}
+
+/// Draw one token id from `logits` under `cfg`.
+pub fn sample(logits: &[f32], cfg: &SamplerCfg, rng: &mut Rng) -> usize {
+    assert!(!logits.is_empty(), "sample over empty logits");
+    if cfg.temperature <= 0.0 {
+        return argmax(logits);
+    }
+    // candidate order: descending logit, ties by index, so the order —
+    // and therefore the draw — is fully deterministic. This runs per
+    // decoded token, so only order what the filters actually need:
+    // top-k selects to the k boundary and sorts just the kept k;
+    // top-p needs the kept set sorted; plain temperature needs nothing.
+    let n = logits.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    let desc = |a: &usize, b: &usize| logits[*b].total_cmp(&logits[*a]).then(a.cmp(b));
+    if cfg.top_k > 0 && cfg.top_k < n {
+        order.select_nth_unstable_by(cfg.top_k - 1, desc);
+        order.truncate(cfg.top_k);
+        order.sort_unstable_by(desc);
+    } else if cfg.top_p < 1.0 {
+        order.sort_unstable_by(desc);
+    }
+
+    // softmax over the surviving candidates at the given temperature.
+    // Subtract the max BEFORE scaling, in f64: the top exponent stays 0,
+    // so even near-zero temperatures (1/T overflowing f32) degrade to
+    // near-greedy instead of NaN probabilities.
+    let inv_t = 1.0f64 / cfg.temperature as f64;
+    let mx = order.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+    let mut probs: Vec<f64> = order
+        .iter()
+        .map(|&i| (((logits[i] - mx) as f64) * inv_t).exp())
+        .collect();
+    let total: f64 = probs.iter().sum();
+    for p in probs.iter_mut() {
+        *p /= total;
+    }
+
+    // nucleus truncation: keep the smallest prefix reaching top_p mass
+    // (always at least one token)
+    if cfg.top_p < 1.0 {
+        let mut cum = 0.0f64;
+        let mut cut = probs.len();
+        for (j, &p) in probs.iter().enumerate() {
+            cum += p;
+            if cum >= cfg.top_p as f64 {
+                cut = j + 1;
+                break;
+            }
+        }
+        probs.truncate(cut);
+        order.truncate(cut);
+        let mass: f64 = probs.iter().sum();
+        for p in probs.iter_mut() {
+            *p /= mass;
+        }
+    }
+
+    let mut u = rng.f64();
+    for (j, &p) in probs.iter().enumerate() {
+        u -= p;
+        if u <= 0.0 {
+            return order[j];
+        }
+    }
+    *order.last().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logits_from(xs: &[f32]) -> Vec<f32> {
+        xs.to_vec()
+    }
+
+    #[test]
+    fn zero_temperature_is_greedy() {
+        let logits = logits_from(&[0.1, 2.0, -1.0, 1.9]);
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let cfg = SamplerCfg { temperature: 0.0, top_k: 2, top_p: 0.5 };
+            assert_eq!(sample(&logits, &cfg, &mut rng), 1);
+            assert_eq!(argmax(&logits), 1);
+        }
+    }
+
+    #[test]
+    fn top_k_truncates_support() {
+        // logits rank: idx 3 > 1 > 0 > 2; k=2 must only ever emit {3, 1}
+        let logits = logits_from(&[0.5, 1.5, -0.5, 2.5]);
+        let cfg = SamplerCfg { temperature: 1.0, top_k: 2, top_p: 1.0 };
+        let mut rng = Rng::new(7);
+        let mut seen = [0usize; 4];
+        for _ in 0..500 {
+            seen[sample(&logits, &cfg, &mut rng)] += 1;
+        }
+        assert_eq!(seen[0], 0);
+        assert_eq!(seen[2], 0);
+        assert!(seen[1] > 0 && seen[3] > 0, "both top-2 tokens should appear: {seen:?}");
+        assert!(seen[3] > seen[1], "higher logit must dominate: {seen:?}");
+    }
+
+    #[test]
+    fn top_p_truncates_tail_mass() {
+        // one dominant token (~0.95 mass): top_p = 0.9 keeps only it
+        let logits = logits_from(&[6.0, 0.0, 0.0, 0.0]);
+        let cfg = SamplerCfg { temperature: 1.0, top_k: 0, top_p: 0.9 };
+        let mut rng = Rng::new(11);
+        for _ in 0..200 {
+            assert_eq!(sample(&logits, &cfg, &mut rng), 0);
+        }
+        // two equal heads holding ~all mass: top_p = 0.9 keeps both,
+        // never the tail
+        let logits = logits_from(&[5.0, 5.0, -5.0, -5.0]);
+        let mut seen = [0usize; 4];
+        for _ in 0..500 {
+            seen[sample(&logits, &cfg, &mut rng)] += 1;
+        }
+        assert!(seen[0] > 0 && seen[1] > 0, "{seen:?}");
+        assert_eq!(seen[2] + seen[3], 0, "{seen:?}");
+    }
+
+    #[test]
+    fn temperature_sharpens_distribution() {
+        let logits = logits_from(&[1.0, 0.0]);
+        let mut hot = 0usize;
+        let mut cold = 0usize;
+        let n = 2000;
+        let mut rng = Rng::new(13);
+        for _ in 0..n {
+            let c = SamplerCfg { temperature: 4.0, ..SamplerCfg::default() };
+            if sample(&logits, &c, &mut rng) == 0 {
+                hot += 1;
+            }
+            let c = SamplerCfg { temperature: 0.25, ..SamplerCfg::default() };
+            if sample(&logits, &c, &mut rng) == 0 {
+                cold += 1;
+            }
+        }
+        // T=4 → p(0) ≈ 0.56; T=0.25 → p(0) ≈ 0.98
+        assert!(cold > hot, "cold {cold} vs hot {hot}");
+        assert!(cold as f64 / n as f64 > 0.9, "cold frac {}", cold as f64 / n as f64);
+    }
+
+    #[test]
+    fn same_seed_same_draws() {
+        let logits = logits_from(&[0.3, 0.1, 0.9, 0.2, 0.45]);
+        let cfg = SamplerCfg { temperature: 0.8, top_k: 4, top_p: 0.95 };
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(sample(&logits, &cfg, &mut a), sample(&logits, &cfg, &mut b));
+        }
+    }
+
+    #[test]
+    fn tiny_temperature_degrades_to_near_greedy_not_nan() {
+        // 1/T overflows f32 at T ~ 1e-39; the draw must still pick the
+        // argmax token, never fall through on NaN probabilities
+        let logits = logits_from(&[0.5, 3.0, -1.0, 2.9]);
+        let cfg = SamplerCfg { temperature: 1e-39, top_k: 0, top_p: 1.0 };
+        let mut rng = Rng::new(17);
+        for _ in 0..50 {
+            assert_eq!(sample(&logits, &cfg, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs() {
+        assert!(SamplerCfg { top_p: 0.0, ..SamplerCfg::default() }.validate().is_err());
+        assert!(SamplerCfg { temperature: f32::NAN, ..SamplerCfg::default() }
+            .validate()
+            .is_err());
+        assert!(SamplerCfg::default().validate().is_ok());
+        assert!(SamplerCfg::greedy().validate().is_ok());
+    }
+}

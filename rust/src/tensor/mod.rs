@@ -5,8 +5,89 @@
 //! pieces the baselines do *outside* the graph: LoRA/DoRA adapter
 //! projections, GaLore's low-rank range finder, column norms, and the
 //! householder-free QR used for subspace orthonormalization.
+//!
+//! The GEMM variants come in two layers: slice cores
+//! ([`gemm_nn`], [`gemm_tn_acc`], [`gemm_nt`]) that work on flat
+//! row-major buffers — the single matmul implementation shared with the
+//! `HostBackend` transformer — and thin [`Mat`] wrappers
+//! ([`matmul`], [`matmul_tn`], [`matmul_nt`]) for coordinator code that
+//! carries shapes around.
 
 use crate::util::Rng;
+
+// ---------------------------------------------------------------------------
+// Slice-level GEMM cores over flat row-major buffers.
+//
+// These are THE matmul kernels of the repo: the HostBackend forward,
+// backward and serving paths and the `Mat` wrappers below all route
+// through them, so there is exactly one implementation to optimize.
+// The zero-skip in the accumulation loops is load-bearing for sparse
+// gradients (masked positions produce all-zero rows).
+// ---------------------------------------------------------------------------
+
+/// `out[m, n] = a[m, k] @ b[k, n]` (cache-friendly i-k-j loop with an
+/// accumulation row).
+pub fn gemm_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += aik * bv;
+            }
+        }
+    }
+    out
+}
+
+/// `out[k, n] += a[m, k]^T @ b[m, n]` — weight-gradient accumulation
+/// without materializing the transpose.
+pub fn gemm_tn_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), k * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[kk * n..(kk + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `out[m, k] = a[m, n] @ b[k, n]^T` — input gradients through a weight,
+/// without materializing the transpose.
+pub fn gemm_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * k];
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        let orow = &mut out[i * k..(i + 1) * k];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * n..(j + 1) * n];
+            let mut acc = 0.0f32;
+            for (x, y) in arow.iter().zip(brow) {
+                acc += x * y;
+            }
+            *o = acc;
+        }
+    }
+    out
+}
 
 /// Dense row-major f32 matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -89,62 +170,24 @@ impl Mat {
     }
 }
 
-/// C = A @ B. Cache-friendly i-k-j loop with an accumulation row.
+/// C = A @ B ([`gemm_nn`] slice core behind `Mat` shapes).
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.rows, "matmul shape mismatch");
-    let mut c = Mat::zeros(a.rows, b.cols);
-    for i in 0..a.rows {
-        let arow = a.row(i);
-        let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
-        for (k, &aik) in arow.iter().enumerate() {
-            if aik == 0.0 {
-                continue;
-            }
-            let brow = &b.data[k * b.cols..(k + 1) * b.cols];
-            for (cj, &bkj) in crow.iter_mut().zip(brow) {
-                *cj += aik * bkj;
-            }
-        }
-    }
-    c
+    Mat::from_vec(a.rows, b.cols, gemm_nn(&a.data, &b.data, a.rows, a.cols, b.cols))
 }
 
-/// C = A^T @ B without materializing A^T.
+/// C = A^T @ B without materializing A^T ([`gemm_tn_acc`] core).
 pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.rows, b.rows, "matmul_tn shape mismatch");
     let mut c = Mat::zeros(a.cols, b.cols);
-    for r in 0..a.rows {
-        let arow = a.row(r);
-        let brow = b.row(r);
-        for (i, &ari) in arow.iter().enumerate() {
-            if ari == 0.0 {
-                continue;
-            }
-            let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
-            for (cj, &bj) in crow.iter_mut().zip(brow) {
-                *cj += ari * bj;
-            }
-        }
-    }
+    gemm_tn_acc(&a.data, &b.data, a.rows, a.cols, b.cols, &mut c.data);
     c
 }
 
-/// C = A @ B^T without materializing B^T.
+/// C = A @ B^T without materializing B^T ([`gemm_nt`] core).
 pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.cols, "matmul_nt shape mismatch");
-    let mut c = Mat::zeros(a.rows, b.rows);
-    for i in 0..a.rows {
-        let arow = a.row(i);
-        for j in 0..b.rows {
-            let brow = b.row(j);
-            let mut s = 0.0f32;
-            for (&x, &y) in arow.iter().zip(brow) {
-                s += x * y;
-            }
-            c.data[i * b.rows + j] = s;
-        }
-    }
-    c
+    Mat::from_vec(a.rows, b.rows, gemm_nt(&a.data, &b.data, a.rows, a.cols, b.rows))
 }
 
 /// In-place modified Gram–Schmidt: orthonormalize the columns of `m`.
@@ -200,7 +243,7 @@ pub fn orthonormalize_cols(m: &mut Mat, rng: &mut Rng) {
 
 /// Randomized range finder (Halko et al.): an orthonormal `rows x rank`
 /// basis approximating the column space of `g`. This is the SVD-free
-/// subspace computation our GaLore substitute uses (DESIGN.md Sec. 3);
+/// subspace computation our GaLore substitute uses (DESIGN.md Sec. 4);
 /// one extra power iteration sharpens the spectrum.
 pub fn range_finder(g: &Mat, rank: usize, rng: &mut Rng) -> Mat {
     let rank = rank.min(g.rows).min(g.cols);
@@ -260,6 +303,34 @@ mod tests {
             let b2 = Mat::randn(n, k, 1.0, rng);
             assert_close(&matmul_nt(&a2, &b2), &matmul(&a2, &b2.transpose()), 1e-4);
         });
+    }
+
+    #[test]
+    fn slice_cores_match_naive_and_accumulate() {
+        let mut rng = Rng::new(29);
+        let (m, k, n) = (5, 7, 4);
+        let a = Mat::randn(m, k, 1.0, &mut rng);
+        let b = Mat::randn(k, n, 1.0, &mut rng);
+        let want = naive_matmul(&a, &b);
+        let got = gemm_nn(&a.data, &b.data, m, k, n);
+        for (x, y) in got.iter().zip(&want.data) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+        // gemm_nt(a, b_nk) == a @ b_nk^T
+        let b_nk = Mat::randn(n, k, 1.0, &mut rng);
+        let want2 = naive_matmul(&a, &b_nk.transpose());
+        let got2 = gemm_nt(&a.data, &b_nk.data, m, k, n);
+        for (x, y) in got2.iter().zip(&want2.data) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+        // gemm_tn_acc ACCUMULATES a^T @ c on top of the existing buffer
+        let c = Mat::randn(m, n, 1.0, &mut rng);
+        let want3 = naive_matmul(&a.transpose(), &c);
+        let mut got3 = vec![1.0f32; k * n];
+        gemm_tn_acc(&a.data, &c.data, m, k, n, &mut got3);
+        for (x, y) in got3.iter().zip(&want3.data) {
+            assert!((x - (y + 1.0)).abs() < 1e-4, "{x} vs {}", y + 1.0);
+        }
     }
 
     #[test]

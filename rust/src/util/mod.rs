@@ -16,6 +16,18 @@ pub fn gib(bytes: u64) -> f64 {
     bytes as f64 / (1024.0 * 1024.0 * 1024.0)
 }
 
+/// Index of the largest value, first on ties — the argmax convention
+/// shared by the predict graph and the greedy token sampler.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    for j in 1..xs.len() {
+        if xs[j] > xs[best] {
+            best = j;
+        }
+    }
+    best
+}
+
 /// Wall-clock seconds since an `Instant`.
 pub fn secs_since(t: std::time::Instant) -> f64 {
     t.elapsed().as_secs_f64()

@@ -1,0 +1,241 @@
+//! Serving-subsystem integration tests: KV-cache numerics parity with
+//! the uncached training forward, ring-buffer behavior, scheduler
+//! end-to-end runs, and the train → checkpoint → generate round trip —
+//! all on the default host backend, artifact-free.
+
+use misa::coordinator::ckpt;
+use misa::modelspec::Manifest;
+use misa::runtime::{init_params, Backend, Engine, HostBackend, KvCache, Session};
+use misa::serve::{generate, GenerateCfg, Request, SamplerCfg, Scheduler, SchedulerCfg};
+use misa::util::Rng;
+
+/// The `tiny` builtin model with randomly initialized parameters, plus
+/// a direct `HostBackend` for the uncached reference path.
+fn tiny_backend() -> (HostBackend, Vec<Vec<f32>>) {
+    let spec = Manifest::builtin().model("tiny").unwrap().clone();
+    let host = init_params(&spec, 42);
+    (HostBackend::new(spec).unwrap(), host)
+}
+
+fn random_prompt(len: usize, vocab: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    let mut p = vec![1i32]; // BOS
+    while p.len() < len {
+        p.push(rng.range(4, vocab) as i32);
+    }
+    p
+}
+
+/// Acceptance criterion: greedy incremental decode must produce logits
+/// within 1e-5 of running the full uncached forward on the growing
+/// sequence, position by position.
+#[test]
+fn kv_cache_decode_matches_uncached_forward() {
+    let (be, host) = tiny_backend();
+    let vocab = 256usize;
+    let prompt = random_prompt(6, vocab, 7);
+    let n_new = 12;
+    let mut cache = KvCache::new(
+        &Manifest::builtin().model("tiny").unwrap().clone(),
+        prompt.len() + n_new,
+    )
+    .unwrap();
+
+    // prefill logits == last row of the uncached forward over the prompt
+    let cached = be.prefill(&host, &prompt, &mut cache).unwrap();
+    let full = be.full_logits(&host, &prompt).unwrap();
+    let last = &full[(prompt.len() - 1) * vocab..];
+    assert_eq!(cached.len(), vocab);
+    for (a, b) in cached.iter().zip(last) {
+        assert!((a - b).abs() < 1e-5, "prefill logits diverge: {a} vs {b}");
+    }
+
+    // greedy decode, re-checking against the growing uncached sequence
+    let mut seq = prompt.clone();
+    let mut logits = cached;
+    for step in 0..n_new {
+        let next = misa::serve::argmax(&logits) as i32;
+        seq.push(next);
+        logits = be.decode_step(&host, next, cache.len(), &mut cache).unwrap();
+        let full = be.full_logits(&host, &seq).unwrap();
+        let last = &full[(seq.len() - 1) * vocab..];
+        let mut max_err = 0.0f32;
+        for (a, b) in logits.iter().zip(last) {
+            max_err = max_err.max((a - b).abs());
+            assert!((a - b).abs() < 1e-5, "step {step}: cached {a} vs uncached {b}");
+        }
+        // the argmaxes must agree exactly, not just within tolerance
+        assert_eq!(
+            misa::serve::argmax(&logits),
+            misa::serve::argmax(last),
+            "step {step}: argmax diverged (max |Δ| {max_err})"
+        );
+    }
+}
+
+/// Chunked prefill (prompt split across two prefill calls) must match
+/// one-shot prefill.
+#[test]
+fn chunked_prefill_matches_one_shot() {
+    let (be, host) = tiny_backend();
+    let spec = Manifest::builtin().model("tiny").unwrap().clone();
+    let prompt = random_prompt(9, 256, 21);
+    let mut one = KvCache::new(&spec, 16).unwrap();
+    let a = be.prefill(&host, &prompt, &mut one).unwrap();
+    let mut two = KvCache::new(&spec, 16).unwrap();
+    be.prefill(&host, &prompt[..4], &mut two).unwrap();
+    let b = be.prefill(&host, &prompt[4..], &mut two).unwrap();
+    assert_eq!(one.len(), two.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+    }
+}
+
+/// A multi-token chunk that wraps the ring must match feeding the same
+/// tokens one at a time: per-position write-then-attend ordering means
+/// wrapping writes never clobber a slot an earlier in-chunk query still
+/// needs.
+#[test]
+fn wrapping_chunked_prefill_matches_per_token_decode() {
+    let (be, host) = tiny_backend();
+    let spec = Manifest::builtin().model("tiny").unwrap().clone();
+    let toks = random_prompt(8, 256, 55);
+    let capacity = 6; // positions 6, 7 wrap onto slots 0, 1
+    let mut step = KvCache::new(&spec, capacity).unwrap();
+    let mut want = Vec::new();
+    for &tk in &toks {
+        want = be.prefill(&host, &[tk], &mut step).unwrap();
+    }
+    let mut chunked = KvCache::new(&spec, capacity).unwrap();
+    be.prefill(&host, &toks[..4], &mut chunked).unwrap();
+    let got = be.prefill(&host, &toks[4..], &mut chunked).unwrap();
+    assert_eq!(chunked.len(), step.len());
+    for (x, y) in got.iter().zip(&want) {
+        assert!((x - y).abs() < 1e-5, "wrapping chunk diverged: {x} vs {y}");
+    }
+}
+
+/// Once past capacity the ring degrades to sliding-window attention:
+/// decode keeps working, stays finite, and RoPE still uses absolute
+/// positions (so logits differ from a fresh short-context run).
+#[test]
+fn ring_wraparound_decodes_past_capacity() {
+    let (be, host) = tiny_backend();
+    let spec = Manifest::builtin().model("tiny").unwrap().clone();
+    let mut cache = KvCache::new(&spec, 6).unwrap();
+    let prompt = random_prompt(4, 256, 33);
+    let mut logits = be.prefill(&host, &prompt, &mut cache).unwrap();
+    for _ in 0..10 {
+        let next = misa::serve::argmax(&logits) as i32;
+        logits = be.decode_step(&host, next, cache.len(), &mut cache).unwrap();
+        assert!(logits.iter().all(|x| x.is_finite()));
+    }
+    assert_eq!(cache.len(), 14); // absolute positions keep advancing
+    assert_eq!(cache.capacity(), 6);
+}
+
+#[test]
+fn decode_rejects_non_contiguous_position() {
+    let (be, host) = tiny_backend();
+    let spec = Manifest::builtin().model("tiny").unwrap().clone();
+    let mut cache = KvCache::new(&spec, 8).unwrap();
+    be.prefill(&host, &[1, 2, 3], &mut cache).unwrap();
+    let err = be.decode_step(&host, 4, 7, &mut cache).unwrap_err();
+    assert!(format!("{err:#}").contains("contiguous"), "{err:#}");
+    // cache from a different model shape is rejected
+    let small = Manifest::builtin().model("small").unwrap().clone();
+    let mut wrong = KvCache::new(&small, 8).unwrap();
+    assert!(be.prefill(&host, &[1, 2], &mut wrong).is_err());
+    // a chunk longer than the cache capacity is rejected
+    let mut short = KvCache::new(&spec, 2).unwrap();
+    assert!(be.prefill(&host, &[1, 2, 3], &mut short).is_err());
+}
+
+/// Train a few steps, checkpoint, reload, generate — the round trip the
+/// CI smoke job drives through the CLI, with determinism pinned: the
+/// same (checkpoint, prompt, seed) triple must regenerate identical
+/// tokens across independent sessions.
+#[test]
+fn train_checkpoint_generate_roundtrip_is_deterministic() {
+    use misa::config::RunConfig;
+    use misa::coordinator::Trainer;
+
+    let mut eng = Engine::host();
+    let rc = RunConfig {
+        model: "tiny".into(),
+        steps: 3,
+        ..RunConfig::default()
+    };
+    let mut t = Trainer::new(&mut eng, rc).unwrap();
+    t.run(3).unwrap();
+    let path = std::env::temp_dir().join(format!("misa_serve_rt_{}.bin", std::process::id()));
+    ckpt::save(&path, &t.sess.host).unwrap();
+
+    let spec = eng.manifest.model("tiny").unwrap().clone();
+    let cfg = GenerateCfg {
+        max_new: 10,
+        sampler: SamplerCfg { temperature: 0.7, top_k: 24, top_p: 0.9 },
+        seed: 5,
+        eos: None,
+    };
+    let mut outs = Vec::new();
+    for _ in 0..2 {
+        let params = ckpt::load(&path).unwrap();
+        let mut eng2 = Engine::host();
+        let sess = Session::with_params(&mut eng2, spec.clone(), params).unwrap();
+        outs.push(generate(&sess, &[1, 40, 41], &cfg).unwrap().tokens);
+    }
+    assert_eq!(outs[0], outs[1], "generation must be seed-reproducible");
+    assert_eq!(outs[0].len(), 10);
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Continuous batching at the Session level: mixed-length requests all
+/// complete, and each one's tokens are independent of batch composition.
+#[test]
+fn scheduler_end_to_end_over_session() {
+    let mut eng = Engine::host();
+    let sess = Session::create(&mut eng, "tiny", 3).unwrap();
+    let mut sched = Scheduler::new(SchedulerCfg { max_slots: 3, token_budget: 128 });
+    let mk = |id: u64, plen: usize, max_new: usize| Request {
+        id,
+        prompt: random_prompt(plen, 256, 100 + id),
+        max_new,
+        sampler: SamplerCfg { temperature: 0.8, top_k: 12, top_p: 0.95 },
+        seed: 900 + id,
+        eos: None,
+    };
+    let reqs = [mk(0, 3, 9), mk(1, 7, 4), mk(2, 2, 12), mk(3, 5, 6), mk(4, 4, 7)];
+    for r in &reqs {
+        sched.submit(r.clone()).unwrap();
+    }
+    let mut done = sched.run(&sess).unwrap();
+    assert_eq!(done.len(), reqs.len());
+    assert!(sched.peak_active() >= 2);
+    done.sort_by_key(|c| c.id);
+    for (c, r) in done.iter().zip(&reqs) {
+        assert_eq!(c.tokens.len(), r.max_new);
+        let solo = generate(
+            &sess,
+            &r.prompt,
+            &GenerateCfg { max_new: r.max_new, sampler: r.sampler, seed: r.seed, eos: r.eos },
+        )
+        .unwrap();
+        assert_eq!(c.tokens, solo.tokens, "request {} depends on batch composition", r.id);
+    }
+}
+
+/// KV memory accounting: GQA halves the cache relative to MHA head
+/// count, and bytes() matches the documented closed form.
+#[test]
+fn kv_cache_memory_accounting() {
+    let spec = Manifest::builtin().model("tiny").unwrap().clone();
+    let mc = &spec.config;
+    let cache = KvCache::new(&spec, 64).unwrap();
+    let want = 2 * mc.n_layers * 64 * mc.kv_dim() * 4;
+    assert_eq!(cache.bytes(), want);
+    assert_eq!(KvCache::bytes_for(&spec, 64), want);
+    // tiny is GQA 4/2: kv_dim is half of dim
+    assert_eq!(mc.kv_dim() * 2, mc.dim);
+    assert!(cache.is_empty());
+}
