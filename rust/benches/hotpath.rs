@@ -33,7 +33,8 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
 }
 
 fn main() -> anyhow::Result<()> {
-    println!("== hot-path micro-benchmarks ==");
+    let threads = misa::tensor::threads();
+    println!("== hot-path micro-benchmarks (threads={threads}) ==");
 
     // ---- L3 host primitives (no artifacts needed) ----------------------
     let mut rng = Rng::new(0);
@@ -42,6 +43,17 @@ fn main() -> anyhow::Result<()> {
     bench("tensor: matmul 128x344 @ 344x128", 200, || {
         std::hint::black_box(matmul(&a, &b));
     });
+    // blocked + parallel GEMM at a training-relevant shape: large
+    // enough to engage the packed-panel tiling and the worker pool
+    let ga = Mat::randn(512, 512, 1.0, &mut rng);
+    let gb = Mat::randn(512, 512, 1.0, &mut rng);
+    bench(
+        &format!("tensor: blocked matmul 512^3 ({threads} thr)"),
+        20,
+        || {
+            std::hint::black_box(matmul(&ga, &gb));
+        },
+    );
     let g = Mat::randn(344, 128, 1.0, &mut rng);
     bench("tensor: range_finder r=16 (GaLore refresh)", 50, || {
         let mut r2 = Rng::new(1);

@@ -2,12 +2,21 @@
 //! backend: prefill latency, per-token decode latency, single-stream
 //! generation, and continuous-batching throughput at several
 //! concurrency levels. Artifact-free (builtin registry, random init).
+//!
+//! The slot sweep is the tentpole measurement: `slots = 1` decodes the
+//! 8-request workload one stream at a time (the per-slot baseline),
+//! while `slots = 8` runs the same workload through one batched
+//! `decode_batch` forward per iteration — the aggregate tok/s ratio is
+//! the batching win. Honors `MISA_THREADS` (worker-pool width) and
+//! with `-- --json FILE` writes the sweep as a JSON **array** of
+//! records (one per model x slot-count point; the `misa bench-serve
+//! --json` CLI path writes a single bare object).
 
 use std::time::Instant;
 
 use misa::runtime::{Engine, Session};
 use misa::serve::{generate, GenerateCfg, Request, SamplerCfg, Scheduler, SchedulerCfg};
-use misa::util::Rng;
+use misa::util::{BenchRecord, Rng};
 
 fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
     f(); // warmup
@@ -36,7 +45,16 @@ fn prompt(len: usize, vocab: usize, seed: u64) -> Vec<i32> {
 }
 
 fn main() -> anyhow::Result<()> {
-    println!("== serving benchmarks (host backend, builtin registry) ==");
+    let json_path = {
+        let argv: Vec<String> = std::env::args().collect();
+        argv.iter()
+            .position(|a| a == "--json")
+            .and_then(|i| argv.get(i + 1))
+            .cloned()
+    };
+    let threads = misa::tensor::threads();
+    println!("== serving benchmarks (host backend, builtin registry, threads={threads}) ==");
+    let mut records: Vec<BenchRecord> = Vec::new();
     for model in ["tiny", "small"] {
         let mut eng = Engine::host();
         let sess = Session::create(&mut eng, model, 0)?;
@@ -60,12 +78,15 @@ fn main() -> anyhow::Result<()> {
             generate(&sess, &p16, &cfg).unwrap();
         });
 
-        for slots in [1usize, 4] {
+        // the acceptance sweep: 8 concurrent requests, per-slot
+        // baseline (slots=1) vs truly batched decode (slots=8)
+        let n_req = 8usize;
+        let max_new = 24usize;
+        let mut baseline_tok_s = 0.0f64;
+        for slots in [1usize, 4, 8] {
             let t0 = Instant::now();
             let mut sched =
                 Scheduler::new(SchedulerCfg { max_slots: slots, token_budget: 4096 });
-            let n_req = 8;
-            let max_new = 24;
             for id in 0..n_req as u64 {
                 sched.submit(Request {
                     id,
@@ -79,14 +100,40 @@ fn main() -> anyhow::Result<()> {
             let done = sched.run(&sess)?;
             let wall = t0.elapsed().as_secs_f64();
             let toks: usize = done.iter().map(|c| c.tokens.len()).sum();
+            let tok_s = toks as f64 / wall.max(1e-9);
             let ttft =
                 done.iter().map(|c| c.ttft_s).sum::<f64>() / done.len() as f64 * 1e3;
+            if slots == 1 {
+                baseline_tok_s = tok_s;
+            }
+            let speedup = tok_s / baseline_tok_s.max(1e-9);
             println!(
                 "{model}: bench-serve {n_req} reqs @ {slots} slots      \
-                 {:>8.1} tok/s  mean ttft {ttft:.1} ms",
-                toks as f64 / wall.max(1e-9),
+                 {tok_s:>8.1} tok/s  mean ttft {ttft:.1} ms  ({speedup:.2}x vs 1 slot)",
+            );
+            records.push(
+                BenchRecord::new("bench-serve")
+                    .tag("model", model)
+                    .tag("backend", sess.backend_name())
+                    .num("threads", threads as f64)
+                    .num("requests", n_req as f64)
+                    .num("slots", slots as f64)
+                    .num("prompt_len", 8.0)
+                    .num("max_new", max_new as f64)
+                    .num("wall_s", wall)
+                    .num("aggregate_tok_s", tok_s)
+                    .num("mean_ttft_ms", ttft)
+                    .num("speedup_vs_1_slot", speedup),
             );
         }
+    }
+    if let Some(path) = json_path {
+        let rows: Vec<String> = records
+            .iter()
+            .map(|r| r.to_json().trim_end().to_string())
+            .collect();
+        std::fs::write(&path, format!("[\n{}\n]\n", rows.join(",\n")))?;
+        println!("bench records written: {path}");
     }
     Ok(())
 }

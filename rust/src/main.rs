@@ -39,9 +39,12 @@ fn usage() -> ! {
          \x20           [--temp F] [--top-k N] [--top-p F] [--eos TOK] [--seed N]\n\
          \x20 misa bench-serve [--ckpt FILE] [--model M] [--requests N] [--max-new N]\n\
          \x20           [--prompt-len N] [--slots N] [--token-budget N] [--temp F]\n\
-         \x20           [--top-k N] [--top-p F] [--seed N]\n\
+         \x20           [--top-k N] [--top-p F] [--seed N] [--json FILE]\n\
+         \x20 misa bench [--model M] [--steps N] [--seed N] [--json FILE]\n\
          \x20 misa exp <name|all|list> [--full] [--artifacts DIR] [--backend B]\n\
-         \x20 misa info [--artifacts DIR] [--backend B]\n"
+         \x20 misa info [--artifacts DIR] [--backend B]\n\n\
+         Every subcommand also takes --threads N (GEMM worker-pool width;\n\
+         default: MISA_THREADS, else 1).\n"
     );
     std::process::exit(2)
 }
@@ -52,7 +55,7 @@ const VALUED_FLAGS: &[&str] = &[
     "config", "model", "method", "steps", "lr", "delta", "eta", "t-inner", "rank", "alpha",
     "data", "seed", "out", "artifacts", "backend", "save-ckpt", "ckpt", "prompt",
     "max-new", "temp", "top-k", "top-p", "eos", "requests", "prompt-len", "slots",
-    "token-budget",
+    "token-budget", "threads", "json",
 ];
 
 /// Boolean switches.
@@ -110,6 +113,17 @@ fn backend_kind(args: &Args) -> Result<BackendKind> {
 
 fn make_engine(args: &Args) -> Result<Engine> {
     Engine::with_backend(&artifact_dir(args), backend_kind(args)?)
+}
+
+/// `--threads N` sets the GEMM worker-pool width for the whole process
+/// (falls back to `MISA_THREADS`, else 1, when absent).
+fn apply_threads(args: &Args) -> Result<()> {
+    if let Some(t) = args.flags.get("threads") {
+        let n: usize = t.parse().context("--threads")?;
+        anyhow::ensure!(n >= 1, "--threads must be >= 1");
+        misa::tensor::set_threads(n);
+    }
+    Ok(())
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -358,8 +372,12 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     let mc = &sess.spec.config;
     println!(
         "bench-serve: model={} backend={} requests={requests} max_new={max_new} \
-         prompt_len={prompt_len} slots={} token_budget={}",
-        mc.name, sess.backend_name(), cfg.max_slots, cfg.token_budget,
+         prompt_len={prompt_len} slots={} token_budget={} threads={}",
+        mc.name,
+        sess.backend_name(),
+        cfg.max_slots,
+        cfg.token_budget,
+        misa::tensor::threads(),
     );
     let mut rng = Rng::new(seed ^ 0x5E57E);
     let mut sched = Scheduler::new(cfg);
@@ -399,6 +417,78 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         sched.peak_active(),
         kv_bytes as f64 / (1024.0 * 1024.0),
     );
+    if let Some(path) = args.flags.get("json") {
+        misa::util::BenchRecord::new("bench-serve")
+            .tag("model", mc.name.clone())
+            .tag("backend", sess.backend_name())
+            .num("threads", misa::tensor::threads() as f64)
+            .num("requests", done.len() as f64)
+            .num("slots", cfg.max_slots as f64)
+            .num("token_budget", cfg.token_budget as f64)
+            .num("prompt_len", prompt_len as f64)
+            .num("max_new", max_new as f64)
+            .num("wall_s", wall)
+            .num("aggregate_tok_s", new_tokens as f64 / wall.max(1e-9))
+            .num("mean_ttft_ms", mean_ttft_ms)
+            .num("mean_decode_tps", mean_tps)
+            .num("peak_active", sched.peak_active() as f64)
+            .num("peak_kv_mib", kv_bytes as f64 / (1024.0 * 1024.0))
+            .write(Path::new(path))?;
+        println!("bench record written: {path}");
+    }
+    Ok(())
+}
+
+/// `misa bench` — training step-time: run `--steps` fwd/bwd+optimizer
+/// steps on `--model` and report/record ms per phase (the training
+/// counterpart of `bench-serve`, sharing the same JSON schema).
+fn cmd_bench(args: &Args) -> Result<()> {
+    let mut engine = make_engine(args)?;
+    let mut rc = RunConfig::default();
+    if let Some(m) = args.flags.get("model") {
+        rc.model = m.clone();
+    }
+    rc.steps = match args.flags.get("steps") {
+        Some(n) => n.parse().context("--steps")?,
+        None => 10,
+    };
+    if let Some(s) = args.flags.get("seed") {
+        rc.seed = s.parse().context("--seed")?;
+    }
+    println!(
+        "bench: model={} method={} steps={} backend={} threads={}",
+        rc.model,
+        rc.method.label(),
+        rc.steps,
+        engine.backend_name(),
+        misa::tensor::threads(),
+    );
+    let mut t = Trainer::new(&mut engine, rc.clone())?;
+    let t0 = std::time::Instant::now();
+    t.run(rc.steps)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let (fb_ms, opt_ms) = t.avg_times_ms();
+    let loss = t.metrics.last("train_loss").unwrap_or(f64::NAN);
+    println!(
+        "{} steps in {wall:.2} s · avg fwd+bwd {fb_ms:.1} ms · avg optimizer {opt_ms:.1} ms \
+         · final train_loss {loss:.4}",
+        rc.steps,
+    );
+    if let Some(path) = args.flags.get("json") {
+        misa::util::BenchRecord::new("bench")
+            .tag("model", rc.model.clone())
+            .tag("method", rc.method.label())
+            .tag("backend", engine.backend_name())
+            .num("threads", misa::tensor::threads() as f64)
+            .num("steps", rc.steps as f64)
+            .num("wall_s", wall)
+            .num("fwd_bwd_ms", fb_ms)
+            .num("optimizer_ms", opt_ms)
+            .num("step_ms", wall * 1e3 / rc.steps.max(1) as f64)
+            .num("train_loss", loss)
+            .write(Path::new(path))?;
+        println!("bench record written: {path}");
+    }
     Ok(())
 }
 
@@ -476,10 +566,15 @@ fn main() {
             usage();
         }
     };
+    if let Err(e) = apply_threads(&args) {
+        eprintln!("error: {e:#}\n");
+        usage();
+    }
     let result = match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
         Some("generate") => cmd_generate(&args),
         Some("bench-serve") => cmd_bench_serve(&args),
+        Some("bench") => cmd_bench(&args),
         Some("exp") => cmd_exp(&args),
         Some("info") => cmd_info(&args),
         _ => usage(),
@@ -576,6 +671,25 @@ mod tests {
         // explicit --model overrides inference
         let a = parse_args(&v(&["generate", "--model", "small"])).unwrap();
         assert_eq!(spec_for_ckpt(&eng, &a, &params).unwrap().config.name, "small");
+    }
+
+    #[test]
+    fn threads_and_json_flags_parse() {
+        let a = parse_args(&v(&["bench-serve", "--threads", "4", "--json", "out.json"]))
+            .unwrap();
+        assert_eq!(a.flags.get("threads").unwrap(), "4");
+        assert_eq!(a.flags.get("json").unwrap(), "out.json");
+        apply_threads(&a).unwrap();
+        assert_eq!(misa::tensor::threads(), 4);
+        misa::tensor::set_threads(0); // restore the env default
+        // absent flag leaves the knob untouched
+        let a = parse_args(&v(&["bench"])).unwrap();
+        apply_threads(&a).unwrap();
+        // zero and garbage are rejected
+        let a = parse_args(&v(&["bench", "--threads", "0"])).unwrap();
+        assert!(apply_threads(&a).is_err());
+        let a = parse_args(&v(&["bench", "--threads", "x"])).unwrap();
+        assert!(apply_threads(&a).is_err());
     }
 
     #[test]

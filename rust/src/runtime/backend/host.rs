@@ -20,13 +20,14 @@
 use anyhow::{anyhow, ensure, Result};
 
 use std::borrow::Cow;
+use std::sync::Mutex;
 
 use crate::data::Batch;
 use crate::modelspec::ModelSpec;
 use crate::optim::adam::{AdamHyper, AdamState};
 use crate::runtime::backend::{Backend, KvCache};
 use crate::runtime::{EvalOutput, StepOutput};
-use crate::tensor::{gemm_nn, gemm_nt, gemm_tn_acc};
+use crate::tensor::{gemm_nn, gemm_nn_into, gemm_nt, gemm_tn_acc};
 
 /// RoPE base frequency (python/compile/configs.py default).
 const ROPE_THETA: f32 = 10_000.0;
@@ -152,9 +153,43 @@ struct Trace<'a> {
     loss: f64,
 }
 
-/// The pure-Rust backend. Stateless beyond the model layout and the
-/// precomputed RoPE tables: it executes directly from the session's
-/// host parameter mirror.
+/// Reusable scratch for the decode hot path. One decode step used to
+/// allocate ~10 fresh `Vec`s per layer per token; at batch 1 that
+/// allocation churn is a measurable slice of the step. The buffers are
+/// `resize`d (a no-op once warm) and fully overwritten each call.
+#[derive(Default)]
+struct DecodeWorkspace {
+    /// residual stream `[bsz, d]`
+    x: Vec<f32>,
+    /// RMSNorm output, reused for attn-, mlp- and final-norm `[bsz, d]`
+    h: Vec<f32>,
+    /// post-RoPE queries `[bsz, d]`
+    q: Vec<f32>,
+    /// post-RoPE keys `[bsz, kd]`
+    k: Vec<f32>,
+    /// values `[bsz, kd]`
+    v: Vec<f32>,
+    /// concatenated head outputs `[bsz, d]`
+    concat: Vec<f32>,
+    /// projection output, reused for attn-out and mlp-down `[bsz, d]`
+    proj: Vec<f32>,
+    /// gate pre-activation `[bsz, f]`
+    gpre: Vec<f32>,
+    /// up projection `[bsz, f]`
+    up: Vec<f32>,
+    /// silu(gpre) * up `[bsz, f]`
+    act: Vec<f32>,
+    /// per-head attention scores over one slot's resident window
+    scores: Vec<f32>,
+    /// LM-head output `[bsz, v]` — the largest per-token buffer; per-slot
+    /// rows are copied out of it (the ABI returns owned rows) but the
+    /// flat matrix itself is never reallocated
+    logits: Vec<f32>,
+}
+
+/// The pure-Rust backend. Stateless beyond the model layout, the
+/// precomputed RoPE tables and the reusable decode workspace: it
+/// executes directly from the session's host parameter mirror.
 pub struct HostBackend {
     spec: ModelSpec,
     layout: Layout,
@@ -162,6 +197,8 @@ pub struct HostBackend {
     rope_cos: Vec<f32>,
     rope_sin: Vec<f32>,
     rope_positions: usize,
+    /// decode scratch; a Mutex (not RefCell) so the backend stays Sync
+    ws: Mutex<DecodeWorkspace>,
 }
 
 impl HostBackend {
@@ -178,7 +215,14 @@ impl HostBackend {
         // horizon, whichever is larger)
         let rope_positions = mc.seq_len.max(ROPE_MIN_POSITIONS);
         let (rope_cos, rope_sin) = rope_tables(rope_positions, mc.head_dim(), ROPE_THETA);
-        Ok(HostBackend { spec, layout, rope_cos, rope_sin, rope_positions })
+        Ok(HostBackend {
+            spec,
+            layout,
+            rope_cos,
+            rope_sin,
+            rope_positions,
+            ws: Mutex::new(DecodeWorkspace::default()),
+        })
     }
 
     /// Precomputed cos/sin tables covering `s` positions; falls back to
@@ -395,49 +439,19 @@ impl HostBackend {
             let mut concat = vec![0.0f32; t * d];
             let mut scores: Vec<f32> = Vec::new();
             for i in 0..t {
-                let p = start + i;
-                let slot = p % capacity;
-                ck[slot * kd..(slot + 1) * kd].copy_from_slice(&k[i * kd..(i + 1) * kd]);
-                cv[slot * kd..(slot + 1) * kd]
-                    .copy_from_slice(&v_proj[i * kd..(i + 1) * kd]);
-                let lo = (p + 1).saturating_sub(capacity);
-                let w = p + 1 - lo;
-                scores.resize(w, 0.0);
-                for h in 0..nh {
-                    let kvh = h / rep;
-                    let qrow = &q[i * d + h * hd..][..hd];
-                    let mut mx = f32::NEG_INFINITY;
-                    for (jj, sc_out) in scores.iter_mut().enumerate() {
-                        let slot = (lo + jj) % capacity;
-                        let krow = &ck[slot * kd + kvh * hd..][..hd];
-                        let mut sc = 0.0f32;
-                        for tt in 0..hd {
-                            sc += qrow[tt] * krow[tt];
-                        }
-                        let sc = sc * scale;
-                        *sc_out = sc;
-                        mx = mx.max(sc);
-                    }
-                    let mut denom = 0.0f32;
-                    for sc in scores.iter_mut() {
-                        let e = (*sc - mx).exp();
-                        *sc = e;
-                        denom += e;
-                    }
-                    let inv = 1.0 / denom;
-                    let orow = &mut concat[i * d + h * hd..][..hd];
-                    for (jj, &pr) in scores.iter().enumerate() {
-                        let pr = pr * inv;
-                        if pr == 0.0 {
-                            continue;
-                        }
-                        let slot = (lo + jj) % capacity;
-                        let vrow = &cv[slot * kd + kvh * hd..][..hd];
-                        for tt in 0..hd {
-                            orow[tt] += pr * vrow[tt];
-                        }
-                    }
-                }
+                attend_position(
+                    &q[i * d..(i + 1) * d],
+                    &k[i * kd..(i + 1) * kd],
+                    &v_proj[i * kd..(i + 1) * kd],
+                    start + i,
+                    capacity,
+                    ck,
+                    cv,
+                    &mut scores,
+                    &mut concat[i * d..(i + 1) * d],
+                    (nh, rep, hd, kd),
+                    scale,
+                );
             }
             let attn_out = gemm_nn(&concat, &host[lp.wo], t, d, d);
             for i in 0..t * d {
@@ -688,15 +702,136 @@ impl Backend for HostBackend {
         self.serve_chunk(host, tokens, cache)
     }
 
+    /// One token is the batch-of-one case of [`Backend::decode_batch`]:
+    /// a single code path (and a single workspace) serves both, so the
+    /// per-slot and batched decode numerics are identical by
+    /// construction.
     fn decode_step(&self, host: &[Vec<f32>], token: i32, pos: usize, cache: &mut KvCache)
                    -> Result<Vec<f32>> {
+        let mut caches = [cache];
+        let mut rows = self.decode_batch(host, &[token], &[pos], &mut caches)?;
+        Ok(rows.pop().expect("decode_batch returns one row per slot"))
+    }
+
+    /// Truly batched decode: all slots stack into one `[batch, hidden]`
+    /// activation matrix, so each layer runs one GEMM per projection
+    /// (wq/wk/wv/wo/wgate/wup/wdown, plus the LM head) instead of one
+    /// per slot. Attention stays per-slot over each ring-buffer cache —
+    /// slots share weights, never context. Per-row numerics are
+    /// identical to [`Backend::decode_step`] (same GEMM cores row by
+    /// row, same [`attend_position`] kernel), so a scheduled batch
+    /// decodes bit-identically to solo generation.
+    fn decode_batch(
+        &self,
+        host: &[Vec<f32>],
+        tokens: &[i32],
+        positions: &[usize],
+        caches: &mut [&mut KvCache],
+    ) -> Result<Vec<Vec<f32>>> {
+        let mc = &self.spec.config;
+        let (d, v, f) = (mc.dim, mc.vocab, mc.ffn_dim);
+        let (nh, nkv) = (mc.n_heads, mc.n_kv_heads);
+        let hd = mc.head_dim();
+        let kd = mc.kv_dim();
+        let rep = nh / nkv;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let bsz = tokens.len();
+        ensure!(bsz > 0, "decode_batch: empty batch");
         ensure!(
-            pos == cache.len(),
-            "decode_step at position {pos} but the cache holds {} positions — \
-             decode must be contiguous",
-            cache.len()
+            positions.len() == bsz && caches.len() == bsz,
+            "decode_batch: {bsz} tokens, {} positions, {} caches",
+            positions.len(),
+            caches.len()
         );
-        self.serve_chunk(host, &[token], cache)
+        ensure!(host.len() == self.spec.params.len(), "param count mismatch");
+        for (p, data) in self.spec.params.iter().zip(host) {
+            ensure!(data.len() == p.numel(), "param {} size mismatch", p.name);
+        }
+        for (i, cache) in caches.iter().enumerate() {
+            cache.check_spec(&self.spec)?;
+            ensure!(
+                positions[i] == cache.len(),
+                "decode_batch slot {i}: position {} but the cache holds {} positions — \
+                 decode must be contiguous",
+                positions[i],
+                cache.len()
+            );
+            let tk = tokens[i];
+            ensure!(tk >= 0 && (tk as usize) < v, "token id {tk} outside vocab {v}");
+        }
+
+        let mut guard = self.ws.lock().unwrap_or_else(|e| e.into_inner());
+        let ws = &mut *guard;
+        ws.x.resize(bsz * d, 0.0);
+        ws.h.resize(bsz * d, 0.0);
+        ws.q.resize(bsz * d, 0.0);
+        ws.k.resize(bsz * kd, 0.0);
+        ws.v.resize(bsz * kd, 0.0);
+        ws.concat.resize(bsz * d, 0.0);
+        ws.proj.resize(bsz * d, 0.0);
+        ws.gpre.resize(bsz * f, 0.0);
+        ws.up.resize(bsz * f, 0.0);
+        ws.act.resize(bsz * f, 0.0);
+
+        // token embedding: one stacked [bsz, d] residual stream
+        let embed = &host[self.layout.embed];
+        for (i, &tk) in tokens.iter().enumerate() {
+            let tok = tk as usize;
+            ws.x[i * d..(i + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
+        }
+
+        for (li, lp) in self.layout.layers.iter().enumerate() {
+            rms_forward_into(&ws.x, &host[lp.attn_norm], bsz, d, &mut ws.h);
+            gemm_nn_into(&ws.h, &host[lp.wq], bsz, d, d, &mut ws.q);
+            gemm_nn_into(&ws.h, &host[lp.wk], bsz, d, kd, &mut ws.k);
+            gemm_nn_into(&ws.h, &host[lp.wv], bsz, d, kd, &mut ws.v);
+            for i in 0..bsz {
+                self.rope_row(&mut ws.q[i * d..(i + 1) * d], nh, positions[i]);
+                self.rope_row(&mut ws.k[i * kd..(i + 1) * kd], nkv, positions[i]);
+            }
+            ws.concat.fill(0.0);
+            for i in 0..bsz {
+                let cache = &mut *caches[i];
+                let capacity = cache.capacity();
+                let (ck, cv) = cache.layer_mut(li);
+                attend_position(
+                    &ws.q[i * d..(i + 1) * d],
+                    &ws.k[i * kd..(i + 1) * kd],
+                    &ws.v[i * kd..(i + 1) * kd],
+                    positions[i],
+                    capacity,
+                    ck,
+                    cv,
+                    &mut ws.scores,
+                    &mut ws.concat[i * d..(i + 1) * d],
+                    (nh, rep, hd, kd),
+                    scale,
+                );
+            }
+            gemm_nn_into(&ws.concat, &host[lp.wo], bsz, d, d, &mut ws.proj);
+            for (x, &p) in ws.x.iter_mut().zip(&ws.proj) {
+                *x += p;
+            }
+            rms_forward_into(&ws.x, &host[lp.mlp_norm], bsz, d, &mut ws.h);
+            gemm_nn_into(&ws.h, &host[lp.wgate], bsz, d, f, &mut ws.gpre);
+            gemm_nn_into(&ws.h, &host[lp.wup], bsz, d, f, &mut ws.up);
+            for ((a, &g), &u) in ws.act.iter_mut().zip(&ws.gpre).zip(&ws.up) {
+                *a = silu(g) * u;
+            }
+            gemm_nn_into(&ws.act, &host[lp.wdown], bsz, f, d, &mut ws.proj);
+            for (x, &p) in ws.x.iter_mut().zip(&ws.proj) {
+                *x += p;
+            }
+        }
+        for cache in caches.iter_mut() {
+            cache.advance(1);
+        }
+
+        // every slot needs its own next-token logits row
+        rms_forward_into(&ws.x, &host[self.layout.final_norm], bsz, d, &mut ws.h);
+        ws.logits.resize(bsz * v, 0.0);
+        gemm_nn_into(&ws.h, &host[self.layout.head], bsz, d, v, &mut ws.logits);
+        Ok(ws.logits.chunks(v).map(|row| row.to_vec()).collect())
     }
 }
 
@@ -736,6 +871,88 @@ fn rms_forward(x: &[f32], w: &[f32], n: usize, d: usize) -> (Vec<f32>, Vec<f32>)
         }
     }
     (h, r)
+}
+
+/// [`rms_forward`] into a caller-owned buffer, rsqrt factors discarded
+/// (the serving paths keep no backward trace). Same accumulation order
+/// as the training kernel, row by row.
+fn rms_forward_into(x: &[f32], w: &[f32], n: usize, d: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), n * d);
+    debug_assert_eq!(out.len(), n * d);
+    for i in 0..n {
+        let row = &x[i * d..(i + 1) * d];
+        let ms: f64 = row.iter().map(|&a| (a as f64) * (a as f64)).sum::<f64>() / d as f64;
+        let ri = 1.0 / ((ms as f32) + NORM_EPS).sqrt();
+        let orow = &mut out[i * d..(i + 1) * d];
+        for j in 0..d {
+            orow[j] = row[j] * ri * w[j];
+        }
+    }
+}
+
+/// Write one position's K/V row into its ring slot, then attend the
+/// position's query over the resident window into `orow` (`[d]`,
+/// zeroed by the caller). The shared per-position kernel of chunked
+/// prefill ([`HostBackend::serve_chunk`]) and batched decode
+/// ([`Backend::decode_batch`]): one accumulation order for both is
+/// what keeps every serving path within 1e-5 of the training forward.
+/// `dims` is `(n_heads, rep, head_dim, kv_dim)`.
+#[allow(clippy::too_many_arguments)]
+fn attend_position(
+    qrow_all: &[f32],
+    krow: &[f32],
+    vrow: &[f32],
+    p: usize,
+    capacity: usize,
+    ck: &mut [f32],
+    cv: &mut [f32],
+    scores: &mut Vec<f32>,
+    orow_all: &mut [f32],
+    dims: (usize, usize, usize, usize),
+    scale: f32,
+) {
+    let (nh, rep, hd, kd) = dims;
+    let slot = p % capacity;
+    ck[slot * kd..(slot + 1) * kd].copy_from_slice(krow);
+    cv[slot * kd..(slot + 1) * kd].copy_from_slice(vrow);
+    let lo = (p + 1).saturating_sub(capacity);
+    let w = p + 1 - lo;
+    scores.resize(w, 0.0);
+    for h in 0..nh {
+        let kvh = h / rep;
+        let qrow = &qrow_all[h * hd..][..hd];
+        let mut mx = f32::NEG_INFINITY;
+        for (jj, sc_out) in scores.iter_mut().enumerate() {
+            let slot = (lo + jj) % capacity;
+            let kr = &ck[slot * kd + kvh * hd..][..hd];
+            let mut sc = 0.0f32;
+            for tt in 0..hd {
+                sc += qrow[tt] * kr[tt];
+            }
+            let sc = sc * scale;
+            *sc_out = sc;
+            mx = mx.max(sc);
+        }
+        let mut denom = 0.0f32;
+        for sc in scores.iter_mut() {
+            let e = (*sc - mx).exp();
+            *sc = e;
+            denom += e;
+        }
+        let inv = 1.0 / denom;
+        let orow = &mut orow_all[h * hd..][..hd];
+        for (jj, &pr) in scores.iter().enumerate() {
+            let pr = pr * inv;
+            if pr == 0.0 {
+                continue;
+            }
+            let slot = (lo + jj) % capacity;
+            let vr = &cv[slot * kd + kvh * hd..][..hd];
+            for tt in 0..hd {
+                orow[tt] += pr * vr[tt];
+            }
+        }
+    }
 }
 
 /// Backward of `rms_forward`: accumulates `dw` and returns `dx`.

@@ -3,8 +3,9 @@
 //! The coordinator (trainer, optimizers, experiments) speaks one small
 //! execution ABI, [`Backend`]: fwd/bwd, predict, the fused-Adam update,
 //! the momentum-tail update, parameter upload, and the serving entry
-//! points ([`Backend::prefill`] / [`Backend::decode_step`] over a
-//! [`KvCache`]). Two implementations exist:
+//! points ([`Backend::prefill`] / [`Backend::decode_step`] /
+//! [`Backend::decode_batch`] over per-slot [`KvCache`]s). Two
+//! implementations exist:
 //!
 //! - [`HostBackend`] (default): the full transformer forward/backward,
 //!   masked cross-entropy, per-parameter squared gradient norms, and
@@ -224,6 +225,38 @@ pub trait Backend {
                    -> Result<Vec<f32>> {
         let _ = (host, token, pos, cache);
         bail!("backend {:?} does not support incremental decode", self.name())
+    }
+
+    /// Serving entry point: decode one token for *each* of `caches`
+    /// (scheduler slots) in a single forward — slot `i` decodes
+    /// `tokens[i]` at absolute position `positions[i]`
+    /// (= `caches[i].len()`), appending its K/V to its own cache, and
+    /// slot `i`'s next-token logits come back as row `i`.
+    ///
+    /// Backends that can stack slots into one `[batch, hidden]`
+    /// activation matrix (the host backend) override this so each layer
+    /// runs one GEMM per projection instead of one per slot; the
+    /// default simply loops [`Backend::decode_step`], which keeps the
+    /// batched and per-slot paths semantically interchangeable.
+    fn decode_batch(
+        &self,
+        host: &[Vec<f32>],
+        tokens: &[i32],
+        positions: &[usize],
+        caches: &mut [&mut KvCache],
+    ) -> Result<Vec<Vec<f32>>> {
+        ensure!(
+            tokens.len() == positions.len() && tokens.len() == caches.len(),
+            "decode_batch: {} tokens, {} positions, {} caches",
+            tokens.len(),
+            positions.len(),
+            caches.len()
+        );
+        let mut out = Vec::with_capacity(tokens.len());
+        for ((&tok, &pos), cache) in tokens.iter().zip(positions).zip(caches.iter_mut()) {
+            out.push(self.decode_step(host, tok, pos, cache)?);
+        }
+        Ok(out)
     }
 }
 

@@ -281,4 +281,14 @@ impl Backend for PjrtBackend {
              contain no prefill/decode graphs — serve with --backend host"
         ))
     }
+
+    // Explicit (not the looping default) so the error surfaces once,
+    // clearly, instead of from the first slot's decode_step.
+    fn decode_batch(&self, _host: &[Vec<f32>], _tokens: &[i32], _positions: &[usize],
+                    _caches: &mut [&mut KvCache]) -> Result<Vec<Vec<f32>>> {
+        Err(anyhow!(
+            "pjrt backend does not support incremental decode: the AOT artifacts \
+             contain no prefill/decode graphs — serve with --backend host"
+        ))
+    }
 }

@@ -218,6 +218,18 @@ impl Session {
         self.backend.decode_step(&self.host, token, pos, cache)
     }
 
+    /// Serve: decode one token for each scheduler slot in a single
+    /// batched forward (slot `i`: `tokens[i]` at `positions[i]` =
+    /// `caches[i].len()`); returns one `[vocab]` logits row per slot.
+    pub fn decode_batch(
+        &self,
+        tokens: &[i32],
+        positions: &[usize],
+        caches: &mut [&mut KvCache],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.backend.decode_batch(&self.host, tokens, positions, caches)
+    }
+
     /// Fused Adam update of parameter `idx` on the hot path: consumes
     /// grad + moments, updates the parameter in place (host mirror and
     /// any backend copy), returns (m', v', sum(g^2)).

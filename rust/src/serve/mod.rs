@@ -2,8 +2,9 @@
 //!
 //! Training produces checkpoints; this module is how they get *used*.
 //! It layers on the execution ABI's serving entry points
-//! (`Backend::prefill` / `Backend::decode_step` over a
-//! `runtime::KvCache`) and is backend-agnostic like everything else
+//! (`Backend::prefill` / `Backend::decode_step` / `Backend::decode_batch`
+//! over per-slot `runtime::KvCache`s) and is backend-agnostic like
+//! everything else
 //! above the runtime — though only the host backend implements
 //! incremental decode today (PJRT's AOT artifacts carry no decode
 //! graphs and return a clear unsupported error).

@@ -1,13 +1,15 @@
 //! Continuous-batching scheduler.
 //!
-//! Iteration-level scheduling in the vLLM/Orca style, sized to this
-//! repo's single-threaded host backend: each iteration (1) admits
-//! queued requests into free slots while the KV token budget allows,
-//! (2) prefills newly admitted requests and samples their first token
-//! (TTFT), and (3) advances every active slot by exactly one decode
-//! step. Finished requests free their slot and budget immediately, so
-//! waiting requests are admitted on the very next iteration — no
-//! batch-boundary stalls.
+//! Iteration-level scheduling in the vLLM/Orca style: each iteration
+//! (1) admits queued requests into free slots while the KV token
+//! budget allows, (2) prefills newly admitted requests and samples
+//! their first token (TTFT), and (3) advances every unfinished slot by
+//! one token through a single `Session::decode_batch` call — one
+//! stacked `[batch, hidden]` forward per iteration, not one forward
+//! per slot, so batching buys FLOP efficiency rather than just
+//! scheduling overhead. Finished requests free their slot and budget
+//! immediately, so waiting requests are admitted on the very next
+//! iteration — no batch-boundary stalls.
 //!
 //! Memory accounting is in KV *positions*: a request admitted with
 //! prompt length `p` and `max_new` new tokens holds a cache of
@@ -220,16 +222,41 @@ impl Scheduler {
             self.peak_active = self.peak_active.max(self.active.len());
         }
 
-        // decode: one token for every unfinished slot
-        for slot in self.active.iter_mut() {
-            if slot.finished().is_some() {
-                continue;
+        // decode: one *batched* forward advances every unfinished slot
+        // by one token — each layer runs one GEMM per projection across
+        // the whole batch instead of one per slot (attention stays
+        // per-slot over each ring cache). Sampling still draws from
+        // each slot's own seed stream, so batching changes wall-clock,
+        // never tokens. The unfinished-slot set is computed ONCE as an
+        // (ascending) index list so logits row i is structurally — not
+        // coincidentally — aligned with slot `batch[i]` in every pass.
+        let batch: Vec<usize> = (0..self.active.len())
+            .filter(|&i| self.active[i].finished().is_none())
+            .collect();
+        if !batch.is_empty() {
+            let tokens: Vec<i32> = batch
+                .iter()
+                .map(|&i| *self.active[i].generated.last().expect("prefill seeded a token"))
+                .collect();
+            let positions: Vec<usize> =
+                batch.iter().map(|&i| self.active[i].cache.len()).collect();
+            let logits = {
+                // `batch` is ascending, so this filter yields caches in
+                // exactly `batch` order
+                let mut caches: Vec<&mut KvCache> = self
+                    .active
+                    .iter_mut()
+                    .enumerate()
+                    .filter(|(i, _)| batch.binary_search(i).is_ok())
+                    .map(|(_, s)| &mut s.cache)
+                    .collect();
+                sess.decode_batch(&tokens, &positions, &mut caches)?
+            };
+            for (row, &i) in logits.iter().zip(&batch) {
+                let slot = &mut self.active[i];
+                let next = sample(row, &slot.req.sampler, &mut slot.rng) as i32;
+                slot.generated.push(next);
             }
-            let last = *slot.generated.last().expect("prefill seeded a token");
-            let pos = slot.cache.len();
-            let logits = sess.decode_step(last, pos, &mut slot.cache)?;
-            let next = sample(&logits, &slot.req.sampler, &mut slot.rng) as i32;
-            slot.generated.push(next);
         }
 
         // retire finished slots, freeing budget for the next iteration

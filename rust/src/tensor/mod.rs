@@ -6,12 +6,18 @@
 //! projections, GaLore's low-rank range finder, column norms, and the
 //! householder-free QR used for subspace orthonormalization.
 //!
-//! The GEMM variants come in two layers: slice cores
-//! ([`gemm_nn`], [`gemm_tn_acc`], [`gemm_nt`]) that work on flat
-//! row-major buffers — the single matmul implementation shared with the
-//! `HostBackend` transformer — and thin [`Mat`] wrappers
-//! ([`matmul`], [`matmul_tn`], [`matmul_nt`]) for coordinator code that
-//! carries shapes around.
+//! The GEMM variants come in three layers: blocked slice cores
+//! ([`gemm_nn`], [`gemm_tn_acc`], [`gemm_nt`] and their `_into`
+//! variants) that work on flat row-major buffers — the single matmul
+//! implementation shared with the `HostBackend` transformer — the
+//! worker-pool scheduling in [`par`] that fans large cores out over
+//! output-row blocks, and thin [`Mat`] wrappers ([`matmul`],
+//! [`matmul_tn`], [`matmul_nt`]) for coordinator code that carries
+//! shapes around.
+
+pub mod par;
+
+pub use par::{set_threads, threads};
 
 use crate::util::Rng;
 
@@ -21,71 +27,189 @@ use crate::util::Rng;
 // These are THE matmul kernels of the repo: the HostBackend forward,
 // backward and serving paths and the `Mat` wrappers below all route
 // through them, so there is exactly one implementation to optimize.
-// The zero-skip in the accumulation loops is load-bearing for sparse
-// gradients (masked positions produce all-zero rows).
+// Each core is cache-blocked (tiled over its M/N/K analogues, with the
+// hot B panel packed contiguous) and parallelized over contiguous
+// output-row blocks via `par::par_out_rows`.
+//
+// Two invariants the rest of the repo leans on:
+// - The zero-skip in the accumulation loops is load-bearing for sparse
+//   gradients (masked positions produce all-zero rows).
+// - Every output element accumulates over its reduction dimension in
+//   strictly ascending index order, and each output row belongs to one
+//   worker: results are bit-identical at every thread count, and
+//   bit-identical to the pre-blocking naive kernels.
 // ---------------------------------------------------------------------------
 
-/// `out[m, n] = a[m, k] @ b[k, n]` (cache-friendly i-k-j loop with an
-/// accumulation row).
-pub fn gemm_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+/// Reduction-dimension tile: rows of the packed B panel in
+/// [`gemm_nn_into`], dot-product segment elsewhere.
+const KC: usize = 64;
+
+/// Output-column tile: columns of the packed B panel. `KC * NC` f32s =
+/// 32 KiB — the panel lives in L1 while a row block streams past it.
+const NC: usize = 128;
+
+/// `out[m, n] = a[m, k] @ b[k, n]` into a caller-owned buffer
+/// (workspace reuse on the decode hot path).
+pub fn gemm_nn_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (kk, &aik) in arow.iter().enumerate() {
-            if aik == 0.0 {
-                continue;
-            }
-            let brow = &b[kk * n..(kk + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += aik * bv;
-            }
-        }
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    if m == 0 || n == 0 || k == 0 {
+        return;
     }
+    let workers = par::plan_workers(m, m * k * n);
+    par::par_out_rows(out, m, n, workers, |row0, ochunk| {
+        let rows = ochunk.len() / n;
+        gemm_nn_rows(&a[row0 * k..(row0 + rows) * k], b, rows, k, n, ochunk);
+    });
+}
+
+thread_local! {
+    /// Per-thread B-panel scratch for [`gemm_nn_rows`]. Thread-local
+    /// (not per-call) so the serial decode hot path — 8 GEMMs per
+    /// layer per token, all on the caller thread — packs into one warm
+    /// 32 KiB buffer instead of reallocating it every call. Scoped
+    /// workers are short-lived and only run kernels big enough that
+    /// one panel allocation is noise.
+    static NN_PANEL: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// One row block of [`gemm_nn_into`]: tile over N then K, pack the
+/// `kb x nb` B panel once, and stream the block's A rows over it. The
+/// (jc outer, pc inner) loop order keeps each output element's
+/// accumulation in ascending-k order.
+fn gemm_nn_rows(a: &[f32], b: &[f32], rows: usize, k: usize, n: usize, out: &mut [f32]) {
+    NN_PANEL.with(|cell| {
+        let mut panel = cell.borrow_mut();
+        panel.resize(KC * NC, 0.0);
+        gemm_nn_rows_packed(a, b, rows, k, n, out, &mut panel[..]);
+    });
+}
+
+fn gemm_nn_rows_packed(a: &[f32], b: &[f32], rows: usize, k: usize, n: usize,
+                       out: &mut [f32], panel: &mut [f32]) {
+    let mut jc = 0;
+    while jc < n {
+        let nb = NC.min(n - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kb = KC.min(k - pc);
+            for (kk, prow) in panel.chunks_mut(nb).take(kb).enumerate() {
+                let src = (pc + kk) * n + jc;
+                prow.copy_from_slice(&b[src..src + nb]);
+            }
+            for i in 0..rows {
+                let arow = &a[i * k + pc..i * k + pc + kb];
+                let orow = &mut out[i * n + jc..i * n + jc + nb];
+                for (kk, &aik) in arow.iter().enumerate() {
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let prow = &panel[kk * nb..(kk + 1) * nb];
+                    for (o, &bv) in orow.iter_mut().zip(prow) {
+                        *o += aik * bv;
+                    }
+                }
+            }
+            pc += kb;
+        }
+        jc += nb;
+    }
+}
+
+/// `out[m, n] = a[m, k] @ b[k, n]`.
+pub fn gemm_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    gemm_nn_into(a, b, m, k, n, &mut out);
     out
 }
 
 /// `out[k, n] += a[m, k]^T @ b[m, n]` — weight-gradient accumulation
-/// without materializing the transpose.
+/// without materializing the transpose. Parallel over blocks of the
+/// `k` output rows; within a block, tiled over N with the `m` reduction
+/// streamed in ascending order (the order backward-pass accumulation
+/// committed to before blocking).
 pub fn gemm_tn_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), m * n);
     debug_assert_eq!(out.len(), k * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let brow = &b[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let orow = &mut out[kk * n..(kk + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
+    if k == 0 || n == 0 {
+        return;
     }
+    let workers = par::plan_workers(k, m * k * n);
+    par::par_out_rows(out, k, n, workers, |kk0, ochunk| {
+        let krows = ochunk.len() / n;
+        let mut jc = 0;
+        while jc < n {
+            let nb = NC.min(n - jc);
+            for i in 0..m {
+                let arow = &a[i * k + kk0..i * k + kk0 + krows];
+                let brow = &b[i * n + jc..i * n + jc + nb];
+                for (kk, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let orow = &mut ochunk[kk * n + jc..kk * n + jc + nb];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+            jc += nb;
+        }
+    });
 }
 
-/// `out[m, k] = a[m, n] @ b[k, n]^T` — input gradients through a weight,
-/// without materializing the transpose.
-pub fn gemm_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+/// `out[m, k] = a[m, n] @ b[k, n]^T` into a caller-owned buffer —
+/// input gradients through a weight, without materializing the
+/// transpose. Parallel over blocks of the `m` output rows; within a
+/// block, tiled over the B rows and the `n` reduction so a `JC x KC`
+/// patch of B is reused across the whole row block. Partial dot
+/// products flush through `out` between reduction tiles, which keeps
+/// per-element addition order ascending in `n`.
+pub fn gemm_nt_into(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
     debug_assert_eq!(a.len(), m * n);
     debug_assert_eq!(b.len(), k * n);
-    let mut out = vec![0.0f32; m * k];
-    for i in 0..m {
-        let arow = &a[i * n..(i + 1) * n];
-        let orow = &mut out[i * k..(i + 1) * k];
-        for (j, o) in orow.iter_mut().enumerate() {
-            let brow = &b[j * n..(j + 1) * n];
-            let mut acc = 0.0f32;
-            for (x, y) in arow.iter().zip(brow) {
-                acc += x * y;
-            }
-            *o = acc;
-        }
+    debug_assert_eq!(out.len(), m * k);
+    out.fill(0.0);
+    if m == 0 || k == 0 {
+        return;
     }
+    // B-row tile (output-column tile) of the nt core.
+    const JC: usize = 64;
+    let workers = par::plan_workers(m, m * k * n);
+    par::par_out_rows(out, m, k, workers, |row0, ochunk| {
+        let rows = ochunk.len() / k;
+        let mut jc = 0;
+        while jc < k {
+            let jb = JC.min(k - jc);
+            let mut pc = 0;
+            while pc < n {
+                let nb = KC.min(n - pc);
+                for i in 0..rows {
+                    let arow = &a[(row0 + i) * n + pc..(row0 + i) * n + pc + nb];
+                    let orow = &mut ochunk[i * k + jc..i * k + jc + jb];
+                    for (j, o) in orow.iter_mut().enumerate() {
+                        let brow = &b[(jc + j) * n + pc..(jc + j) * n + pc + nb];
+                        let mut acc = *o;
+                        for (x, y) in arow.iter().zip(brow) {
+                            acc += x * y;
+                        }
+                        *o = acc;
+                    }
+                }
+                pc += nb;
+            }
+            jc += jb;
+        }
+    });
+}
+
+/// `out[m, k] = a[m, n] @ b[k, n]^T`.
+pub fn gemm_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * k];
+    gemm_nt_into(a, b, m, n, k, &mut out);
     out
 }
 
@@ -330,6 +454,79 @@ mod tests {
         gemm_tn_acc(&a.data, &c.data, m, k, n, &mut got3);
         for (x, y) in got3.iter().zip(&want3.data) {
             assert!((x - (y + 1.0)).abs() < 1e-4, "{x} vs {}", y + 1.0);
+        }
+    }
+
+    /// Blocked cores vs the naive triple-loop oracle on ragged shapes:
+    /// m, k, n straddling the KC=64 / NC=128 tile edges (not multiples
+    /// of either), plus sub-tile and single-row/column degenerates.
+    #[test]
+    fn blocked_cores_match_oracle_on_ragged_shapes() {
+        let mut rng = Rng::new(31);
+        for &(m, k, n) in
+            &[(65, 63, 129), (1, 130, 7), (67, 1, 131), (3, 5, 1), (70, 129, 65)]
+        {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let want = naive_matmul(&a, &b);
+            let got = gemm_nn(&a.data, &b.data, m, k, n);
+            for (x, y) in got.iter().zip(&want.data) {
+                assert!((x - y).abs() < 2e-3, "nn {m}x{k}x{n}: {x} vs {y}");
+            }
+            // nt: a[m,n'] @ b[k',n']^T with n'=k, k'=n reuses the shapes
+            let bt = b.transpose(); // [n, k]
+            let want_nt = naive_matmul(&a, &b);
+            let got_nt = gemm_nt(&a.data, &bt.data, m, k, n);
+            for (x, y) in got_nt.iter().zip(&want_nt.data) {
+                assert!((x - y).abs() < 2e-3, "nt {m}x{k}x{n}: {x} vs {y}");
+            }
+            // tn: a[m,k]^T @ c[m,n] accumulates on top of existing data
+            let c = Mat::randn(m, n, 1.0, &mut rng);
+            let want_tn = naive_matmul(&a.transpose(), &c);
+            let mut got_tn = vec![0.5f32; k * n];
+            gemm_tn_acc(&a.data, &c.data, m, k, n, &mut got_tn);
+            for (x, y) in got_tn.iter().zip(&want_tn.data) {
+                assert!((x - (y + 0.5)).abs() < 2e-3, "tn {m}x{k}x{n}: {x} vs {}", y + 0.5);
+            }
+        }
+    }
+
+    /// The reduction order we commit to (ascending reduction index, one
+    /// worker per output row) makes every core bit-identical across
+    /// thread counts — not merely close. Large enough shapes to clear
+    /// the parallel work floor, ragged against the tiles.
+    #[test]
+    fn cores_are_bit_identical_across_thread_counts() {
+        let mut rng = Rng::new(47);
+        let (m, k, n) = (97, 161, 133);
+        let a = Mat::randn(m, k, 1.0, &mut rng);
+        let b = Mat::randn(k, n, 1.0, &mut rng);
+        let bt = b.transpose();
+        let c = Mat::randn(m, n, 1.0, &mut rng);
+        let run = |t: usize| {
+            set_threads(t);
+            let nn = gemm_nn(&a.data, &b.data, m, k, n);
+            let nt = gemm_nt(&a.data, &bt.data, m, k, n);
+            let mut tn = vec![0.25f32; k * n];
+            gemm_tn_acc(&a.data, &c.data, m, k, n, &mut tn);
+            set_threads(0);
+            (nn, nt, tn)
+        };
+        let (nn1, nt1, tn1) = run(1);
+        for t in [2usize, 4] {
+            let (nn, nt, tn) = run(t);
+            assert!(
+                nn.iter().zip(&nn1).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "gemm_nn differs at {t} threads"
+            );
+            assert!(
+                nt.iter().zip(&nt1).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "gemm_nt differs at {t} threads"
+            );
+            assert!(
+                tn.iter().zip(&tn1).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "gemm_tn_acc differs at {t} threads"
+            );
         }
     }
 

@@ -1,0 +1,156 @@
+//! Worker-pool parallelism for the GEMM slice cores.
+//!
+//! rayon is not vendorable offline (same constraint that hand-rolled
+//! the PRNG and the TOML parser), so the pool is built on
+//! `std::thread::scope`: each sufficiently large kernel invocation
+//! partitions its *output rows* into contiguous blocks, spawns one
+//! scoped worker per extra block, and runs the first block on the
+//! calling thread. Scoped threads make the borrow story trivially safe
+//! — no lifetime erasure, no channels, no unsafe.
+//!
+//! ## The reduction order we commit to
+//!
+//! Every core accumulates each output element over its reduction
+//! dimension in strictly ascending index order, and each output row is
+//! owned by exactly one worker. Partitioning therefore never reorders
+//! a single floating-point addition: results are **bit-identical at
+//! every thread count**, including `threads = 1` versus the pre-blocking
+//! naive kernels. `tensor::tests` pins this invariant.
+//!
+//! ## The knob
+//!
+//! Thread count resolves as: [`set_threads`] (the `--threads N` CLI
+//! flag) if called with `n >= 1`, else the `MISA_THREADS` environment
+//! variable, else 1. `set_threads(0)` drops back to the environment
+//! default. Small kernels stay serial regardless — see
+//! [`plan_workers`] — so the knob never pessimizes tiny shapes.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// 0 = "unset, use the environment default".
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// `MISA_THREADS`, read once; anything unparsable or zero means 1.
+fn env_threads() -> usize {
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("MISA_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or(1)
+    })
+}
+
+/// Worker-pool width the GEMM cores may use (>= 1).
+pub fn threads() -> usize {
+    match THREADS.load(Ordering::Relaxed) {
+        0 => env_threads(),
+        n => n,
+    }
+}
+
+/// Override the worker-pool width (the `--threads` flag). `0` resets
+/// to the `MISA_THREADS` environment default.
+pub fn set_threads(n: usize) {
+    THREADS.store(n, Ordering::Relaxed);
+}
+
+/// Minimum multiply-accumulates each *extra* worker must bring; below
+/// this, thread spawn + join overhead outweighs the parallel win and
+/// the kernel stays serial (decode-sized GEMMs take this path).
+const MIN_MACS_PER_WORKER: usize = 128 * 1024;
+
+/// How many workers a kernel with `rows` independent output rows and
+/// `macs` total multiply-accumulates should use.
+pub(crate) fn plan_workers(rows: usize, macs: usize) -> usize {
+    plan_workers_at(threads(), rows, macs)
+}
+
+/// [`plan_workers`] at an explicit pool width (pure; unit-testable
+/// without touching the process-global knob).
+fn plan_workers_at(t: usize, rows: usize, macs: usize) -> usize {
+    if t <= 1 || rows < 2 {
+        return 1;
+    }
+    t.min(rows).min((macs / MIN_MACS_PER_WORKER).max(1))
+}
+
+/// Run `body(row0, out_chunk)` over `out` split into `workers`
+/// contiguous row blocks (`out.len() == rows * stride`). Blocks after
+/// the first run on scoped worker threads; the first runs on the
+/// caller so a `workers`-wide plan occupies exactly `workers` cores.
+pub(crate) fn par_out_rows<F>(out: &mut [f32], rows: usize, stride: usize, workers: usize, body: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(out.len(), rows * stride);
+    if workers <= 1 || rows < 2 {
+        body(0, out);
+        return;
+    }
+    let chunk_rows = rows.div_ceil(workers);
+    std::thread::scope(|s| {
+        let body = &body;
+        let mut rest = out;
+        let mut row0 = 0usize;
+        let mut first: Option<(usize, &mut [f32])> = None;
+        while row0 < rows {
+            let take = chunk_rows.min(rows - row0);
+            let tail = std::mem::take(&mut rest);
+            let (chunk, remainder) = tail.split_at_mut(take * stride);
+            rest = remainder;
+            if first.is_none() {
+                // deferred: the caller's own share, run after spawning
+                first = Some((row0, chunk));
+            } else {
+                s.spawn(move || body(row0, chunk));
+            }
+            row0 += take;
+        }
+        if let Some((r0, chunk)) = first {
+            body(r0, chunk);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_respects_knob_rows_and_work_floor() {
+        // plenty of rows and work: full width
+        assert_eq!(plan_workers_at(4, 1024, 64 * MIN_MACS_PER_WORKER), 4);
+        // fewer rows than threads: one worker per row at most
+        assert_eq!(plan_workers_at(4, 2, 64 * MIN_MACS_PER_WORKER), 2);
+        // small kernels stay serial no matter the knob
+        assert_eq!(plan_workers_at(4, 1024, MIN_MACS_PER_WORKER / 2), 1);
+        // width 1 always serial
+        assert_eq!(plan_workers_at(1, 1024, 64 * MIN_MACS_PER_WORKER), 1);
+        // the resolved global knob is always at least 1
+        assert!(threads() >= 1);
+    }
+
+    #[test]
+    fn partition_covers_every_row_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let rows = 37;
+        let stride = 3;
+        let mut out = vec![0.0f32; rows * stride];
+        let calls = AtomicUsize::new(0);
+        par_out_rows(&mut out, rows, stride, 4, |row0, chunk| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            for (r, row) in chunk.chunks_mut(stride).enumerate() {
+                for x in row.iter_mut() {
+                    *x += (row0 + r) as f32;
+                }
+            }
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 4);
+        for (r, row) in out.chunks(stride).enumerate() {
+            assert!(row.iter().all(|&x| x == r as f32), "row {r} misassigned: {row:?}");
+        }
+    }
+}

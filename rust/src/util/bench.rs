@@ -1,0 +1,110 @@
+//! Machine-readable benchmark records (`--json out.json`).
+//!
+//! `misa bench-serve`, `misa bench` and the `cargo bench` harnesses
+//! emit one flat JSON object per run so the perf trajectory is
+//! diffable across PRs (`BENCH_serve.json` at the repo root is the
+//! committed sample). serde is not vendorable offline, so the writer
+//! is hand-rolled at the ~40 lines this schema needs: string fields
+//! first, then numeric fields, insertion-ordered.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// One benchmark run: identity strings plus `(name, value)` metrics.
+#[derive(Clone, Debug, Default)]
+pub struct BenchRecord {
+    /// fields rendered as JSON strings, e.g. `("bin", "bench-serve")`
+    pub tags: Vec<(&'static str, String)>,
+    /// fields rendered as JSON numbers, e.g. `("tok_s", 412.3)`
+    pub nums: Vec<(&'static str, f64)>,
+}
+
+impl BenchRecord {
+    pub fn new(bin: &str) -> Self {
+        BenchRecord { tags: vec![("bin", bin.to_string())], nums: Vec::new() }
+    }
+
+    pub fn tag(mut self, key: &'static str, value: impl Into<String>) -> Self {
+        self.tags.push((key, value.into()));
+        self
+    }
+
+    pub fn num(mut self, key: &'static str, value: f64) -> Self {
+        self.nums.push((key, value));
+        self
+    }
+
+    /// Render as a single JSON object. Non-finite numbers become
+    /// `null` (JSON has no NaN/inf).
+    pub fn to_json(&self) -> String {
+        let mut parts = Vec::with_capacity(self.tags.len() + self.nums.len());
+        for (k, v) in &self.tags {
+            parts.push(format!("\"{k}\": \"{}\"", escape(v)));
+        }
+        for (k, v) in &self.nums {
+            if v.is_finite() {
+                parts.push(format!("\"{k}\": {v}"));
+            } else {
+                parts.push(format!("\"{k}\": null"));
+            }
+        }
+        format!("{{\n  {}\n}}\n", parts.join(",\n  "))
+    }
+
+    pub fn write(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json())
+            .with_context(|| format!("writing bench record to {path:?}"))
+    }
+}
+
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_flat_json_object() {
+        let r = BenchRecord::new("bench-serve")
+            .tag("model", "tiny")
+            .num("tok_s", 123.5)
+            .num("threads", 4.0)
+            .num("bad", f64::NAN);
+        let j = r.to_json();
+        assert!(j.starts_with('{') && j.trim_end().ends_with('}'), "{j}");
+        assert!(j.contains("\"bin\": \"bench-serve\""), "{j}");
+        assert!(j.contains("\"model\": \"tiny\""), "{j}");
+        assert!(j.contains("\"tok_s\": 123.5"), "{j}");
+        assert!(j.contains("\"threads\": 4"), "{j}");
+        assert!(j.contains("\"bad\": null"), "{j}");
+    }
+
+    #[test]
+    fn escapes_strings() {
+        assert_eq!(escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn roundtrips_to_disk() {
+        let path = std::env::temp_dir().join(format!("misa_bench_{}.json", std::process::id()));
+        BenchRecord::new("bench").num("steps", 5.0).write(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("\"steps\": 5"));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -4,10 +4,12 @@
 //! closure, so `rand`, `serde`, `proptest` and friends are hand-rolled
 //! here at the minimal size this project needs.
 
+pub mod bench;
 pub mod metrics;
 pub mod prop;
 pub mod rng;
 
+pub use bench::BenchRecord;
 pub use metrics::MetricsSink;
 pub use rng::Rng;
 

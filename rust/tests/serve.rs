@@ -26,6 +26,13 @@ fn random_prompt(len: usize, vocab: usize, seed: u64) -> Vec<i32> {
     p
 }
 
+/// Serializes the tests that sweep the process-global GEMM thread
+/// knob: without it, cargo's parallel test harness could drop one
+/// test's `threads = 4` leg back to 1 mid-flight (results stay
+/// bit-identical either way, but the multi-threaded coverage would be
+/// silently lost).
+static THREAD_KNOB: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
 /// Acceptance criterion: greedy incremental decode must produce logits
 /// within 1e-5 of running the full uncached forward on the growing
 /// sequence, position by position.
@@ -223,6 +230,117 @@ fn scheduler_end_to_end_over_session() {
         .unwrap();
         assert_eq!(c.tokens, solo.tokens, "request {} depends on batch composition", r.id);
     }
+}
+
+/// Tentpole acceptance: batched decode over N concurrent streams must
+/// match N independent per-slot `decode_step` runs within 1e-5 — at
+/// `threads = 1` and `threads = 4`, and including a slot whose ring
+/// buffer wraps mid-decode. (The implementation is bit-identical by
+/// construction; the tolerance is the contract.)
+#[test]
+fn decode_batch_matches_per_slot_steps_across_thread_counts() {
+    let _knob = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let (be, host) = tiny_backend();
+    let spec = Manifest::builtin().model("tiny").unwrap().clone();
+    let vocab = 256usize;
+    for &threads in &[1usize, 4] {
+        misa::tensor::set_threads(threads);
+        let prompts: Vec<Vec<i32>> = (0..3)
+            .map(|i| random_prompt(3 + 2 * i, vocab, 70 + i as u64))
+            .collect();
+        // slot 2 gets capacity 8: its 7-token prompt still prefills in
+        // one chunk, then the ring wraps during the 10 decode steps
+        // below (7 + 10 > 8) — sliding-window attention on one slot
+        // of an otherwise unwrapped batch
+        let caps = [32usize, 32, 8];
+        let mut batched: Vec<KvCache> = Vec::new();
+        let mut solo: Vec<KvCache> = Vec::new();
+        let mut last: Vec<i32> = Vec::new();
+        for (p, &cap) in prompts.iter().zip(&caps) {
+            let mut cb = KvCache::new(&spec, cap).unwrap();
+            let logits = be.prefill(&host, p, &mut cb).unwrap();
+            batched.push(cb);
+            let mut cs = KvCache::new(&spec, cap).unwrap();
+            be.prefill(&host, p, &mut cs).unwrap();
+            solo.push(cs);
+            last.push(misa::serve::argmax(&logits) as i32);
+        }
+        for step in 0..10 {
+            let positions: Vec<usize> = batched.iter().map(|c| c.len()).collect();
+            let mut refs: Vec<&mut KvCache> = batched.iter_mut().collect();
+            let rows = be.decode_batch(&host, &last, &positions, &mut refs).unwrap();
+            assert_eq!(rows.len(), 3);
+            for (slot, row) in rows.iter().enumerate() {
+                let want = be
+                    .decode_step(&host, last[slot], solo[slot].len(), &mut solo[slot])
+                    .unwrap();
+                let mut max_err = 0.0f32;
+                for (a, b) in row.iter().zip(&want) {
+                    max_err = max_err.max((a - b).abs());
+                }
+                assert!(
+                    max_err < 1e-5,
+                    "threads={threads} step={step} slot={slot}: batched decode \
+                     diverged (max |Δ| {max_err})"
+                );
+                assert_eq!(
+                    misa::serve::argmax(row),
+                    misa::serve::argmax(&want),
+                    "threads={threads} step={step} slot={slot}: argmax diverged"
+                );
+            }
+            for (slot, row) in rows.iter().enumerate() {
+                last[slot] = misa::serve::argmax(row) as i32;
+            }
+        }
+        // the wrapping slot really wrapped
+        assert!(batched[2].len() > batched[2].capacity());
+    }
+    misa::tensor::set_threads(0);
+}
+
+/// Scheduled (batched) generation must equal solo generation for every
+/// request, independent of the GEMM worker-pool width — N concurrent
+/// prompts through the scheduler against N solo `generate` runs at
+/// `threads = 1` and `threads = 4`.
+#[test]
+fn scheduler_batched_decode_matches_solo_at_thread_counts() {
+    let _knob = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let mut eng = Engine::host();
+    let sess = Session::create(&mut eng, "tiny", 9).unwrap();
+    for &threads in &[1usize, 4] {
+        misa::tensor::set_threads(threads);
+        let reqs: Vec<Request> = (0..4)
+            .map(|i| Request {
+                id: i,
+                prompt: random_prompt(2 + i as usize, 256, 40 + i),
+                max_new: 5 + i as usize,
+                sampler: SamplerCfg { temperature: 0.8, top_k: 16, top_p: 0.9 },
+                seed: 700 + i,
+                eos: None,
+            })
+            .collect();
+        let mut sched = Scheduler::new(SchedulerCfg { max_slots: 4, token_budget: 256 });
+        for r in &reqs {
+            sched.submit(r.clone()).unwrap();
+        }
+        let mut done = sched.run(&sess).unwrap();
+        assert!(sched.peak_active() >= 2, "decode must actually batch");
+        done.sort_by_key(|c| c.id);
+        for (c, r) in done.iter().zip(&reqs) {
+            let solo = generate(
+                &sess,
+                &r.prompt,
+                &GenerateCfg { max_new: r.max_new, sampler: r.sampler, seed: r.seed, eos: r.eos },
+            )
+            .unwrap();
+            assert_eq!(
+                c.tokens, solo.tokens,
+                "threads={threads}: request {} depends on batch composition", r.id
+            );
+        }
+    }
+    misa::tensor::set_threads(0);
 }
 
 /// KV memory accounting: GQA halves the cache relative to MHA head
