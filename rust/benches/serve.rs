@@ -3,19 +3,24 @@
 //! generation, and continuous-batching throughput at several
 //! concurrency levels. Artifact-free (builtin registry, random init).
 //!
-//! The slot sweep is the tentpole measurement: `slots = 1` decodes the
+//! The slot sweep measures batched decode: `slots = 1` decodes the
 //! 8-request workload one stream at a time (the per-slot baseline),
 //! while `slots = 8` runs the same workload through one batched
 //! `decode_batch` forward per iteration — the aggregate tok/s ratio is
-//! the batching win. Honors `MISA_THREADS` (worker-pool width) and
-//! with `-- --json FILE` writes the sweep as a JSON **array** of
-//! records (one per model x slot-count point; the `misa bench-serve
-//! --json` CLI path writes a single bare object).
+//! the batching win. The shared-prefix sweep measures prompt-cache
+//! reuse: 8 requests behind one 64-token system prompt, with and
+//! without the prefix cache — the mean TTFT ratio is the reuse win.
+//! Honors `MISA_THREADS` (worker-pool width) and with `-- --json FILE`
+//! writes both sweeps as a JSON **array** of records (one per
+//! model x configuration point; the `misa bench-serve --json` CLI path
+//! writes a single bare object).
 
 use std::time::Instant;
 
 use misa::runtime::{Engine, Session};
-use misa::serve::{generate, GenerateCfg, Request, SamplerCfg, Scheduler, SchedulerCfg};
+use misa::serve::{
+    generate, CacheStoreCfg, GenerateCfg, Request, SamplerCfg, Scheduler, SchedulerCfg,
+};
 use misa::util::{BenchRecord, Rng};
 
 fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
@@ -85,8 +90,11 @@ fn main() -> anyhow::Result<()> {
         let mut baseline_tok_s = 0.0f64;
         for slots in [1usize, 4, 8] {
             let t0 = Instant::now();
-            let mut sched =
-                Scheduler::new(SchedulerCfg { max_slots: slots, token_budget: 4096 });
+            let mut sched = Scheduler::new(SchedulerCfg {
+                max_slots: slots,
+                token_budget: 4096,
+                prefix_cache: None,
+            });
             for id in 0..n_req as u64 {
                 sched.submit(Request {
                     id,
@@ -115,6 +123,7 @@ fn main() -> anyhow::Result<()> {
                 BenchRecord::new("bench-serve")
                     .tag("model", model)
                     .tag("backend", sess.backend_name())
+                    .tag("prefix_cache", "off")
                     .num("threads", threads as f64)
                     .num("requests", n_req as f64)
                     .num("slots", slots as f64)
@@ -124,6 +133,77 @@ fn main() -> anyhow::Result<()> {
                     .num("aggregate_tok_s", tok_s)
                     .num("mean_ttft_ms", ttft)
                     .num("speedup_vs_1_slot", speedup),
+            );
+        }
+
+        // the prefix-sharing sweep: 8 requests behind one 64-token
+        // system prompt, with and without the prompt cache — the mean
+        // TTFT delta is the prefix-reuse win (the shared prefix is
+        // prefilled once and forked, instead of 8 times)
+        let shared = prompt(64, vocab, 77);
+        let mut baseline_ttft = 0.0f64;
+        for cache_on in [false, true] {
+            let t0 = Instant::now();
+            let mut sched = Scheduler::new(SchedulerCfg {
+                max_slots: 4,
+                token_budget: 4096,
+                prefix_cache: cache_on.then(|| CacheStoreCfg {
+                    capacity: 256,
+                    max_entries: 16,
+                    min_prefix: 8,
+                }),
+            });
+            for id in 0..n_req as u64 {
+                let mut p = shared.clone();
+                let mut rng = Rng::new(500 + id);
+                for _ in 0..8 {
+                    p.push(rng.range(32, vocab) as i32);
+                }
+                sched.submit(Request {
+                    id,
+                    prompt: p,
+                    max_new,
+                    sampler: SamplerCfg { temperature: 0.8, top_k: 32, top_p: 0.95 },
+                    seed: id,
+                    eos: None,
+                })?;
+            }
+            let done = sched.run(&sess)?;
+            let wall = t0.elapsed().as_secs_f64();
+            let toks: usize = done.iter().map(|c| c.tokens.len()).sum();
+            let tok_s = toks as f64 / wall.max(1e-9);
+            let ttft =
+                done.iter().map(|c| c.ttft_s).sum::<f64>() / done.len() as f64 * 1e3;
+            let stats = sched.cache_stats().unwrap_or_default();
+            if !cache_on {
+                baseline_ttft = ttft;
+            }
+            println!(
+                "{model}: shared-prefix {n_req} reqs, cache {}   \
+                 {tok_s:>8.1} tok/s  mean ttft {ttft:.1} ms  ({:.2}x vs cold)  \
+                 hit-rate {:.2}  reused {}",
+                if cache_on { "on " } else { "off" },
+                baseline_ttft / ttft.max(1e-9),
+                stats.hit_rate(),
+                stats.reused_tokens,
+            );
+            records.push(
+                BenchRecord::new("bench-serve")
+                    .tag("model", model)
+                    .tag("backend", sess.backend_name())
+                    .tag("prefix_cache", if cache_on { "on" } else { "off" })
+                    .num("threads", threads as f64)
+                    .num("requests", n_req as f64)
+                    .num("slots", 4.0)
+                    .num("prompt_len", 8.0)
+                    .num("shared_prefix", 64.0)
+                    .num("max_new", max_new as f64)
+                    .num("wall_s", wall)
+                    .num("aggregate_tok_s", tok_s)
+                    .num("mean_ttft_ms", ttft)
+                    .num("ttft_speedup_vs_cold", baseline_ttft / ttft.max(1e-9))
+                    .num("cache_hit_rate", stats.hit_rate())
+                    .num("cache_reused_tokens", stats.reused_tokens as f64),
             );
         }
     }

@@ -33,7 +33,8 @@
 //!   LISA, LoRA, DoRA, GaLore, LoRA+MISA.
 //! - [`coordinator`] — trainer orchestration, evaluation, experiments.
 //! - [`serve`] — inference serving: KV-cache incremental decode, token
-//!   samplers, single-stream generation, continuous-batching scheduler.
+//!   samplers, single-stream generation, prefix-sharing prompt cache,
+//!   continuous-batching scheduler with batched prefill admission.
 //! - [`config`] — TOML-subset run configuration.
 
 pub mod config;

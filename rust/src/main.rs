@@ -25,7 +25,9 @@ use misa::coordinator::{ckpt, Trainer};
 use misa::memory::{self, Arch, Method, Workload};
 use misa::modelspec::ModelSpec;
 use misa::runtime::{BackendKind, Engine, KvCache, Session};
-use misa::serve::{generate, GenerateCfg, Request, SamplerCfg, Scheduler, SchedulerCfg};
+use misa::serve::{
+    generate, CacheStoreCfg, GenerateCfg, Request, SamplerCfg, Scheduler, SchedulerCfg,
+};
 use misa::util::Rng;
 
 fn usage() -> ! {
@@ -38,8 +40,10 @@ fn usage() -> ! {
          \x20 misa generate --ckpt FILE [--model M] [--prompt \"1,2,3\"] [--max-new N]\n\
          \x20           [--temp F] [--top-k N] [--top-p F] [--eos TOK] [--seed N]\n\
          \x20 misa bench-serve [--ckpt FILE] [--model M] [--requests N] [--max-new N]\n\
-         \x20           [--prompt-len N] [--slots N] [--token-budget N] [--temp F]\n\
-         \x20           [--top-k N] [--top-p F] [--seed N] [--json FILE]\n\
+         \x20           [--prompt-len N] [--shared-prefix N] [--slots N]\n\
+         \x20           [--token-budget N] [--prefix-cache] [--prefix-cache-cap N]\n\
+         \x20           [--prefix-cache-entries N] [--temp F] [--top-k N] [--top-p F]\n\
+         \x20           [--seed N] [--json FILE]\n\
          \x20 misa bench [--model M] [--steps N] [--seed N] [--json FILE]\n\
          \x20 misa exp <name|all|list> [--full] [--artifacts DIR] [--backend B]\n\
          \x20 misa info [--artifacts DIR] [--backend B]\n\n\
@@ -54,12 +58,12 @@ fn usage() -> ! {
 const VALUED_FLAGS: &[&str] = &[
     "config", "model", "method", "steps", "lr", "delta", "eta", "t-inner", "rank", "alpha",
     "data", "seed", "out", "artifacts", "backend", "save-ckpt", "ckpt", "prompt",
-    "max-new", "temp", "top-k", "top-p", "eos", "requests", "prompt-len", "slots",
-    "token-budget", "threads", "json",
+    "max-new", "temp", "top-k", "top-p", "eos", "requests", "prompt-len", "shared-prefix",
+    "slots", "token-budget", "prefix-cache-cap", "prefix-cache-entries", "threads", "json",
 ];
 
 /// Boolean switches.
-const SWITCHES: &[&str] = &["pretrain", "full", "host"];
+const SWITCHES: &[&str] = &["pretrain", "full", "host", "prefix-cache"];
 
 struct Args {
     positional: Vec<String>,
@@ -358,6 +362,25 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         Some(n) => n.parse::<usize>().context("--prompt-len")?.max(1),
         None => 8,
     };
+    // --shared-prefix N: a common N-token system prompt (BOS included)
+    // shared by every request, ahead of its --prompt-len unique tokens —
+    // the workload prefix caching exists for
+    let shared_prefix: usize = match args.flags.get("shared-prefix") {
+        Some(n) => n.parse().context("--shared-prefix")?,
+        None => 0,
+    };
+    let prefix_cache = if args.switches.contains("prefix-cache") {
+        let mut c = CacheStoreCfg::default();
+        if let Some(v) = args.flags.get("prefix-cache-cap") {
+            c.capacity = v.parse().context("--prefix-cache-cap")?;
+        }
+        if let Some(v) = args.flags.get("prefix-cache-entries") {
+            c.max_entries = v.parse().context("--prefix-cache-entries")?;
+        }
+        Some(c)
+    } else {
+        None
+    };
     let cfg = SchedulerCfg {
         max_slots: match args.flags.get("slots") {
             Some(n) => n.parse().context("--slots")?,
@@ -367,12 +390,22 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
             Some(n) => n.parse().context("--token-budget")?,
             None => 4096,
         },
+        prefix_cache,
     };
     let sampler = sampler_from(args)?;
     let mc = &sess.spec.config;
+    // total per-request prompt: the shared block, then the unique tail
+    // (--shared-prefix 0 degenerates to the bare BOS head inside
+    // --prompt-len, the pre-prefix-cache workload)
+    let target_len = shared_prefix + prompt_len;
+    let cache_label = match &cfg.prefix_cache {
+        Some(c) => format!("on(cap={},entries={})", c.capacity, c.max_entries),
+        None => "off".to_string(),
+    };
     println!(
         "bench-serve: model={} backend={} requests={requests} max_new={max_new} \
-         prompt_len={prompt_len} slots={} token_budget={} threads={}",
+         prompt_len={prompt_len} shared_prefix={shared_prefix} slots={} \
+         token_budget={} prefix_cache={cache_label} threads={}",
         mc.name,
         sess.backend_name(),
         cfg.max_slots,
@@ -382,9 +415,20 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     let mut rng = Rng::new(seed ^ 0x5E57E);
     let mut sched = Scheduler::new(cfg);
     let vocab = mc.vocab;
+    // the shared block (seeded separately so it is identical across
+    // requests): BOS plus shared_prefix - 1 system-prompt tokens; with
+    // --shared-prefix 0 it degenerates to the bare BOS head
+    let shared: Vec<i32> = {
+        let mut srng = Rng::new(seed ^ 0xA11CE);
+        let mut s = vec![misa::data::tok::BOS];
+        while s.len() < shared_prefix {
+            s.push(srng.range(misa::data::tok::SYM0 as usize, vocab) as i32);
+        }
+        s
+    };
     for id in 0..requests as u64 {
-        let mut prompt = vec![misa::data::tok::BOS];
-        while prompt.len() < prompt_len {
+        let mut prompt = shared.clone();
+        while prompt.len() < target_len {
             prompt.push(rng.range(misa::data::tok::SYM0 as usize, vocab) as i32);
         }
         sched.submit(Request {
@@ -405,7 +449,7 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     let mean_tps =
         done.iter().map(|c| c.decode_tps).sum::<f64>() / done.len().max(1) as f64;
     let kv_bytes =
-        KvCache::bytes_for(&sess.spec, prompt_len + max_new) * sched.peak_active();
+        KvCache::bytes_for(&sess.spec, target_len + max_new) * sched.peak_active();
     println!(
         "completed {} requests in {wall:.2} s · aggregate {:.1} tok/s · \
          mean ttft {mean_ttft_ms:.1} ms · mean per-request decode {mean_tps:.1} tok/s",
@@ -417,15 +461,31 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         sched.peak_active(),
         kv_bytes as f64 / (1024.0 * 1024.0),
     );
+    let cache_stats = sched.cache_stats();
+    let stats = cache_stats.unwrap_or_default();
+    if cache_stats.is_some() {
+        println!(
+            "prefix cache: {} lookups · {} hits ({:.0}%) · {} prompt tokens reused · \
+             {} entries resident · {} evicted",
+            stats.lookups,
+            stats.hits,
+            stats.hit_rate() * 100.0,
+            stats.reused_tokens,
+            stats.entries,
+            stats.evictions,
+        );
+    }
     if let Some(path) = args.flags.get("json") {
         misa::util::BenchRecord::new("bench-serve")
             .tag("model", mc.name.clone())
             .tag("backend", sess.backend_name())
+            .tag("prefix_cache", if cache_stats.is_some() { "on" } else { "off" })
             .num("threads", misa::tensor::threads() as f64)
             .num("requests", done.len() as f64)
             .num("slots", cfg.max_slots as f64)
             .num("token_budget", cfg.token_budget as f64)
             .num("prompt_len", prompt_len as f64)
+            .num("shared_prefix", shared_prefix as f64)
             .num("max_new", max_new as f64)
             .num("wall_s", wall)
             .num("aggregate_tok_s", new_tokens as f64 / wall.max(1e-9))
@@ -433,6 +493,14 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
             .num("mean_decode_tps", mean_tps)
             .num("peak_active", sched.peak_active() as f64)
             .num("peak_kv_mib", kv_bytes as f64 / (1024.0 * 1024.0))
+            .nums(&[
+                ("cache_lookups", stats.lookups as f64),
+                ("cache_hits", stats.hits as f64),
+                ("cache_hit_rate", stats.hit_rate()),
+                ("cache_reused_tokens", stats.reused_tokens as f64),
+                ("cache_entries", stats.entries as f64),
+                ("cache_evictions", stats.evictions as f64),
+            ])
             .write(Path::new(path))?;
         println!("bench record written: {path}");
     }
@@ -690,6 +758,23 @@ mod tests {
         assert!(apply_threads(&a).is_err());
         let a = parse_args(&v(&["bench", "--threads", "x"])).unwrap();
         assert!(apply_threads(&a).is_err());
+    }
+
+    #[test]
+    fn prefix_cache_flags_parse() {
+        let a = parse_args(&v(&[
+            "bench-serve", "--prefix-cache", "--prefix-cache-cap", "256",
+            "--prefix-cache-entries", "8", "--shared-prefix", "64",
+        ]))
+        .unwrap();
+        assert!(a.switches.contains("prefix-cache"));
+        assert_eq!(a.flags.get("prefix-cache-cap").unwrap(), "256");
+        assert_eq!(a.flags.get("prefix-cache-entries").unwrap(), "8");
+        assert_eq!(a.flags.get("shared-prefix").unwrap(), "64");
+        // the switch does not consume a value
+        let a = parse_args(&v(&["bench-serve", "--prefix-cache", "9"])).unwrap();
+        assert!(a.switches.contains("prefix-cache"));
+        assert_eq!(a.positional, vec!["bench-serve", "9"]);
     }
 
     #[test]

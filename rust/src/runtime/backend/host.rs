@@ -376,17 +376,29 @@ impl HostBackend {
         Ok(self.forward(host, &batch)?.logits)
     }
 
-    /// Cache-aware forward over a chunk of `tokens` at absolute
-    /// positions `cache.len()..cache.len() + tokens.len()`: appends each
-    /// position's K/V to the ring buffers, attends over the resident
-    /// window, and returns the final position's logits `[vocab]`.
+    /// Cache-aware forward over one token chunk *per slot*, all slots
+    /// stacked into a single ragged `[total_tokens, hidden]` activation
+    /// matrix: slot `i` runs `chunks[i]` at absolute positions
+    /// `caches[i].len()..`, appending each position's K/V to its own
+    /// ring buffers, and row `i` of the result is slot `i`'s
+    /// final-position logits `[vocab]`.
     ///
-    /// Prefill is a chunk of the whole prompt; a decode step is a chunk
-    /// of one token. Per-row numerics are identical to the training
-    /// forward pass (same GEMM cores, same softmax accumulation order),
-    /// which is what makes the 1e-5 parity guarantee hold.
-    fn serve_chunk(&self, host: &[Vec<f32>], tokens: &[i32], cache: &mut KvCache)
-                   -> Result<Vec<f32>> {
+    /// One-shot prefill is the batch-of-one case; a decode step is a
+    /// batch-of-one chunk of one token. Every projection runs as one
+    /// GEMM over the stacked rows — and because the blocked GEMM cores
+    /// compute each output row independently in a fixed reduction
+    /// order, each slot's rows are bit-identical to running its chunk
+    /// alone. Attention stays per-slot, per-position
+    /// ([`attend_position`]): slots share weights, never context.
+    /// Per-row numerics are identical to the training forward pass
+    /// (same GEMM cores, same softmax accumulation order), which is
+    /// what makes the 1e-5 parity guarantee hold.
+    fn prefill_many(
+        &self,
+        host: &[Vec<f32>],
+        chunks: &[&[i32]],
+        caches: &mut [&mut KvCache],
+    ) -> Result<Vec<Vec<f32>>> {
         let mc = &self.spec.config;
         let (d, v, f) = (mc.dim, mc.vocab, mc.ffn_dim);
         let (nh, nkv) = (mc.n_heads, mc.n_kv_heads);
@@ -394,86 +406,124 @@ impl HostBackend {
         let kd = mc.kv_dim();
         let rep = nh / nkv;
         let scale = 1.0 / (hd as f32).sqrt();
-        let t = tokens.len();
-        let start = cache.len();
-        cache.check_spec(&self.spec)?;
-        ensure!(t > 0, "serve: empty token chunk");
+        let bsz = chunks.len();
+        ensure!(bsz > 0, "serve: empty prefill batch");
         ensure!(
-            t <= cache.capacity(),
-            "serve: chunk of {t} tokens exceeds kv cache capacity {}",
-            cache.capacity()
+            caches.len() == bsz,
+            "prefill_batch: {bsz} chunks, {} caches",
+            caches.len()
         );
         ensure!(host.len() == self.spec.params.len(), "param count mismatch");
         for (p, data) in self.spec.params.iter().zip(host) {
             ensure!(data.len() == p.numel(), "param {} size mismatch", p.name);
         }
-        for &tk in tokens {
-            ensure!(tk >= 0 && (tk as usize) < v, "token id {tk} outside vocab {v}");
+        // per-slot validation + row offsets into the stacked matrix
+        let mut offs = Vec::with_capacity(bsz);
+        let mut rows = 0usize;
+        for (i, (tokens, cache)) in chunks.iter().zip(caches.iter()).enumerate() {
+            cache.check_spec(&self.spec)?;
+            ensure!(!tokens.is_empty(), "serve slot {i}: empty token chunk");
+            ensure!(
+                tokens.len() <= cache.capacity(),
+                "serve slot {i}: chunk of {} tokens exceeds kv cache capacity {}",
+                tokens.len(),
+                cache.capacity()
+            );
+            for &tk in *tokens {
+                ensure!(tk >= 0 && (tk as usize) < v, "token id {tk} outside vocab {v}");
+            }
+            offs.push(rows);
+            rows += tokens.len();
         }
+        let starts: Vec<usize> = caches.iter().map(|c| c.len()).collect();
 
-        // token embedding
+        // token embedding: one stacked [rows, d] residual stream
         let embed = &host[self.layout.embed];
-        let mut x = vec![0.0f32; t * d];
-        for (i, &tk) in tokens.iter().enumerate() {
-            let tok = tk as usize;
-            x[i * d..(i + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
+        let mut x = vec![0.0f32; rows * d];
+        {
+            let mut r = 0;
+            for tokens in chunks {
+                for &tk in *tokens {
+                    let tok = tk as usize;
+                    x[r * d..(r + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
+                    r += 1;
+                }
+            }
         }
 
         for (li, lp) in self.layout.layers.iter().enumerate() {
-            let (h1, _) = rms_forward(&x, &host[lp.attn_norm], t, d);
-            let mut q = gemm_nn(&h1, &host[lp.wq], t, d, d);
-            let mut k = gemm_nn(&h1, &host[lp.wk], t, d, kd);
-            let v_proj = gemm_nn(&h1, &host[lp.wv], t, d, kd);
-            for i in 0..t {
-                self.rope_row(&mut q[i * d..(i + 1) * d], nh, start + i);
-                self.rope_row(&mut k[i * kd..(i + 1) * kd], nkv, start + i);
+            let (h1, _) = rms_forward(&x, &host[lp.attn_norm], rows, d);
+            let mut q = gemm_nn(&h1, &host[lp.wq], rows, d, d);
+            let mut k = gemm_nn(&h1, &host[lp.wk], rows, d, kd);
+            let v_proj = gemm_nn(&h1, &host[lp.wv], rows, d, kd);
+            for i in 0..bsz {
+                for j in 0..chunks[i].len() {
+                    let r = offs[i] + j;
+                    self.rope_row(&mut q[r * d..(r + 1) * d], nh, starts[i] + j);
+                    self.rope_row(&mut k[r * kd..(r + 1) * kd], nkv, starts[i] + j);
+                }
             }
-            // causal attention over the resident window. Each position's
-            // K/V is written into the ring right before its own query
-            // attends: writing one position at a time means a wrapping
-            // chunk never clobbers a slot an earlier in-chunk query
-            // still needs — ring slot `p % capacity` frees exactly when
-            // position `p - capacity` has left every remaining window.
-            let capacity = cache.capacity();
-            let (ck, cv) = cache.layer_mut(li);
-            let mut concat = vec![0.0f32; t * d];
+            // causal attention over each slot's resident window. Each
+            // position's K/V is written into its ring right before its
+            // own query attends: writing one position at a time means a
+            // wrapping chunk never clobbers a slot an earlier in-chunk
+            // query still needs — ring slot `p % capacity` frees exactly
+            // when position `p - capacity` has left every remaining
+            // window.
+            let mut concat = vec![0.0f32; rows * d];
             let mut scores: Vec<f32> = Vec::new();
-            for i in 0..t {
-                attend_position(
-                    &q[i * d..(i + 1) * d],
-                    &k[i * kd..(i + 1) * kd],
-                    &v_proj[i * kd..(i + 1) * kd],
-                    start + i,
-                    capacity,
-                    ck,
-                    cv,
-                    &mut scores,
-                    &mut concat[i * d..(i + 1) * d],
-                    (nh, rep, hd, kd),
-                    scale,
-                );
+            for i in 0..bsz {
+                let cache = &mut *caches[i];
+                for j in 0..chunks[i].len() {
+                    let r = offs[i] + j;
+                    let p = starts[i] + j;
+                    cache.write_kv(
+                        li,
+                        p,
+                        &k[r * kd..(r + 1) * kd],
+                        &v_proj[r * kd..(r + 1) * kd],
+                    );
+                    attend_position(
+                        &q[r * d..(r + 1) * d],
+                        p,
+                        cache,
+                        li,
+                        &mut scores,
+                        &mut concat[r * d..(r + 1) * d],
+                        (nh, rep, hd, kd),
+                        scale,
+                    );
+                }
             }
-            let attn_out = gemm_nn(&concat, &host[lp.wo], t, d, d);
-            for i in 0..t * d {
+            let attn_out = gemm_nn(&concat, &host[lp.wo], rows, d, d);
+            for i in 0..rows * d {
                 x[i] += attn_out[i];
             }
-            let (h2, _) = rms_forward(&x, &host[lp.mlp_norm], t, d);
-            let gpre = gemm_nn(&h2, &host[lp.wgate], t, d, f);
-            let up = gemm_nn(&h2, &host[lp.wup], t, d, f);
-            let mut act = vec![0.0f32; t * f];
-            for i in 0..t * f {
+            let (h2, _) = rms_forward(&x, &host[lp.mlp_norm], rows, d);
+            let gpre = gemm_nn(&h2, &host[lp.wgate], rows, d, f);
+            let up = gemm_nn(&h2, &host[lp.wup], rows, d, f);
+            let mut act = vec![0.0f32; rows * f];
+            for i in 0..rows * f {
                 act[i] = silu(gpre[i]) * up[i];
             }
-            let mlp_out = gemm_nn(&act, &host[lp.wdown], t, f, d);
-            for i in 0..t * d {
+            let mlp_out = gemm_nn(&act, &host[lp.wdown], rows, f, d);
+            for i in 0..rows * d {
                 x[i] += mlp_out[i];
             }
         }
-        cache.advance(t);
+        for (cache, tokens) in caches.iter_mut().zip(chunks) {
+            cache.advance(tokens.len());
+        }
 
-        // only the final position's logits are needed downstream
-        let (hf, _) = rms_forward(&x[(t - 1) * d..], &host[self.layout.final_norm], 1, d);
-        Ok(gemm_nn(&hf, &host[self.layout.head], 1, d, v))
+        // only each slot's final position feeds the LM head
+        let mut fin = vec![0.0f32; bsz * d];
+        for i in 0..bsz {
+            let r = offs[i] + chunks[i].len() - 1;
+            fin[i * d..(i + 1) * d].copy_from_slice(&x[r * d..(r + 1) * d]);
+        }
+        let (hf, _) = rms_forward(&fin, &host[self.layout.final_norm], bsz, d);
+        let logits = gemm_nn(&hf, &host[self.layout.head], bsz, d, v);
+        Ok(logits.chunks(v).map(|row| row.to_vec()).collect())
     }
 
     /// The hand-derived backward pass: gradients for every registry
@@ -697,9 +747,28 @@ impl Backend for HostBackend {
         Ok(())
     }
 
+    /// One prompt is the batch-of-one case of [`Backend::prefill_batch`]:
+    /// a single ragged-batch code path serves both, so per-slot and
+    /// batched prefill numerics are identical by construction.
     fn prefill(&self, host: &[Vec<f32>], tokens: &[i32], cache: &mut KvCache)
                -> Result<Vec<f32>> {
-        self.serve_chunk(host, tokens, cache)
+        let mut caches = [cache];
+        let mut rows = self.prefill_many(host, &[tokens], &mut caches)?;
+        Ok(rows.pop().expect("prefill_many returns one row per slot"))
+    }
+
+    /// Truly batched prefill: every admitted prompt's rows stack into
+    /// one ragged `[total_tokens, hidden]` activation matrix, so each
+    /// layer runs one GEMM per projection across the whole admission
+    /// group instead of one per prompt — the prefill counterpart of
+    /// [`Backend::decode_batch`].
+    fn prefill_batch(
+        &self,
+        host: &[Vec<f32>],
+        chunks: &[&[i32]],
+        caches: &mut [&mut KvCache],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.prefill_many(host, chunks, caches)
     }
 
     /// One token is the batch-of-one case of [`Backend::decode_batch`]:
@@ -719,7 +788,7 @@ impl Backend for HostBackend {
     /// per slot. Attention stays per-slot over each ring-buffer cache —
     /// slots share weights, never context. Per-row numerics are
     /// identical to [`Backend::decode_step`] (same GEMM cores row by
-    /// row, same [`attend_position`] kernel), so a scheduled batch
+    /// row, same `attend_position` kernel), so a scheduled batch
     /// decodes bit-identically to solo generation.
     fn decode_batch(
         &self,
@@ -792,16 +861,17 @@ impl Backend for HostBackend {
             ws.concat.fill(0.0);
             for i in 0..bsz {
                 let cache = &mut *caches[i];
-                let capacity = cache.capacity();
-                let (ck, cv) = cache.layer_mut(li);
-                attend_position(
-                    &ws.q[i * d..(i + 1) * d],
+                cache.write_kv(
+                    li,
+                    positions[i],
                     &ws.k[i * kd..(i + 1) * kd],
                     &ws.v[i * kd..(i + 1) * kd],
+                );
+                attend_position(
+                    &ws.q[i * d..(i + 1) * d],
                     positions[i],
-                    capacity,
-                    ck,
-                    cv,
+                    cache,
+                    li,
                     &mut ws.scores,
                     &mut ws.concat[i * d..(i + 1) * d],
                     (nh, rep, hd, kd),
@@ -890,31 +960,30 @@ fn rms_forward_into(x: &[f32], w: &[f32], n: usize, d: usize, out: &mut [f32]) {
     }
 }
 
-/// Write one position's K/V row into its ring slot, then attend the
-/// position's query over the resident window into `orow` (`[d]`,
-/// zeroed by the caller). The shared per-position kernel of chunked
-/// prefill ([`HostBackend::serve_chunk`]) and batched decode
+/// Attend position `p`'s query over the cache's resident window into
+/// `orow` (`[d]`, zeroed by the caller). The position's own K/V rows
+/// must already be written (`KvCache::write_kv`) — write-then-attend,
+/// one position at a time, is the ordering that makes a wrapping chunk
+/// safe. The shared per-position kernel of ragged batched prefill
+/// ([`HostBackend::prefill_many`]) and batched decode
 /// ([`Backend::decode_batch`]): one accumulation order for both is
-/// what keeps every serving path within 1e-5 of the training forward.
+/// what keeps every serving path within 1e-5 of the training forward —
+/// and a forked cache bit-identical to a cold one, since reads go
+/// through the same ring rows whether a chunk is owned or shared.
 /// `dims` is `(n_heads, rep, head_dim, kv_dim)`.
 #[allow(clippy::too_many_arguments)]
 fn attend_position(
     qrow_all: &[f32],
-    krow: &[f32],
-    vrow: &[f32],
     p: usize,
-    capacity: usize,
-    ck: &mut [f32],
-    cv: &mut [f32],
+    cache: &KvCache,
+    layer: usize,
     scores: &mut Vec<f32>,
     orow_all: &mut [f32],
     dims: (usize, usize, usize, usize),
     scale: f32,
 ) {
-    let (nh, rep, hd, kd) = dims;
-    let slot = p % capacity;
-    ck[slot * kd..(slot + 1) * kd].copy_from_slice(krow);
-    cv[slot * kd..(slot + 1) * kd].copy_from_slice(vrow);
+    let (nh, rep, hd, _kd) = dims;
+    let capacity = cache.capacity();
     let lo = (p + 1).saturating_sub(capacity);
     let w = p + 1 - lo;
     scores.resize(w, 0.0);
@@ -924,7 +993,7 @@ fn attend_position(
         let mut mx = f32::NEG_INFINITY;
         for (jj, sc_out) in scores.iter_mut().enumerate() {
             let slot = (lo + jj) % capacity;
-            let kr = &ck[slot * kd + kvh * hd..][..hd];
+            let kr = &cache.k_row(layer, slot)[kvh * hd..][..hd];
             let mut sc = 0.0f32;
             for tt in 0..hd {
                 sc += qrow[tt] * kr[tt];
@@ -947,7 +1016,7 @@ fn attend_position(
                 continue;
             }
             let slot = (lo + jj) % capacity;
-            let vr = &cv[slot * kd + kvh * hd..][..hd];
+            let vr = &cache.v_row(layer, slot)[kvh * hd..][..hd];
             for tt in 0..hd {
                 orow[tt] += pr * vr[tt];
             }

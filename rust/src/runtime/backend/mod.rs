@@ -3,9 +3,10 @@
 //! The coordinator (trainer, optimizers, experiments) speaks one small
 //! execution ABI, [`Backend`]: fwd/bwd, predict, the fused-Adam update,
 //! the momentum-tail update, parameter upload, and the serving entry
-//! points ([`Backend::prefill`] / [`Backend::decode_step`] /
-//! [`Backend::decode_batch`] over per-slot [`KvCache`]s). Two
-//! implementations exist:
+//! points ([`Backend::prefill`] / [`Backend::prefill_batch`] /
+//! [`Backend::decode_step`] / [`Backend::decode_batch`] over per-slot
+//! [`KvCache`]s, which fork cheaply via [`KvCache::fork_from`] for
+//! prompt-prefix reuse). Two implementations exist:
 //!
 //! - [`HostBackend`] (default): the full transformer forward/backward,
 //!   masked cross-entropy, per-parameter squared gradient norms, and
@@ -25,6 +26,8 @@ pub mod pjrt;
 
 pub use host::HostBackend;
 
+use std::sync::Arc;
+
 use anyhow::{bail, ensure, Result};
 
 use crate::data::Batch;
@@ -42,6 +45,7 @@ pub enum BackendKind {
 }
 
 impl BackendKind {
+    /// Parse a `--backend` CLI value ("host" / "pjrt").
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "host" => Ok(BackendKind::Host),
@@ -50,6 +54,7 @@ impl BackendKind {
         }
     }
 
+    /// The CLI spelling of this backend kind.
     pub fn as_str(&self) -> &'static str {
         match self {
             BackendKind::Host => "host",
@@ -58,15 +63,30 @@ impl BackendKind {
     }
 }
 
+/// Ring positions per copy-on-write chunk of a [`KvCache`] layer.
+///
+/// Forks share whole chunks; a write to a shared chunk clones just that
+/// chunk (`Arc::make_mut`), so the COW granularity — and the marginal
+/// memory cost of a diverging fork — is `CHUNK_POSITIONS * kv_dim`
+/// floats per layer, not the whole ring.
+const CHUNK_POSITIONS: usize = 16;
+
 /// Per-layer key/value ring buffers for incremental decode.
 ///
 /// One cache belongs to one generation stream (one scheduler slot). Each
-/// layer holds `[capacity, kv_dim]` K and V buffers where `kv_dim =
+/// layer holds `[capacity, kv_dim]` K and V rings where `kv_dim =
 /// n_kv_heads * head_dim` — GQA-sized, so a cache is `n_heads /
 /// n_kv_heads` times smaller than the full attention residency. Absolute
 /// position `p` lives in ring slot `p % capacity`; once `len > capacity`
 /// decode degrades gracefully to sliding-window attention over the last
 /// `capacity` positions (RoPE still uses absolute positions).
+///
+/// Storage is split into `CHUNK_POSITIONS` (16) position chunks behind
+/// `Arc`s, so [`KvCache::fork_from`] (and `clone`) share every chunk
+/// with the parent in O(capacity / CHUNK_POSITIONS) pointer copies;
+/// chunks are cloned lazily, one at a time, when either side writes —
+/// the same keep-only-what-diverges idea MISA applies to optimizer
+/// state, applied to KV memory across requests.
 #[derive(Clone, Debug)]
 pub struct KvCache {
     n_layers: usize,
@@ -74,10 +94,10 @@ pub struct KvCache {
     capacity: usize,
     /// absolute positions appended so far (== the next decode position)
     len: usize,
-    /// per-layer keys, `[capacity * kv_dim]` each
-    k: Vec<Vec<f32>>,
-    /// per-layer values, `[capacity * kv_dim]` each
-    v: Vec<Vec<f32>>,
+    /// per-layer keys: chunks of `[CHUNK_POSITIONS * kv_dim]`
+    k: Vec<Vec<Arc<Vec<f32>>>>,
+    /// per-layer values: chunks of `[CHUNK_POSITIONS * kv_dim]`
+    v: Vec<Vec<Arc<Vec<f32>>>>,
 }
 
 impl KvCache {
@@ -86,14 +106,100 @@ impl KvCache {
         let mc = &spec.config;
         ensure!(capacity > 0, "kv cache capacity must be > 0");
         let kv_dim = mc.kv_dim();
+        let n_chunks = capacity.div_ceil(CHUNK_POSITIONS);
+        let alloc = || -> Vec<Arc<Vec<f32>>> {
+            (0..n_chunks).map(|_| Arc::new(vec![0.0; CHUNK_POSITIONS * kv_dim])).collect()
+        };
         Ok(KvCache {
             n_layers: mc.n_layers,
             kv_dim,
             capacity,
             len: 0,
-            k: (0..mc.n_layers).map(|_| vec![0.0; capacity * kv_dim]).collect(),
-            v: (0..mc.n_layers).map(|_| vec![0.0; capacity * kv_dim]).collect(),
+            k: (0..mc.n_layers).map(|_| alloc()).collect(),
+            v: (0..mc.n_layers).map(|_| alloc()).collect(),
         })
+    }
+
+    /// Fork a child cache off `parent` at `len` resident positions: the
+    /// child sees `parent`'s first `len` positions (prompt-prefix reuse)
+    /// and appends from there, while every K/V chunk stays shared until
+    /// one side writes into it (copy-on-write) — forking is O(chunks)
+    /// pointer copies, never a K/V memcpy, and never recomputes a
+    /// position.
+    ///
+    /// The child keeps the parent's capacity (chunk sharing requires one
+    /// ring layout). Fails if `len` exceeds the parent's length or if
+    /// the parent's ring has already wrapped over a position the child's
+    /// first attention window (query at `len`) would need — forking a
+    /// wrapped parent is only possible at (or next to) its tip.
+    pub fn fork_from(parent: &KvCache, len: usize) -> Result<Self> {
+        ensure!(
+            len <= parent.len,
+            "fork at {len} positions but the parent holds only {}",
+            parent.len
+        );
+        // the child's first query (position `len`) attends over
+        // [lo, len); every one of those positions must still be resident
+        // in the parent's ring, i.e. not overwritten by a later wrap
+        let lo = (len + 1).saturating_sub(parent.capacity);
+        ensure!(
+            parent.len <= lo + parent.capacity,
+            "fork at {len}: the parent ring (capacity {}, {} positions written) has \
+             already evicted part of that prefix",
+            parent.capacity,
+            parent.len
+        );
+        let mut child = parent.clone(); // shares every chunk Arc
+        child.len = len;
+        Ok(child)
+    }
+
+    /// Copy `parent`'s first `len` positions into a fresh ring of
+    /// `capacity` positions — the layout-converting sibling of
+    /// [`KvCache::fork_from`] for when chunk sharing is impossible
+    /// because the ring capacities differ. A row memcpy (never a
+    /// recompute), off the decode hot path: the prompt store uses it
+    /// once per newly seen prompt to convert a right-sized request
+    /// ring into a store-layout entry.
+    ///
+    /// Requires the copied prefix to be fully resident, which means an
+    /// unwrapped parent (`parent.len() <= parent.capacity()`).
+    pub fn copy_prefix(parent: &KvCache, len: usize, capacity: usize) -> Result<Self> {
+        ensure!(
+            len <= parent.len,
+            "copy_prefix of {len} positions but the parent holds only {}",
+            parent.len
+        );
+        ensure!(len <= capacity, "copy_prefix: {len} positions exceed capacity {capacity}");
+        ensure!(
+            parent.len <= parent.capacity,
+            "copy_prefix from a wrapped ring (capacity {}, {} positions written) would \
+             read evicted positions",
+            parent.capacity,
+            parent.len
+        );
+        ensure!(capacity > 0, "kv cache capacity must be > 0");
+        let n_chunks = capacity.div_ceil(CHUNK_POSITIONS);
+        let alloc = || -> Vec<Arc<Vec<f32>>> {
+            (0..n_chunks)
+                .map(|_| Arc::new(vec![0.0; CHUNK_POSITIONS * parent.kv_dim]))
+                .collect()
+        };
+        let mut child = KvCache {
+            n_layers: parent.n_layers,
+            kv_dim: parent.kv_dim,
+            capacity,
+            len,
+            k: (0..parent.n_layers).map(|_| alloc()).collect(),
+            v: (0..parent.n_layers).map(|_| alloc()).collect(),
+        };
+        // both rings are unwrapped over [0, len): slot == position
+        for layer in 0..parent.n_layers {
+            for pos in 0..len {
+                child.write_kv(layer, pos, parent.k_row(layer, pos), parent.v_row(layer, pos));
+            }
+        }
+        Ok(child)
     }
 
     /// Positions appended so far — the next decode position.
@@ -101,6 +207,7 @@ impl KvCache {
         self.len
     }
 
+    /// True when no position has been appended yet.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
@@ -110,16 +217,20 @@ impl KvCache {
         self.capacity
     }
 
+    /// Transformer layer count this cache is shaped for.
     pub fn n_layers(&self) -> usize {
         self.n_layers
     }
 
+    /// Row width of one K (or V) position: `n_kv_heads * head_dim`.
     pub fn kv_dim(&self) -> usize {
         self.kv_dim
     }
 
-    /// Resident K/V bytes (both buffers, all layers) — the scheduler's
-    /// memory-accounting unit.
+    /// Logical K/V bytes (both rings, all layers) — the scheduler's
+    /// memory-accounting unit. Physical residency can be *lower* when
+    /// forks still share chunks (copy-on-write) and is rounded up to
+    /// `CHUNK_POSITIONS`-position chunk granularity.
     pub fn bytes(&self) -> usize {
         2 * self.n_layers * self.capacity * self.kv_dim * std::mem::size_of::<f32>()
     }
@@ -135,12 +246,35 @@ impl KvCache {
         self.len = 0;
     }
 
-    /// Mutable K/V buffers of one layer (backend read/write path).
-    /// Ring indexing is the backend's contract: absolute position `pos`
-    /// lives at slot `pos % capacity`, and the attention window for a
-    /// query at `pos` starts at `(pos + 1).saturating_sub(capacity)`.
-    pub(crate) fn layer_mut(&mut self, layer: usize) -> (&mut [f32], &mut [f32]) {
-        (&mut self.k[layer], &mut self.v[layer])
+    /// One layer's K row at ring slot `slot` (read path). Ring indexing
+    /// is the backend's contract: absolute position `pos` lives at slot
+    /// `pos % capacity`, and the attention window for a query at `pos`
+    /// starts at `(pos + 1).saturating_sub(capacity)`.
+    #[inline]
+    pub(crate) fn k_row(&self, layer: usize, slot: usize) -> &[f32] {
+        let off = (slot % CHUNK_POSITIONS) * self.kv_dim;
+        &self.k[layer][slot / CHUNK_POSITIONS][off..off + self.kv_dim]
+    }
+
+    /// One layer's V row at ring slot `slot` (read path).
+    #[inline]
+    pub(crate) fn v_row(&self, layer: usize, slot: usize) -> &[f32] {
+        let off = (slot % CHUNK_POSITIONS) * self.kv_dim;
+        &self.v[layer][slot / CHUNK_POSITIONS][off..off + self.kv_dim]
+    }
+
+    /// Write absolute position `pos`'s K/V rows of one layer into their
+    /// ring slot. Chunks shared with a fork are cloned here, lazily —
+    /// the copy-on-write point.
+    #[inline]
+    pub(crate) fn write_kv(&mut self, layer: usize, pos: usize, krow: &[f32], vrow: &[f32]) {
+        let slot = pos % self.capacity;
+        let chunk = slot / CHUNK_POSITIONS;
+        let off = (slot % CHUNK_POSITIONS) * self.kv_dim;
+        Arc::make_mut(&mut self.k[layer][chunk])[off..off + self.kv_dim]
+            .copy_from_slice(krow);
+        Arc::make_mut(&mut self.v[layer][chunk])[off..off + self.kv_dim]
+            .copy_from_slice(vrow);
     }
 
     /// Mark `t` freshly written positions as resident.
@@ -218,6 +352,36 @@ pub trait Backend {
         bail!("backend {:?} does not support incremental decode", self.name())
     }
 
+    /// Serving entry point: prefill several slots in one stacked ragged
+    /// `[batch, seq]` forward — slot `i` runs `chunks[i]` at absolute
+    /// positions `caches[i].len()..`, appending K/V into its own cache,
+    /// and slot `i`'s final-position logits come back as row `i`.
+    ///
+    /// Backends that can stack every slot's rows into one activation
+    /// matrix (the host backend) override this so each layer runs one
+    /// GEMM per projection across all admitted prompts instead of one
+    /// per prompt; the default simply loops [`Backend::prefill`], which
+    /// keeps the batched and per-slot admission paths semantically
+    /// interchangeable.
+    fn prefill_batch(
+        &self,
+        host: &[Vec<f32>],
+        chunks: &[&[i32]],
+        caches: &mut [&mut KvCache],
+    ) -> Result<Vec<Vec<f32>>> {
+        ensure!(
+            chunks.len() == caches.len(),
+            "prefill_batch: {} chunks, {} caches",
+            chunks.len(),
+            caches.len()
+        );
+        let mut out = Vec::with_capacity(chunks.len());
+        for (tokens, cache) in chunks.iter().zip(caches.iter_mut()) {
+            out.push(self.prefill(host, tokens, cache)?);
+        }
+        Ok(out)
+    }
+
     /// Serving entry point: decode one token at absolute position `pos`
     /// (must equal `cache.len()`), appending its K/V, and return the
     /// next-token logits `[v]`.
@@ -271,5 +435,94 @@ mod tests {
         assert!(BackendKind::parse("tpu").is_err());
         assert_eq!(BackendKind::Host.as_str(), "host");
         assert_eq!(BackendKind::Pjrt.as_str(), "pjrt");
+    }
+
+    fn tiny_cache(capacity: usize) -> KvCache {
+        let spec = crate::modelspec::Manifest::builtin().model("tiny").unwrap().clone();
+        KvCache::new(&spec, capacity).unwrap()
+    }
+
+    /// Write `n` positions of recognizable rows (k = pos+1, v = -(pos+1))
+    /// into every layer.
+    fn fill(cache: &mut KvCache, n: usize) {
+        let kd = cache.kv_dim();
+        for p in cache.len()..cache.len() + n {
+            let krow = vec![p as f32 + 1.0; kd];
+            let vrow = vec![-(p as f32) - 1.0; kd];
+            for layer in 0..cache.n_layers() {
+                cache.write_kv(layer, p, &krow, &vrow);
+            }
+            cache.advance(1);
+        }
+    }
+
+    #[test]
+    fn fork_shares_prefix_and_diverges_on_write() {
+        let mut parent = tiny_cache(40);
+        fill(&mut parent, 3);
+        let mut child = KvCache::fork_from(&parent, 2).unwrap();
+        assert_eq!(child.len(), 2);
+        assert_eq!(child.capacity(), parent.capacity());
+        // shared prefix reads through to the parent's chunks
+        assert_eq!(child.k_row(0, 1)[0], 2.0);
+        assert_eq!(child.v_row(0, 1)[0], -2.0);
+        // a divergent write in the child leaves the parent intact (COW)
+        let kd = child.kv_dim();
+        child.write_kv(0, 2, &vec![9.0; kd], &vec![9.0; kd]);
+        child.advance(1);
+        assert_eq!(child.k_row(0, 2)[0], 9.0);
+        assert_eq!(parent.k_row(0, 2)[0], 3.0, "parent chunk must not be clobbered");
+        // and vice versa: parent writes never reach the fork
+        fill(&mut parent, 1); // position 3
+        assert_eq!(child.len(), 3);
+        assert_eq!(child.k_row(0, 2)[0], 9.0);
+    }
+
+    #[test]
+    fn fork_rejects_evicted_prefixes_and_overlong_lens() {
+        let mut parent = tiny_cache(4);
+        fill(&mut parent, 6); // wrapped: positions 4, 5 overwrote 0, 1
+        assert!(KvCache::fork_from(&parent, 7).is_err(), "beyond parent len");
+        assert!(KvCache::fork_from(&parent, 6).is_ok(), "fork at the tip");
+        assert!(KvCache::fork_from(&parent, 5).is_ok(), "one short of the tip");
+        let err = KvCache::fork_from(&parent, 4).unwrap_err();
+        assert!(format!("{err:#}").contains("evicted"), "{err:#}");
+        // an unwrapped parent forks anywhere
+        let mut flat = tiny_cache(8);
+        fill(&mut flat, 6);
+        for len in 0..=6 {
+            assert!(KvCache::fork_from(&flat, len).is_ok(), "len {len}");
+        }
+    }
+
+    #[test]
+    fn copy_prefix_converts_ring_layouts() {
+        let mut parent = tiny_cache(10);
+        fill(&mut parent, 6);
+        let child = KvCache::copy_prefix(&parent, 4, 64).unwrap();
+        assert_eq!(child.len(), 4);
+        assert_eq!(child.capacity(), 64);
+        for p in 0..4 {
+            assert_eq!(child.k_row(0, p)[0], p as f32 + 1.0);
+            assert_eq!(child.v_row(0, p)[0], -(p as f32) - 1.0);
+        }
+        // rejects: beyond parent len, capacity too small, wrapped parent
+        assert!(KvCache::copy_prefix(&parent, 7, 64).is_err());
+        assert!(KvCache::copy_prefix(&parent, 6, 5).is_err());
+        let mut wrapped = tiny_cache(4);
+        fill(&mut wrapped, 6);
+        let err = KvCache::copy_prefix(&wrapped, 4, 64).unwrap_err();
+        assert!(format!("{err:#}").contains("wrapped"), "{err:#}");
+    }
+
+    #[test]
+    fn fork_at_tip_of_wrapped_parent_reads_resident_window() {
+        let mut parent = tiny_cache(4);
+        fill(&mut parent, 6);
+        let child = KvCache::fork_from(&parent, 6).unwrap();
+        // resident window is positions 2..6 at slots 2, 3, 0, 1
+        assert_eq!(child.k_row(0, 2)[0], 3.0); // position 2
+        assert_eq!(child.k_row(0, 0)[0], 5.0); // position 4 wrapped onto slot 0
+        assert_eq!(child.k_row(0, 1)[0], 6.0); // position 5 wrapped onto slot 1
     }
 }

@@ -274,6 +274,16 @@ impl Backend for PjrtBackend {
         ))
     }
 
+    // Explicit (not the looping default) so the error surfaces once,
+    // clearly, instead of from the first slot's prefill.
+    fn prefill_batch(&self, _host: &[Vec<f32>], _chunks: &[&[i32]],
+                     _caches: &mut [&mut KvCache]) -> Result<Vec<Vec<f32>>> {
+        Err(anyhow!(
+            "pjrt backend does not support incremental decode: the AOT artifacts \
+             contain no prefill/decode graphs — serve with --backend host"
+        ))
+    }
+
     fn decode_step(&self, _host: &[Vec<f32>], _token: i32, _pos: usize,
                    _cache: &mut KvCache) -> Result<Vec<f32>> {
         Err(anyhow!(

@@ -211,6 +211,18 @@ impl Session {
         self.backend.prefill(&self.host, tokens, cache)
     }
 
+    /// Serve: prefill several slots in one stacked ragged-batch forward
+    /// (slot `i`: `chunks[i]` appended to `caches[i]` at absolute
+    /// positions `caches[i].len()..`); returns one final-position
+    /// logits row `[vocab]` per slot.
+    pub fn prefill_batch(
+        &self,
+        chunks: &[&[i32]],
+        caches: &mut [&mut KvCache],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.backend.prefill_batch(&self.host, chunks, caches)
+    }
+
     /// Serve: decode one token at absolute position `pos`
     /// (= `cache.len()`); returns the next-token logits `[vocab]`.
     pub fn decode_step(&self, token: i32, pos: usize, cache: &mut KvCache)

@@ -1,0 +1,395 @@
+//! Prefix-sharing prompt cache: a token-prefix trie over copy-on-write
+//! [`KvCache`] forks.
+//!
+//! Serving workloads repeat prompt prefixes constantly — system
+//! prompts, few-shot templates, multi-turn histories. Without reuse,
+//! every admitted request re-prefills its full prompt and owns private
+//! KV rows for it; with the store, a new request forks a cached cache
+//! at the longest matching token prefix ([`KvCache::fork_from`]) and
+//! prefills only the novel suffix. The fork is O(chunks) `Arc` clones:
+//! K/V chunks stay physically shared until one side writes
+//! (copy-on-write), so the prefix is neither recomputed *nor* duplicated
+//! in memory — the same keep-only-what-diverges idea MISA applies to
+//! optimizer state, applied to KV memory across requests.
+//!
+//! Structure: a trie with one node per token. An entry (a fully
+//! prefilled prompt and its cache) hangs off the node where its prompt
+//! ends; lookups walk the query prompt down the trie, and the deepest
+//! reachable node gives the longest stored prefix — any entry below it
+//! shares that prefix, and all of them hold bit-identical K/V rows for
+//! it (same tokens, same positions, same kernels), so any one can be
+//! forked. Eviction is least-recently-used at whole-entry granularity,
+//! pruning the trie path behind the evicted entry.
+//!
+//! Every entry — and every cache forked from one — uses the *same* ring
+//! capacity ([`CacheStoreCfg::capacity`]): chunk sharing requires one
+//! ring layout. Cache misses keep their right-sized private rings
+//! (never an over-allocation against the scheduler's budget); their
+//! prompts enter the store through a one-time layout-converting row
+//! copy on insert ([`KvCache::copy_prefix`]). Requests whose
+//! `prompt + max_new` exceed the store capacity bypass the store
+//! entirely — no lookup (a fork that wrapped would change attention
+//! windows) and no insert (they could never hit, so seeding entries
+//! would only thrash the LRU) — so the store never changes what a
+//! request computes, only how much of it is recomputed. The store's
+//! own residency is bounded by `max_entries` rings of `capacity`
+//! positions.
+
+use std::collections::HashMap;
+
+use anyhow::{ensure, Result};
+
+use crate::runtime::KvCache;
+
+/// Configuration of a [`CacheStore`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheStoreCfg {
+    /// Ring capacity (KV positions) of every stored entry — and of
+    /// every request cache forked from one (chunk sharing requires one
+    /// ring layout). Requests needing more positions bypass the store.
+    pub capacity: usize,
+    /// Maximum resident entries; the least-recently-used entry is
+    /// evicted beyond this.
+    pub max_entries: usize,
+    /// Shortest matched prefix worth forking; shorter matches count as
+    /// misses and re-prefill from scratch.
+    pub min_prefix: usize,
+}
+
+impl Default for CacheStoreCfg {
+    fn default() -> Self {
+        CacheStoreCfg { capacity: 1024, max_entries: 32, min_prefix: 8 }
+    }
+}
+
+/// Aggregate reuse counters, exported into `misa bench-serve --json`
+/// records and the scheduler's metrics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups performed by cache-eligible admissions.
+    pub lookups: u64,
+    /// Lookups that forked a stored prefix.
+    pub hits: u64,
+    /// Total prompt positions served from forked caches instead of
+    /// being re-prefilled.
+    pub reused_tokens: u64,
+    /// Prompts inserted (identical prompts deduplicate).
+    pub insertions: u64,
+    /// Entries evicted (least-recently-used).
+    pub evictions: u64,
+    /// Entries currently resident.
+    pub entries: usize,
+}
+
+impl CacheStats {
+    /// `hits / lookups` (0 when nothing was looked up).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups as f64
+        }
+    }
+}
+
+/// One trie node: children keyed by the next token; `entry` is set on
+/// nodes where a stored prompt ends.
+#[derive(Default)]
+struct Node {
+    children: HashMap<i32, Node>,
+    entry: Option<u64>,
+}
+
+/// A stored prompt: its tokens (the trie path, needed for eviction
+/// pruning), its prefilled cache, and its LRU stamp.
+struct Entry {
+    tokens: Vec<i32>,
+    cache: KvCache,
+    last_used: u64,
+}
+
+/// The prefix-sharing prompt cache. Owned by the scheduler when
+/// `SchedulerCfg::prefix_cache` is set; see the module docs for the
+/// reuse model.
+pub struct CacheStore {
+    cfg: CacheStoreCfg,
+    root: Node,
+    entries: HashMap<u64, Entry>,
+    next_id: u64,
+    clock: u64,
+    stats: CacheStats,
+}
+
+impl CacheStore {
+    /// Build a store. Degenerate limits are clamped to 1 (a store that
+    /// could hold nothing would silently disable reuse).
+    pub fn new(mut cfg: CacheStoreCfg) -> Self {
+        cfg.capacity = cfg.capacity.max(1);
+        cfg.max_entries = cfg.max_entries.max(1);
+        cfg.min_prefix = cfg.min_prefix.max(1);
+        CacheStore {
+            cfg,
+            root: Node::default(),
+            entries: HashMap::new(),
+            next_id: 0,
+            clock: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// The store's (clamped) configuration.
+    pub fn cfg(&self) -> &CacheStoreCfg {
+        &self.cfg
+    }
+
+    /// Reuse counters so far, including the current entry count.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats { entries: self.entries.len(), ..self.stats }
+    }
+
+    /// Resident entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is stored.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Length of the longest stored prefix of `prompt`, with no counter
+    /// or LRU side effects — the scheduler's admission-grouping probe.
+    pub fn peek_match(&self, prompt: &[i32]) -> usize {
+        let mut node = &self.root;
+        let mut depth = 0;
+        for &t in prompt {
+            match node.children.get(&t) {
+                Some(child) => {
+                    node = child;
+                    depth += 1;
+                }
+                None => break,
+            }
+        }
+        depth
+    }
+
+    /// Fork the longest usable stored prefix of `prompt`. On a hit,
+    /// returns the forked cache plus the number of prompt positions it
+    /// already holds — always `< prompt.len()`, so the caller prefills
+    /// at least the final position and gets its logits. Matches shorter
+    /// than [`CacheStoreCfg::min_prefix`] are misses.
+    pub fn lookup(&mut self, prompt: &[i32]) -> Option<(KvCache, usize)> {
+        self.stats.lookups += 1;
+        let m = self.peek_match(prompt).min(prompt.len().saturating_sub(1));
+        if m < self.cfg.min_prefix {
+            return None;
+        }
+        // walk to the matched node, then descend to any entry below it:
+        // every retained path terminates in an entry, and every entry
+        // below holds bit-identical K/V rows for the first `m` positions
+        // (same tokens, same absolute positions, same kernels)
+        let mut node = &self.root;
+        for &t in &prompt[..m] {
+            node = node.children.get(&t)?;
+        }
+        let id = loop {
+            if let Some(id) = node.entry {
+                break id;
+            }
+            node = node.children.values().next()?;
+        };
+        let entry = self.entries.get_mut(&id)?;
+        let cache = KvCache::fork_from(&entry.cache, m).ok()?;
+        self.clock += 1;
+        entry.last_used = self.clock;
+        self.stats.hits += 1;
+        self.stats.reused_tokens += m as u64;
+        Some((cache, m))
+    }
+
+    /// Store `prompt`'s prefilled cache as a reusable entry. When the
+    /// caller's ring already has the store layout (it was forked from
+    /// an entry), the entry is a copy-on-write snapshot
+    /// ([`KvCache::fork_from`] at `prompt.len()`) — the caller's cache
+    /// keeps decoding and only the chunks it then writes are
+    /// duplicated. Otherwise (a right-sized private ring, the
+    /// cache-miss path) the prompt rows are copied into a store-layout
+    /// ring ([`KvCache::copy_prefix`] — a one-time memcpy, never a
+    /// recompute). Returns `false` without storing when the prompt is
+    /// empty, longer than the store's ring capacity, or already stored
+    /// (the duplicate's LRU stamp refreshes instead).
+    pub fn insert(&mut self, prompt: &[i32], cache: &KvCache) -> Result<bool> {
+        if prompt.is_empty() || prompt.len() > self.cfg.capacity {
+            return Ok(false);
+        }
+        ensure!(
+            cache.len() >= prompt.len(),
+            "cache holds {} positions but the prompt has {}",
+            cache.len(),
+            prompt.len()
+        );
+        self.clock += 1;
+        // dedup: an identical prompt refreshes its LRU stamp instead
+        {
+            let mut node = &self.root;
+            let mut walked = true;
+            for &t in prompt {
+                match node.children.get(&t) {
+                    Some(child) => node = child,
+                    None => {
+                        walked = false;
+                        break;
+                    }
+                }
+            }
+            if walked {
+                if let Some(id) = node.entry {
+                    if let Some(e) = self.entries.get_mut(&id) {
+                        e.last_used = self.clock;
+                    }
+                    return Ok(false);
+                }
+            }
+        }
+        let snapshot = if cache.capacity() == self.cfg.capacity {
+            KvCache::fork_from(cache, prompt.len())?
+        } else {
+            KvCache::copy_prefix(cache, prompt.len(), self.cfg.capacity)?
+        };
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut node = &mut self.root;
+        for &t in prompt {
+            node = node.children.entry(t).or_default();
+        }
+        node.entry = Some(id);
+        self.entries.insert(
+            id,
+            Entry { tokens: prompt.to_vec(), cache: snapshot, last_used: self.clock },
+        );
+        self.stats.insertions += 1;
+        while self.entries.len() > self.cfg.max_entries {
+            self.evict_lru();
+        }
+        Ok(true)
+    }
+
+    fn evict_lru(&mut self) {
+        let Some((&id, _)) = self.entries.iter().min_by_key(|(_, e)| e.last_used) else {
+            return;
+        };
+        if let Some(entry) = self.entries.remove(&id) {
+            remove_path(&mut self.root, &entry.tokens, id);
+            self.stats.evictions += 1;
+        }
+    }
+}
+
+/// Unmark `id` at the end of `tokens`, then prune now-empty nodes on
+/// the way back up. Returns whether `node` itself became prunable.
+fn remove_path(node: &mut Node, tokens: &[i32], id: u64) -> bool {
+    match tokens.split_first() {
+        None => {
+            if node.entry == Some(id) {
+                node.entry = None;
+            }
+        }
+        Some((&t, rest)) => {
+            if let Some(child) = node.children.get_mut(&t) {
+                if remove_path(child, rest, id) {
+                    node.children.remove(&t);
+                }
+            }
+        }
+    }
+    node.entry.is_none() && node.children.is_empty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modelspec::Manifest;
+
+    fn store(capacity: usize, max_entries: usize, min_prefix: usize) -> CacheStore {
+        CacheStore::new(CacheStoreCfg { capacity, max_entries, min_prefix })
+    }
+
+    /// A cache that *claims* `n` resident positions (store bookkeeping
+    /// tests never read K/V values).
+    fn cache_with_len(capacity: usize, n: usize) -> KvCache {
+        let spec = Manifest::builtin().model("tiny").unwrap().clone();
+        let mut c = KvCache::new(&spec, capacity).unwrap();
+        c.advance(n);
+        c
+    }
+
+    #[test]
+    fn longest_prefix_lookup_and_min_prefix() {
+        let mut s = store(64, 8, 4);
+        let prompt: Vec<i32> = (1..=10).collect();
+        assert!(s.insert(&prompt, &cache_with_len(64, 10)).unwrap());
+        // 8-token overlap, then divergence
+        let query: Vec<i32> = (1..=8).chain([99, 98]).collect();
+        let (cache, m) = s.lookup(&query).unwrap();
+        assert_eq!(m, 8);
+        assert_eq!(cache.len(), 8);
+        // an exact-prompt query is capped one short so the final
+        // position still prefills for its logits
+        let (_, m) = s.lookup(&prompt).unwrap();
+        assert_eq!(m, 9);
+        // a 3-token overlap is below min_prefix: miss
+        assert!(s.lookup(&[1, 2, 3, 50, 51]).is_none());
+        let st = s.stats();
+        assert_eq!((st.lookups, st.hits, st.reused_tokens), (3, 2, 17));
+        assert_eq!(st.entries, 1);
+        assert!((st.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn duplicate_insert_refreshes_instead_of_duplicating() {
+        let mut s = store(64, 8, 4);
+        let prompt: Vec<i32> = (1..=6).collect();
+        assert!(s.insert(&prompt, &cache_with_len(64, 6)).unwrap());
+        assert!(!s.insert(&prompt, &cache_with_len(64, 6)).unwrap());
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.stats().insertions, 1);
+        // a prefix of a stored prompt is its own entry on the same path
+        assert!(s.insert(&prompt[..5], &cache_with_len(64, 5)).unwrap());
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn lru_eviction_prunes_the_trie() {
+        let mut s = store(64, 2, 2);
+        s.insert(&[1, 2, 3], &cache_with_len(64, 3)).unwrap();
+        s.insert(&[4, 5, 6], &cache_with_len(64, 3)).unwrap();
+        // touch the first so the second is the LRU victim
+        assert!(s.lookup(&[1, 2, 3, 9]).is_some());
+        s.insert(&[7, 8, 9], &cache_with_len(64, 3)).unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.stats().evictions, 1);
+        assert_eq!(s.peek_match(&[4, 5, 6]), 0, "evicted path must be pruned");
+        assert_eq!(s.peek_match(&[1, 2, 3]), 3);
+        assert_eq!(s.peek_match(&[7, 8, 9]), 3);
+    }
+
+    #[test]
+    fn insert_converts_layouts_and_refuses_bad_donors() {
+        let mut s = store(4, 8, 2);
+        // longer than the store's rings: silently skipped
+        assert!(!s.insert(&[1, 2, 3, 4, 5], &cache_with_len(4, 4)).unwrap());
+        // cache shorter than the prompt: hard error
+        assert!(s.insert(&[1, 2, 3], &cache_with_len(4, 2)).is_err());
+        // a wrapped donor would read evicted positions: hard error
+        assert!(s.insert(&[1, 2, 3], &cache_with_len(3, 5)).is_err());
+        assert!(s.is_empty());
+        // a right-sized private ring (the cache-miss path) converts
+        // into a store-layout entry via a row copy
+        assert!(s.insert(&[1, 2], &cache_with_len(8, 2)).unwrap());
+        assert_eq!(s.len(), 1);
+        let (forked, m) = s.lookup(&[1, 2, 9]).unwrap();
+        assert_eq!(m, 2);
+        assert_eq!(forked.capacity(), 4, "forks ride the store layout");
+    }
+}

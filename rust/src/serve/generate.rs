@@ -14,6 +14,7 @@ pub struct GenerateCfg {
     /// Number of new tokens to produce (generation may stop earlier on
     /// `eos`).
     pub max_new: usize,
+    /// Token-selection configuration.
     pub sampler: SamplerCfg,
     /// Seed of the sampling stream — fixes the generation entirely.
     pub seed: u64,

@@ -2,9 +2,9 @@
 //!
 //! Training produces checkpoints; this module is how they get *used*.
 //! It layers on the execution ABI's serving entry points
-//! (`Backend::prefill` / `Backend::decode_step` / `Backend::decode_batch`
-//! over per-slot `runtime::KvCache`s) and is backend-agnostic like
-//! everything else
+//! (`Backend::prefill` / `Backend::prefill_batch` /
+//! `Backend::decode_step` / `Backend::decode_batch` over per-slot
+//! `runtime::KvCache`s) and is backend-agnostic like everything else
 //! above the runtime — though only the host backend implements
 //! incremental decode today (PJRT's AOT artifacts carry no decode
 //! graphs and return a clear unsupported error).
@@ -12,26 +12,40 @@
 //! - [`sampler`] — token selection over final-position logits: greedy,
 //!   temperature, top-k, top-p. Driven by the deterministic `util::Rng`
 //!   so generations are seed-reproducible.
-//! - [`generate`] — the single-stream loop: prefill the prompt, then
-//!   decode token-by-token against one KV cache. Powers
+//! - [`mod@generate`] — the single-stream loop: prefill the prompt,
+//!   then decode token-by-token against one KV cache. Powers
 //!   `misa generate`.
+//! - [`cache_store`] — the prefix-sharing prompt cache: a token-prefix
+//!   trie whose entries are prefilled prompts; a new request forks the
+//!   longest matching prefix (`KvCache::fork_from`, copy-on-write at
+//!   ring-chunk granularity) and prefills only its novel suffix.
 //! - [`scheduler`] — continuous batching: a request queue with
 //!   token-budget admission, per-slot KV caches, iteration-level
 //!   scheduling (new requests are admitted the moment finished ones
-//!   free slots), and per-request TTFT / tokens-per-second metrics
-//!   through `util::metrics`. Powers `misa bench-serve`.
+//!   free slots), shared-prefix admission grouping with one stacked
+//!   `prefill_batch` forward per wave, and per-request TTFT /
+//!   tokens-per-second / prefix-reuse metrics through `util::metrics`.
+//!   Powers `misa bench-serve`.
 //!
 //! Memory accounting: one slot's KV cache holds
 //! `2 * n_layers * capacity * kv_dim` f32s (`KvCache::bytes`), where
-//! `capacity = prompt_len + max_new` and `kv_dim = n_kv_heads *
-//! head_dim` — GQA-sized, `n_heads / n_kv_heads` times smaller than
-//! full attention residency. The scheduler's token budget bounds the
-//! sum of slot capacities, which bounds resident KV bytes.
+//! `kv_dim = n_kv_heads * head_dim` — GQA-sized, `n_heads / n_kv_heads`
+//! times smaller than full attention residency. The scheduler's token
+//! budget bounds the sum of per-request costs (`prompt_len + max_new`
+//! positions each), which bounds per-request resident KV bytes (cache
+//! misses allocate exactly their cost; hits share the store ring's
+//! prefix chunks copy-on-write); the prompt store's own residency is
+//! bounded separately by its `max_entries × capacity` configuration.
+//! See DESIGN.md §5 for the full serving-cache architecture.
 
+#![warn(missing_docs)]
+
+pub mod cache_store;
 pub mod generate;
 pub mod sampler;
 pub mod scheduler;
 
+pub use cache_store::{CacheStats, CacheStore, CacheStoreCfg};
 pub use generate::{generate, GenerateCfg, Generation};
 pub use sampler::{argmax, sample, SamplerCfg};
 pub use scheduler::{Completion, FinishReason, Request, Scheduler, SchedulerCfg};

@@ -35,6 +35,8 @@ impl SamplerCfg {
         SamplerCfg { temperature: 0.0, top_k: 0, top_p: 1.0 }
     }
 
+    /// Reject configurations the sampler cannot execute (non-finite
+    /// temperature, non-positive top-p).
     pub fn validate(&self) -> Result<()> {
         ensure!(self.temperature.is_finite(), "temperature must be finite");
         ensure!(

@@ -2,25 +2,44 @@
 //!
 //! Iteration-level scheduling in the vLLM/Orca style: each iteration
 //! (1) admits queued requests into free slots while the KV token
-//! budget allows, (2) prefills newly admitted requests and samples
-//! their first token (TTFT), and (3) advances every unfinished slot by
-//! one token through a single `Session::decode_batch` call — one
-//! stacked `[batch, hidden]` forward per iteration, not one forward
-//! per slot, so batching buys FLOP efficiency rather than just
-//! scheduling overhead. Finished requests free their slot and budget
-//! immediately, so waiting requests are admitted on the very next
-//! iteration — no batch-boundary stalls.
+//! budget allows, (2) prefills newly admitted requests — grouped by
+//! shared prompt prefix, forking the prompt cache where it matches and
+//! running every novel suffix through a single stacked
+//! `Session::prefill_batch` forward — and samples their first tokens
+//! (TTFT), and (3) advances every unfinished slot by one token through
+//! a single `Session::decode_batch` call. Both phases run one stacked
+//! forward per iteration, not one per slot, so batching buys FLOP
+//! efficiency rather than just scheduling overhead. Finished requests
+//! free their slot and budget immediately, so waiting requests are
+//! admitted on the very next iteration — no batch-boundary stalls.
+//!
+//! Prefix reuse (`SchedulerCfg::prefix_cache`) hangs a
+//! [`crate::serve::CacheStore`] off the scheduler: admission looks up
+//! each eligible prompt, forks the longest stored prefix
+//! (copy-on-write, `KvCache::fork_from`) and prefills only the suffix;
+//! freshly prefilled prompts are stored back (COW snapshots) for later
+//! admissions. Requests in the *same* admission round that share a
+//! prefix are split into waves: the first carrier prefills it, the
+//! rest fork it one wave later instead of each re-prefilling it.
+//! Reuse never changes what a request computes — forked decode is
+//! bit-compatible with cold decode (test-pinned) — only how much of
+//! it is recomputed.
 //!
 //! Memory accounting is in KV *positions*: a request admitted with
-//! prompt length `p` and `max_new` new tokens holds a cache of
-//! `p + max_new` positions for its lifetime, and the sum of live slot
-//! capacities never exceeds `SchedulerCfg::token_budget`
-//! (`KvCache::bytes` converts positions to bytes).
+//! prompt length `p` and `max_new` new tokens costs `p + max_new`
+//! positions for its lifetime, and the sum of live costs never exceeds
+//! `SchedulerCfg::token_budget`. Cache misses allocate exactly their
+//! cost (a right-sized private ring); cache hits ride the store's
+//! fixed ring capacity but share their prefix chunks copy-on-write —
+//! either way *physical* per-request residency tracks the logical
+//! cost, with the store's own entries bounded separately by its
+//! `max_entries × capacity` configuration.
 //!
 //! Each request samples from its own `Rng::new(request.seed)` stream,
 //! so its output is independent of batch composition — a scheduled
-//! generation is bitwise-identical to running [`crate::serve::generate`]
-//! alone with the same seed. The tests pin exactly that.
+//! generation is bitwise-identical to running
+//! [`crate::serve::generate()`] alone with the same seed, with or
+//! without the prefix cache. The tests pin exactly that.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -28,15 +47,21 @@ use std::time::Instant;
 use anyhow::{ensure, Result};
 
 use crate::runtime::{KvCache, Session};
+use crate::serve::cache_store::{CacheStats, CacheStore, CacheStoreCfg};
 use crate::serve::sampler::{sample, SamplerCfg};
 use crate::util::{MetricsSink, Rng};
 
 /// One generation request.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Caller-chosen id, echoed on the [`Completion`].
     pub id: u64,
+    /// Prompt token ids (must be non-empty and inside the vocab).
     pub prompt: Vec<i32>,
+    /// Number of new tokens to produce (generation may stop earlier on
+    /// `eos`).
     pub max_new: usize,
+    /// Token-selection configuration.
     pub sampler: SamplerCfg,
     /// Seed of this request's sampling stream.
     pub seed: u64,
@@ -47,7 +72,9 @@ pub struct Request {
 /// Why a request finished.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FinishReason {
+    /// Produced its full `max_new` tokens.
     MaxNew,
+    /// Emitted its stop token early.
     Eos,
     /// Rejected at admission (e.g. a prompt token outside the model's
     /// vocab — only checkable once the session is known). The request
@@ -58,14 +85,20 @@ pub enum FinishReason {
 /// A finished request with its per-request serving metrics.
 #[derive(Clone, Debug)]
 pub struct Completion {
+    /// The request's id.
     pub id: u64,
+    /// Prompt length, in tokens.
     pub prompt_len: usize,
     /// Generated tokens (prompt not included).
     pub tokens: Vec<i32>,
+    /// Prompt positions served from a forked prompt-cache prefix
+    /// instead of being re-prefilled (0 with the cache disabled).
+    pub reused_tokens: usize,
     /// Submit-to-first-token latency (includes queue wait), seconds.
     pub ttft_s: f64,
     /// Decode throughput after the first token, tokens/second.
     pub decode_tps: f64,
+    /// Why the request finished.
     pub finish: FinishReason,
 }
 
@@ -76,11 +109,14 @@ pub struct SchedulerCfg {
     pub max_slots: usize,
     /// Maximum total KV positions resident across all active slots.
     pub token_budget: usize,
+    /// Prefix-sharing prompt cache; `None` disables reuse entirely
+    /// (every request prefills its full prompt into a private cache).
+    pub prefix_cache: Option<CacheStoreCfg>,
 }
 
 impl Default for SchedulerCfg {
     fn default() -> Self {
-        SchedulerCfg { max_slots: 8, token_budget: 8192 }
+        SchedulerCfg { max_slots: 8, token_budget: 8192, prefix_cache: None }
     }
 }
 
@@ -93,13 +129,14 @@ struct Slot {
     submitted: Instant,
     /// set once the first token exists (prefill done)
     first_token_at: Option<Instant>,
+    /// KV positions charged against the token budget
+    /// (`prompt + max_new`, independent of the cache's ring capacity)
+    cost: usize,
+    /// prompt positions forked from the store instead of prefilled
+    reused: usize,
 }
 
 impl Slot {
-    fn cost(&self) -> usize {
-        self.cache.capacity()
-    }
-
     fn finished(&self) -> Option<FinishReason> {
         if let (Some(eos), Some(&last)) = (self.req.eos, self.generated.last()) {
             if last == eos {
@@ -113,24 +150,34 @@ impl Slot {
     }
 }
 
+/// Longest common prefix of two token sequences.
+fn lcp(a: &[i32], b: &[i32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
 /// The continuous-batching scheduler. Submit requests, then [`Self::run`]
 /// to completion (or step iterations manually with [`Self::tick`]).
 pub struct Scheduler {
     cfg: SchedulerCfg,
     queue: VecDeque<(Request, Instant)>,
     active: Vec<Slot>,
+    store: Option<CacheStore>,
     in_flight_tokens: usize,
     /// high-water mark of concurrently active slots (observability)
     peak_active: usize,
+    /// Per-request serving metrics (TTFT, decode tok/s, KV residency,
+    /// reused prompt positions), one record per completion.
     pub metrics: MetricsSink,
 }
 
 impl Scheduler {
+    /// Build a scheduler; `max_slots` is clamped to at least 1 (zero
+    /// slots could never admit anything and would make [`Self::run`]
+    /// spin forever on a non-empty queue).
     pub fn new(mut cfg: SchedulerCfg) -> Self {
-        // zero slots could never admit anything and would make `run`
-        // spin forever on a non-empty queue; clamp to one
         cfg.max_slots = cfg.max_slots.max(1);
         Scheduler {
+            store: cfg.prefix_cache.map(CacheStore::new),
             cfg,
             queue: VecDeque::new(),
             active: Vec::new(),
@@ -157,6 +204,7 @@ impl Scheduler {
         Ok(())
     }
 
+    /// Requests still queued or actively decoding.
     pub fn pending(&self) -> usize {
         self.queue.len() + self.active.len()
     }
@@ -166,9 +214,26 @@ impl Scheduler {
         self.peak_active
     }
 
-    /// KV positions currently resident across active slots.
+    /// KV positions currently charged against the token budget.
     pub fn in_flight_tokens(&self) -> usize {
         self.in_flight_tokens
+    }
+
+    /// Prompt-cache reuse counters (`None` when the prefix cache is
+    /// disabled).
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.store.as_ref().map(|s| s.stats())
+    }
+
+    /// Can this request ride the prompt cache? Only when its whole
+    /// lifetime (`prompt + max_new` positions) fits the store's ring
+    /// capacity — a forked cache must never wrap, so reuse changes
+    /// nothing about the attention windows the request computes.
+    fn cache_eligible(&self, req: &Request) -> bool {
+        match &self.store {
+            Some(s) => req.prompt.len() + req.max_new <= s.cfg().capacity,
+            None => false,
+        }
     }
 
     /// One scheduling iteration: admit + prefill new requests, advance
@@ -177,13 +242,16 @@ impl Scheduler {
     pub fn tick(&mut self, sess: &Session) -> Result<Vec<Completion>> {
         let mut done = Vec::new();
         let vocab = sess.spec.config.vocab;
-        // admission: fill free slots while the budget allows. FIFO —
-        // a too-large head-of-queue request waits rather than being
-        // bypassed, keeping completion order predictable.
-        while self.active.len() < self.cfg.max_slots {
+        // admission: pop every request the free slots and the budget can
+        // take this iteration. FIFO — a too-large head-of-queue request
+        // waits rather than being bypassed, keeping completion order
+        // predictable.
+        let mut admitted: Vec<(Request, Instant)> = Vec::new();
+        let mut reserved = 0usize;
+        while self.active.len() + admitted.len() < self.cfg.max_slots {
             let Some((req, _)) = self.queue.front() else { break };
             let cost = req.prompt.len() + req.max_new;
-            if self.in_flight_tokens + cost > self.cfg.token_budget {
+            if self.in_flight_tokens + reserved + cost > self.cfg.token_budget {
                 break;
             }
             let (req, submitted) = self.queue.pop_front().unwrap();
@@ -199,27 +267,114 @@ impl Scheduler {
                     id: req.id,
                     prompt_len: req.prompt.len(),
                     tokens: Vec::new(),
+                    reused_tokens: 0,
                     ttft_s,
                     decode_tps: 0.0,
                     finish: FinishReason::Rejected,
                 });
                 continue;
             }
-            let mut slot = Slot {
-                cache: sess.kv_cache(cost)?,
-                rng: Rng::new(req.seed),
-                generated: Vec::with_capacity(req.max_new),
-                submitted,
-                first_token_at: None,
-                req,
+            reserved += cost;
+            admitted.push((req, submitted));
+        }
+
+        // prefill the admission group in shared-prefix waves: a request
+        // defers when an *earlier* pending prompt shares a longer prefix
+        // than the store currently holds — that wave prefills (and
+        // stores) the carrier's prompt, so the deferred request forks
+        // the shared prefix next wave instead of re-prefilling it. The
+        // earliest pending request never defers, so every wave makes
+        // progress and the loop terminates.
+        let mut pending: VecDeque<(Request, Instant)> = admitted.into();
+        while !pending.is_empty() {
+            let items: Vec<(Request, Instant)> = pending.drain(..).collect();
+            let mut deferred = vec![false; items.len()];
+            if let Some(store) = &self.store {
+                let min_prefix = store.cfg().min_prefix;
+                for i in 0..items.len() {
+                    let pi = &items[i].0.prompt;
+                    if !self.cache_eligible(&items[i].0) {
+                        continue;
+                    }
+                    // a fork never covers the final position (its
+                    // logits must be computed), so cap usable lengths
+                    let usable = |l: usize| l.min(pi.len() - 1);
+                    let store_m = usable(store.peek_match(pi));
+                    deferred[i] = (0..i).any(|j| {
+                        self.cache_eligible(&items[j].0)
+                            && usable(lcp(pi, &items[j].0.prompt)) > store_m.max(min_prefix - 1)
+                    });
+                }
+            }
+            let mut wave: Vec<(Request, Instant)> = Vec::new();
+            for (item, defer) in items.into_iter().zip(deferred) {
+                if defer {
+                    pending.push_back(item);
+                } else {
+                    wave.push(item);
+                }
+            }
+
+            // per-member cache setup: fork the longest stored prefix
+            // when it pays off (the fork rides the store's ring layout,
+            // sharing its prefix chunks), else a right-sized private
+            // ring — a miss never over-allocates, so physical KV
+            // residency stays bounded by the token budget; the store
+            // converts layouts itself on insert-back
+            let mut slots: Vec<Slot> = Vec::with_capacity(wave.len());
+            for (req, submitted) in wave {
+                let cost = req.prompt.len() + req.max_new;
+                let hit = if self.cache_eligible(&req) {
+                    let store = self.store.as_mut().expect("eligible implies store");
+                    store.lookup(&req.prompt)
+                } else {
+                    None
+                };
+                let (cache, reused) = match hit {
+                    Some((cache, m)) => (cache, m),
+                    None => (sess.kv_cache(cost)?, 0),
+                };
+                slots.push(Slot {
+                    cache,
+                    rng: Rng::new(req.seed),
+                    generated: Vec::with_capacity(req.max_new),
+                    submitted,
+                    first_token_at: None,
+                    cost,
+                    reused,
+                    req,
+                });
+            }
+
+            // one stacked ragged forward prefills every novel suffix
+            let rows = {
+                let mut chunks: Vec<&[i32]> = Vec::with_capacity(slots.len());
+                let mut caches: Vec<&mut KvCache> = Vec::with_capacity(slots.len());
+                for slot in slots.iter_mut() {
+                    let Slot { req, cache, reused, .. } = slot;
+                    chunks.push(&req.prompt[*reused..]);
+                    caches.push(cache);
+                }
+                sess.prefill_batch(&chunks, &mut caches)?
             };
-            let logits = sess.prefill(&slot.req.prompt, &mut slot.cache)?;
-            let first = sample(&logits, &slot.req.sampler, &mut slot.rng) as i32;
-            slot.generated.push(first);
-            slot.first_token_at = Some(Instant::now());
-            self.in_flight_tokens += cost;
-            self.active.push(slot);
-            self.peak_active = self.peak_active.max(self.active.len());
+
+            // sample first tokens, store the freshly resident prompts
+            // back (COW snapshots), and activate the slots
+            for (mut slot, logits) in slots.into_iter().zip(rows) {
+                let first = sample(&logits, &slot.req.sampler, &mut slot.rng) as i32;
+                slot.generated.push(first);
+                slot.first_token_at = Some(Instant::now());
+                // same gate as lookup: requests that can never hit
+                // (lifetime beyond the store ring) also never insert,
+                // so they cannot thrash the LRU or pay the copy
+                if self.cache_eligible(&slot.req) {
+                    let store = self.store.as_mut().expect("eligible implies store");
+                    store.insert(&slot.req.prompt, &slot.cache)?;
+                }
+                self.in_flight_tokens += slot.cost;
+                self.active.push(slot);
+                self.peak_active = self.peak_active.max(self.active.len());
+            }
         }
 
         // decode: one *batched* forward advances every unfinished slot
@@ -264,7 +419,7 @@ impl Scheduler {
         while i < self.active.len() {
             if let Some(finish) = self.active[i].finished() {
                 let slot = self.active.swap_remove(i);
-                self.in_flight_tokens -= slot.cost();
+                self.in_flight_tokens -= slot.cost;
                 done.push(self.complete(slot, finish));
             } else {
                 i += 1;
@@ -280,20 +435,30 @@ impl Scheduler {
         let decoded = slot.generated.len().saturating_sub(1);
         let decode_s = now.duration_since(first).as_secs_f64();
         let decode_tps = if decode_s > 0.0 { decoded as f64 / decode_s } else { 0.0 };
+        // bytes for the *charged* positions: a forked cache rides the
+        // store's (larger) ring but shares its prefix chunks, so the
+        // cost-based figure is the honest per-request residency
+        let kv_bytes = 2
+            * slot.cache.n_layers()
+            * slot.cost
+            * slot.cache.kv_dim()
+            * std::mem::size_of::<f32>();
         self.metrics.log(
             slot.req.id,
             &[
                 ("ttft_ms", ttft_s * 1e3),
                 ("decode_tps", decode_tps),
                 ("new_tokens", slot.generated.len() as f64),
-                ("kv_positions", slot.cache.capacity() as f64),
-                ("kv_bytes", slot.cache.bytes() as f64),
+                ("reused_tokens", slot.reused as f64),
+                ("kv_positions", slot.cost as f64),
+                ("kv_bytes", kv_bytes as f64),
             ],
         );
         Completion {
             id: slot.req.id,
             prompt_len: slot.req.prompt.len(),
             tokens: slot.generated,
+            reused_tokens: slot.reused,
             ttft_s,
             decode_tps,
             finish,
@@ -314,6 +479,7 @@ impl Scheduler {
 mod tests {
     use super::*;
     use crate::runtime::{Engine, Session};
+    use crate::serve::generate::{generate, GenerateCfg};
 
     fn tiny_session() -> Session {
         let mut eng = Engine::host();
@@ -331,10 +497,24 @@ mod tests {
         }
     }
 
+    fn solo(sess: &Session, r: &Request) -> Vec<i32> {
+        generate(
+            sess,
+            &r.prompt,
+            &GenerateCfg { max_new: r.max_new, sampler: r.sampler, seed: r.seed, eos: r.eos },
+        )
+        .unwrap()
+        .tokens
+    }
+
     #[test]
     fn all_requests_complete_with_metrics() {
         let sess = tiny_session();
-        let mut sched = Scheduler::new(SchedulerCfg { max_slots: 3, token_budget: 256 });
+        let mut sched = Scheduler::new(SchedulerCfg {
+            max_slots: 3,
+            token_budget: 256,
+            prefix_cache: None,
+        });
         for i in 0..5 {
             sched.submit(req(i, vec![1, 10 + i as i32], 4 + i as usize)).unwrap();
         }
@@ -346,17 +526,23 @@ mod tests {
             assert_eq!(c.tokens.len(), 4 + c.id as usize);
             assert_eq!(c.finish, FinishReason::MaxNew);
             assert!(c.ttft_s >= 0.0);
+            assert_eq!(c.reused_tokens, 0, "cache disabled: nothing to reuse");
         }
         // one metrics record per request
         assert_eq!(sched.metrics.history.len(), 5);
         assert_eq!(sched.metrics.series("ttft_ms").len(), 5);
+        assert!(sched.cache_stats().is_none());
     }
 
     #[test]
     fn token_budget_serializes_admission() {
         let sess = tiny_session();
         // each request costs 2 + 6 = 8 positions; budget 8 → one at a time
-        let mut sched = Scheduler::new(SchedulerCfg { max_slots: 4, token_budget: 8 });
+        let mut sched = Scheduler::new(SchedulerCfg {
+            max_slots: 4,
+            token_budget: 8,
+            prefix_cache: None,
+        });
         for i in 0..3 {
             sched.submit(req(i, vec![1, 5], 6)).unwrap();
         }
@@ -367,7 +553,11 @@ mod tests {
 
     #[test]
     fn oversized_request_is_rejected_up_front() {
-        let mut sched = Scheduler::new(SchedulerCfg { max_slots: 2, token_budget: 16 });
+        let mut sched = Scheduler::new(SchedulerCfg {
+            max_slots: 2,
+            token_budget: 16,
+            prefix_cache: None,
+        });
         let err = sched.submit(req(0, vec![1; 10], 10)).unwrap_err();
         assert!(format!("{err:#}").contains("token budget"), "{err:#}");
         assert!(sched.submit(req(1, vec![1; 10], 6)).is_ok());
@@ -376,7 +566,11 @@ mod tests {
     #[test]
     fn out_of_vocab_prompt_rejects_request_not_run() {
         let sess = tiny_session();
-        let mut sched = Scheduler::new(SchedulerCfg { max_slots: 2, token_budget: 64 });
+        let mut sched = Scheduler::new(SchedulerCfg {
+            max_slots: 2,
+            token_budget: 64,
+            prefix_cache: None,
+        });
         sched.submit(req(0, vec![1, 5], 4)).unwrap();
         sched.submit(req(1, vec![1, 999], 4)).unwrap(); // 999 >= vocab 256
         sched.submit(req(2, vec![1, 6], 4)).unwrap();
@@ -393,7 +587,11 @@ mod tests {
     #[test]
     fn zero_slots_is_clamped_not_a_hang() {
         let sess = tiny_session();
-        let mut sched = Scheduler::new(SchedulerCfg { max_slots: 0, token_budget: 64 });
+        let mut sched = Scheduler::new(SchedulerCfg {
+            max_slots: 0,
+            token_budget: 64,
+            prefix_cache: None,
+        });
         sched.submit(req(0, vec![1, 2], 3)).unwrap();
         let done = sched.run(&sess).unwrap();
         assert_eq!(done.len(), 1);
@@ -402,33 +600,102 @@ mod tests {
 
     #[test]
     fn scheduled_output_matches_solo_generation() {
-        use crate::serve::generate::{generate, GenerateCfg};
         let sess = tiny_session();
         let reqs: Vec<Request> = (0..4)
             .map(|i| req(i, vec![1, 3 + i as i32, 20], 6))
             .collect();
-        let mut sched = Scheduler::new(SchedulerCfg { max_slots: 2, token_budget: 64 });
+        let mut sched = Scheduler::new(SchedulerCfg {
+            max_slots: 2,
+            token_budget: 64,
+            prefix_cache: None,
+        });
         for r in &reqs {
             sched.submit(r.clone()).unwrap();
         }
         let mut done = sched.run(&sess).unwrap();
         done.sort_by_key(|c| c.id);
         for (c, r) in done.iter().zip(&reqs) {
-            let solo = generate(
-                &sess,
-                &r.prompt,
-                &GenerateCfg {
-                    max_new: r.max_new,
-                    sampler: r.sampler,
-                    seed: r.seed,
-                    eos: r.eos,
-                },
-            )
-            .unwrap();
             assert_eq!(
-                c.tokens, solo.tokens,
+                c.tokens, solo(&sess, r),
                 "request {} diverged from solo generation", r.id
             );
         }
+    }
+
+    /// Tentpole: prefix reuse must change wall-clock, never tokens —
+    /// every scheduled output still equals solo generation, while the
+    /// store records real hits on the shared system prompt.
+    #[test]
+    fn prefix_cache_preserves_solo_parity_and_reuses_tokens() {
+        let sess = tiny_session();
+        let shared: Vec<i32> = vec![1, 7, 8, 9, 10, 11, 12, 13]; // 8-token system prompt
+        let reqs: Vec<Request> = (0..4)
+            .map(|i| {
+                let mut p = shared.clone();
+                p.extend([30 + i as i32, 40 + i as i32]);
+                req(i, p, 5)
+            })
+            .collect();
+        let mut sched = Scheduler::new(SchedulerCfg {
+            max_slots: 2,
+            token_budget: 256,
+            prefix_cache: Some(CacheStoreCfg {
+                capacity: 64,
+                max_entries: 8,
+                min_prefix: 4,
+            }),
+        });
+        for r in &reqs {
+            sched.submit(r.clone()).unwrap();
+        }
+        let mut done = sched.run(&sess).unwrap();
+        assert_eq!(done.len(), 4);
+        done.sort_by_key(|c| c.id);
+        let mut total_reused = 0usize;
+        for (c, r) in done.iter().zip(&reqs) {
+            assert_eq!(
+                c.tokens, solo(&sess, r),
+                "request {}: prefix reuse changed the generated tokens", r.id
+            );
+            total_reused += c.reused_tokens;
+        }
+        let stats = sched.cache_stats().unwrap();
+        assert!(stats.hits >= 3, "later requests must fork the shared prefix: {stats:?}");
+        assert!(
+            stats.reused_tokens >= 3 * shared.len() as u64,
+            "each hit reuses at least the shared prompt: {stats:?}"
+        );
+        assert_eq!(stats.reused_tokens, total_reused as u64);
+        assert_eq!(sched.in_flight_tokens(), 0);
+    }
+
+    /// Two same-tick admissions sharing a prefix split into waves: the
+    /// carrier prefills it, the second forks it from the store in the
+    /// same tick — no same-batch double prefill.
+    #[test]
+    fn same_tick_admissions_share_a_prefix_through_waves() {
+        let sess = tiny_session();
+        let shared = vec![1, 21, 22, 23, 24, 25];
+        let mut a = shared.clone();
+        a.push(31);
+        let mut b = shared.clone();
+        b.push(32);
+        let mut sched = Scheduler::new(SchedulerCfg {
+            max_slots: 4,
+            token_budget: 256,
+            prefix_cache: Some(CacheStoreCfg {
+                capacity: 32,
+                max_entries: 8,
+                min_prefix: 2,
+            }),
+        });
+        sched.submit(req(0, a, 3)).unwrap();
+        sched.submit(req(1, b, 3)).unwrap();
+        // both admitted in the very first tick
+        sched.tick(&sess).unwrap();
+        let stats = sched.cache_stats().unwrap();
+        assert_eq!(stats.hits, 1, "the deferred request must fork, not re-prefill");
+        assert_eq!(stats.reused_tokens, shared.len() as u64);
+        assert_eq!(sched.peak_active(), 2);
     }
 }

@@ -23,7 +23,7 @@
 //! flag) if called with `n >= 1`, else the `MISA_THREADS` environment
 //! variable, else 1. `set_threads(0)` drops back to the environment
 //! default. Small kernels stay serial regardless — see
-//! [`plan_workers`] — so the knob never pessimizes tiny shapes.
+//! `plan_workers` — so the knob never pessimizes tiny shapes.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;

@@ -35,6 +35,14 @@ impl BenchRecord {
         self
     }
 
+    /// Append a block of numeric fields at once (e.g. a stats struct
+    /// flattened by the caller) — the same insertion-order semantics as
+    /// chained [`Self::num`] calls.
+    pub fn nums(mut self, kvs: &[(&'static str, f64)]) -> Self {
+        self.nums.extend_from_slice(kvs);
+        self
+    }
+
     /// Render as a single JSON object. Non-finite numbers become
     /// `null` (JSON has no NaN/inf).
     pub fn to_json(&self) -> String {
@@ -83,7 +91,7 @@ mod tests {
         let r = BenchRecord::new("bench-serve")
             .tag("model", "tiny")
             .num("tok_s", 123.5)
-            .num("threads", 4.0)
+            .nums(&[("threads", 4.0)])
             .num("bad", f64::NAN);
         let j = r.to_json();
         assert!(j.starts_with('{') && j.trim_end().ends_with('}'), "{j}");

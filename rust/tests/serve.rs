@@ -203,7 +203,11 @@ fn train_checkpoint_generate_roundtrip_is_deterministic() {
 fn scheduler_end_to_end_over_session() {
     let mut eng = Engine::host();
     let sess = Session::create(&mut eng, "tiny", 3).unwrap();
-    let mut sched = Scheduler::new(SchedulerCfg { max_slots: 3, token_budget: 128 });
+    let mut sched = Scheduler::new(SchedulerCfg {
+        max_slots: 3,
+        token_budget: 128,
+        prefix_cache: None,
+    });
     let mk = |id: u64, plen: usize, max_new: usize| Request {
         id,
         prompt: random_prompt(plen, 256, 100 + id),
@@ -320,7 +324,11 @@ fn scheduler_batched_decode_matches_solo_at_thread_counts() {
                 eos: None,
             })
             .collect();
-        let mut sched = Scheduler::new(SchedulerCfg { max_slots: 4, token_budget: 256 });
+        let mut sched = Scheduler::new(SchedulerCfg {
+            max_slots: 4,
+            token_budget: 256,
+            prefix_cache: None,
+        });
         for r in &reqs {
             sched.submit(r.clone()).unwrap();
         }
@@ -341,6 +349,194 @@ fn scheduler_batched_decode_matches_solo_at_thread_counts() {
         }
     }
     misa::tensor::set_threads(0);
+}
+
+/// Tentpole acceptance: decode from a cache forked at a mid-prompt
+/// point (suffix prefilled on top of the shared prefix) must match a
+/// cold prefill of the full prompt within 1e-5, step by step — prefix
+/// reuse changes what is recomputed, never what is computed.
+#[test]
+fn forked_cache_decode_matches_cold_prefill() {
+    let (be, host) = tiny_backend();
+    let spec = Manifest::builtin().model("tiny").unwrap().clone();
+    let prompt = random_prompt(12, 256, 91);
+    // parent: the full prompt, as a prompt-cache entry would hold it
+    let mut parent = KvCache::new(&spec, 32).unwrap();
+    be.prefill(&host, &prompt, &mut parent).unwrap();
+    // fork at a mid-prompt point, prefill only the novel suffix
+    let m = 7;
+    let mut fork = KvCache::fork_from(&parent, m).unwrap();
+    assert_eq!(fork.len(), m);
+    let forked = be.prefill(&host, &prompt[m..], &mut fork).unwrap();
+    // cold: the same capacity, the full prompt from scratch
+    let mut cold = KvCache::new(&spec, 32).unwrap();
+    let want = be.prefill(&host, &prompt, &mut cold).unwrap();
+    assert_eq!(fork.len(), cold.len());
+    for (a, b) in forked.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-5, "forked prefill diverged: {a} vs {b}");
+    }
+    assert_eq!(misa::serve::argmax(&forked), misa::serve::argmax(&want));
+    // greedy decode both streams for 8 steps
+    let (mut fl, mut cl) = (forked, want);
+    for step in 0..8 {
+        let next = misa::serve::argmax(&cl) as i32;
+        assert_eq!(misa::serve::argmax(&fl) as i32, next, "step {step}");
+        fl = be.decode_step(&host, next, fork.len(), &mut fork).unwrap();
+        cl = be.decode_step(&host, next, cold.len(), &mut cold).unwrap();
+        let mut max_err = 0.0f32;
+        for (a, b) in fl.iter().zip(&cl) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(max_err < 1e-5, "step {step}: forked decode diverged (max |Δ| {max_err})");
+    }
+    // the fork's writes never leaked into the parent (copy-on-write):
+    // it still decodes from its own tip as if never forked
+    assert_eq!(parent.len(), prompt.len());
+    let parent_decode = be.decode_step(&host, 3, parent.len(), &mut parent).unwrap();
+    assert!(parent_decode.iter().all(|x| x.is_finite()));
+}
+
+/// A fork at the tip of a *wrapped* parent ring (sliding-window
+/// regime) must still decode identically to a cold cache fed the same
+/// tokens — and fork points the wrap has evicted are rejected.
+#[test]
+fn fork_past_ring_wraparound_matches_cold_prefill() {
+    let (be, host) = tiny_backend();
+    let spec = Manifest::builtin().model("tiny").unwrap().clone();
+    let toks = random_prompt(9, 256, 58);
+    let capacity = 6; // positions 6, 7, 8 wrapped onto slots 0, 1, 2
+    let mut parent = KvCache::new(&spec, capacity).unwrap();
+    be.prefill(&host, &toks[..5], &mut parent).unwrap();
+    let last = be.prefill(&host, &toks[5..], &mut parent).unwrap();
+    assert!(parent.len() > parent.capacity(), "the ring must actually wrap");
+    // fork points the wrap evicted are refused; the tip is forkable
+    assert!(KvCache::fork_from(&parent, 5).is_err());
+    let mut fork = KvCache::fork_from(&parent, parent.len()).unwrap();
+    // cold reference: same capacity, same tokens, same chunking
+    let mut cold = KvCache::new(&spec, capacity).unwrap();
+    be.prefill(&host, &toks[..5], &mut cold).unwrap();
+    let mut cl = be.prefill(&host, &toks[5..], &mut cold).unwrap();
+    let mut fl = last;
+    for step in 0..6 {
+        let next = misa::serve::argmax(&cl) as i32;
+        assert_eq!(misa::serve::argmax(&fl) as i32, next, "step {step}");
+        fl = be.decode_step(&host, next, fork.len(), &mut fork).unwrap();
+        cl = be.decode_step(&host, next, cold.len(), &mut cold).unwrap();
+        let mut max_err = 0.0f32;
+        for (a, b) in fl.iter().zip(&cl) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(
+            max_err < 1e-5,
+            "step {step}: wrapped-fork decode diverged (max |Δ| {max_err})"
+        );
+    }
+}
+
+/// Tentpole acceptance: batched prefill over N ragged prompts must
+/// match N sequential per-slot prefills within 1e-5 — at `threads = 1`
+/// and `threads = 4`. (The stacked rows go through the same GEMM cores
+/// and the same per-position attention kernel, so the implementation
+/// is bit-identical by construction; the tolerance is the contract.)
+#[test]
+fn prefill_batch_matches_sequential_prefill_across_thread_counts() {
+    let _knob = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let (be, host) = tiny_backend();
+    let spec = Manifest::builtin().model("tiny").unwrap().clone();
+    for &threads in &[1usize, 4] {
+        misa::tensor::set_threads(threads);
+        let prompts: Vec<Vec<i32>> = (0..3)
+            .map(|i| random_prompt(3 + 3 * i, 256, 200 + i as u64))
+            .collect();
+        let mut batched: Vec<KvCache> =
+            prompts.iter().map(|_| KvCache::new(&spec, 32).unwrap()).collect();
+        let rows = {
+            let chunks: Vec<&[i32]> = prompts.iter().map(|p| p.as_slice()).collect();
+            let mut refs: Vec<&mut KvCache> = batched.iter_mut().collect();
+            be.prefill_batch(&host, &chunks, &mut refs).unwrap()
+        };
+        assert_eq!(rows.len(), prompts.len());
+        for (slot, p) in prompts.iter().enumerate() {
+            let mut solo = KvCache::new(&spec, 32).unwrap();
+            let want = be.prefill(&host, p, &mut solo).unwrap();
+            assert_eq!(batched[slot].len(), p.len());
+            let mut max_err = 0.0f32;
+            for (a, b) in rows[slot].iter().zip(&want) {
+                max_err = max_err.max((a - b).abs());
+            }
+            assert!(
+                max_err < 1e-5,
+                "threads={threads} slot={slot}: batched prefill diverged \
+                 (max |Δ| {max_err})"
+            );
+            assert_eq!(
+                misa::serve::argmax(&rows[slot]),
+                misa::serve::argmax(&want),
+                "threads={threads} slot={slot}: argmax diverged"
+            );
+        }
+        // the batched caches are decode-ready: one batched step works
+        let tokens: Vec<i32> =
+            rows.iter().map(|r| misa::serve::argmax(r) as i32).collect();
+        let positions: Vec<usize> = batched.iter().map(|c| c.len()).collect();
+        let mut refs: Vec<&mut KvCache> = batched.iter_mut().collect();
+        let step = be.decode_batch(&host, &tokens, &positions, &mut refs).unwrap();
+        assert!(step.iter().flatten().all(|x| x.is_finite()));
+    }
+    misa::tensor::set_threads(0);
+}
+
+/// The scheduler's prefix cache on a shared-prefix workload: every
+/// output still equals solo generation, and the reuse counters record
+/// real forks.
+#[test]
+fn scheduler_prefix_cache_matches_solo_and_reports_reuse() {
+    use misa::serve::CacheStoreCfg;
+    let mut eng = Engine::host();
+    let sess = Session::create(&mut eng, "tiny", 11).unwrap();
+    let shared = random_prompt(10, 256, 321);
+    let reqs: Vec<Request> = (0..5)
+        .map(|i| {
+            let mut p = shared.clone();
+            p.extend([(60 + i) as i32, (70 + i) as i32]);
+            Request {
+                id: i,
+                prompt: p,
+                max_new: 6,
+                sampler: SamplerCfg { temperature: 0.8, top_k: 12, top_p: 0.95 },
+                seed: 400 + i,
+                eos: None,
+            }
+        })
+        .collect();
+    let mut sched = Scheduler::new(SchedulerCfg {
+        max_slots: 3,
+        token_budget: 512,
+        prefix_cache: Some(CacheStoreCfg { capacity: 64, max_entries: 8, min_prefix: 4 }),
+    });
+    for r in &reqs {
+        sched.submit(r.clone()).unwrap();
+    }
+    let mut done = sched.run(&sess).unwrap();
+    assert_eq!(done.len(), reqs.len());
+    done.sort_by_key(|c| c.id);
+    for (c, r) in done.iter().zip(&reqs) {
+        let solo = generate(
+            &sess,
+            &r.prompt,
+            &GenerateCfg { max_new: r.max_new, sampler: r.sampler, seed: r.seed, eos: r.eos },
+        )
+        .unwrap();
+        assert_eq!(
+            c.tokens, solo.tokens,
+            "request {}: prefix reuse changed the generated tokens", r.id
+        );
+    }
+    let stats = sched.cache_stats().unwrap();
+    assert!(stats.hits >= 4, "all but the first request should fork: {stats:?}");
+    assert!(stats.reused_tokens >= 4 * shared.len() as u64, "{stats:?}");
+    assert!(stats.hit_rate() > 0.0);
+    assert_eq!(sched.in_flight_tokens(), 0);
 }
 
 /// KV memory accounting: GQA halves the cache relative to MHA head
