@@ -10,6 +10,9 @@
 //! the batching win. The shared-prefix sweep measures prompt-cache
 //! reuse: 8 requests behind one 64-token system prompt, with and
 //! without the prefix cache — the mean TTFT ratio is the reuse win.
+//! The speculative sweep runs a repeated-structure greedy workload
+//! with self-drafting speculation off and on — the tok/s ratio is the
+//! multi-token-per-forward win, reported next to the acceptance rate.
 //! Honors `MISA_THREADS` (worker-pool width) and with `-- --json FILE`
 //! writes both sweeps as a JSON **array** of records (one per
 //! model x configuration point; the `misa bench-serve --json` CLI path
@@ -20,6 +23,7 @@ use std::time::Instant;
 use misa::runtime::{Engine, Session};
 use misa::serve::{
     generate, CacheStoreCfg, GenerateCfg, Request, SamplerCfg, Scheduler, SchedulerCfg,
+    SpecCfg,
 };
 use misa::util::{BenchRecord, Rng};
 
@@ -93,7 +97,10 @@ fn main() -> anyhow::Result<()> {
             let mut sched = Scheduler::new(SchedulerCfg {
                 max_slots: slots,
                 token_budget: 4096,
-                prefix_cache: None,
+                // pinned off so a MISA_SPEC environment does not skew
+                // the batching baseline untagged
+                spec: None,
+                ..SchedulerCfg::default()
             });
             for id in 0..n_req as u64 {
                 sched.submit(Request {
@@ -152,6 +159,10 @@ fn main() -> anyhow::Result<()> {
                     max_entries: 16,
                     min_prefix: 8,
                 }),
+                // pinned off so a MISA_SPEC environment does not skew
+                // the TTFT baseline untagged
+                spec: None,
+                ..SchedulerCfg::default()
             });
             for id in 0..n_req as u64 {
                 let mut p = shared.clone();
@@ -204,6 +215,72 @@ fn main() -> anyhow::Result<()> {
                     .num("ttft_speedup_vs_cold", baseline_ttft / ttft.max(1e-9))
                     .num("cache_hit_rate", stats.hit_rate())
                     .num("cache_reused_tokens", stats.reused_tokens as f64),
+            );
+        }
+
+        // the speculative sweep: 8 greedy requests over a
+        // repeated-structure workload (each prompt cycles a 4-token
+        // motif), decode off vs on — the aggregate tok/s ratio is the
+        // multi-token-per-forward win, weighted by the acceptance rate
+        let mut baseline_spec_tok_s = 0.0f64;
+        for spec_on in [false, true] {
+            let t0 = Instant::now();
+            let mut sched = Scheduler::new(SchedulerCfg {
+                max_slots: 4,
+                token_budget: 4096,
+                spec: spec_on.then(SpecCfg::default),
+                ..SchedulerCfg::default()
+            });
+            for id in 0..n_req as u64 {
+                let motif = prompt(5, vocab, 900 + id);
+                let mut p = vec![1i32];
+                for j in 0..23 {
+                    p.push(motif[1 + j % 4]);
+                }
+                sched.submit(Request {
+                    id,
+                    prompt: p,
+                    max_new,
+                    sampler: SamplerCfg::greedy(),
+                    seed: id,
+                    eos: None,
+                })?;
+            }
+            let done = sched.run(&sess)?;
+            let wall = t0.elapsed().as_secs_f64();
+            let toks: usize = done.iter().map(|c| c.tokens.len()).sum();
+            let tok_s = toks as f64 / wall.max(1e-9);
+            let st = sched.spec_stats().unwrap_or_default();
+            if !spec_on {
+                baseline_spec_tok_s = tok_s;
+            }
+            println!(
+                "{model}: speculative {n_req} reqs, spec {}     \
+                 {tok_s:>8.1} tok/s  ({:.2}x vs off)  drafted {}  accepted {}  \
+                 acceptance {:.2}",
+                if spec_on { "on " } else { "off" },
+                tok_s / baseline_spec_tok_s.max(1e-9),
+                st.drafted,
+                st.accepted,
+                st.acceptance_rate(),
+            );
+            records.push(
+                BenchRecord::new("bench-serve")
+                    .tag("model", model)
+                    .tag("backend", sess.backend_name())
+                    .tag("spec", if spec_on { "on" } else { "off" })
+                    .num("threads", threads as f64)
+                    .num("requests", n_req as f64)
+                    .num("slots", 4.0)
+                    .num("prompt_len", 24.0)
+                    .num("max_new", max_new as f64)
+                    .num("draft_len", if spec_on { 4.0 } else { 0.0 })
+                    .num("wall_s", wall)
+                    .num("aggregate_tok_s", tok_s)
+                    .num("speedup_vs_no_spec", tok_s / baseline_spec_tok_s.max(1e-9))
+                    .num("drafted_tokens", st.drafted as f64)
+                    .num("accepted_tokens", st.accepted as f64)
+                    .num("acceptance_rate", st.acceptance_rate()),
             );
         }
     }

@@ -27,6 +27,7 @@ use misa::modelspec::ModelSpec;
 use misa::runtime::{BackendKind, Engine, KvCache, Session};
 use misa::serve::{
     generate, CacheStoreCfg, GenerateCfg, Request, SamplerCfg, Scheduler, SchedulerCfg,
+    SpecCfg,
 };
 use misa::util::Rng;
 
@@ -39,11 +40,13 @@ fn usage() -> ! {
          \x20           [--save-ckpt FILE] [--backend host|pjrt] [--host]\n\
          \x20 misa generate --ckpt FILE [--model M] [--prompt \"1,2,3\"] [--max-new N]\n\
          \x20           [--temp F] [--top-k N] [--top-p F] [--eos TOK] [--seed N]\n\
+         \x20           [--spec] [--draft-len N] [--spec-ngram N]\n\
          \x20 misa bench-serve [--ckpt FILE] [--model M] [--requests N] [--max-new N]\n\
          \x20           [--prompt-len N] [--shared-prefix N] [--slots N]\n\
          \x20           [--token-budget N] [--prefix-cache] [--prefix-cache-cap N]\n\
-         \x20           [--prefix-cache-entries N] [--temp F] [--top-k N] [--top-p F]\n\
-         \x20           [--seed N] [--json FILE]\n\
+         \x20           [--prefix-cache-entries N] [--prefill-chunk N] [--spec]\n\
+         \x20           [--draft-len N] [--spec-ngram N] [--temp F] [--top-k N]\n\
+         \x20           [--top-p F] [--seed N] [--json FILE]\n\
          \x20 misa bench [--model M] [--steps N] [--seed N] [--json FILE]\n\
          \x20 misa exp <name|all|list> [--full] [--artifacts DIR] [--backend B]\n\
          \x20 misa info [--artifacts DIR] [--backend B]\n\n\
@@ -59,11 +62,12 @@ const VALUED_FLAGS: &[&str] = &[
     "config", "model", "method", "steps", "lr", "delta", "eta", "t-inner", "rank", "alpha",
     "data", "seed", "out", "artifacts", "backend", "save-ckpt", "ckpt", "prompt",
     "max-new", "temp", "top-k", "top-p", "eos", "requests", "prompt-len", "shared-prefix",
-    "slots", "token-budget", "prefix-cache-cap", "prefix-cache-entries", "threads", "json",
+    "slots", "token-budget", "prefix-cache-cap", "prefix-cache-entries", "prefill-chunk",
+    "draft-len", "spec-ngram", "threads", "json",
 ];
 
 /// Boolean switches.
-const SWITCHES: &[&str] = &["pretrain", "full", "host", "prefix-cache"];
+const SWITCHES: &[&str] = &["pretrain", "full", "host", "prefix-cache", "spec"];
 
 struct Args {
     positional: Vec<String>,
@@ -232,6 +236,31 @@ fn parse_prompt(args: &Args) -> Result<Vec<i32>> {
     Ok(toks)
 }
 
+/// Resolve the speculative-decoding configuration: `--spec` enables it
+/// (with `--draft-len` / `--spec-ngram` overrides); without the switch
+/// the `MISA_SPEC` environment default applies (unset = disabled).
+/// `--draft-len` / `--spec-ngram` without `--spec` are hard errors —
+/// silently measuring the non-speculative baseline would be worse.
+fn spec_from(args: &Args) -> Result<Option<SpecCfg>> {
+    if !args.switches.contains("spec") {
+        for flag in ["draft-len", "spec-ngram"] {
+            if args.flags.contains_key(flag) {
+                bail!("--{flag} requires --spec");
+            }
+        }
+        return Ok(SpecCfg::from_env());
+    }
+    let mut cfg = SpecCfg::default();
+    if let Some(k) = args.flags.get("draft-len") {
+        cfg.draft_len = k.parse().context("--draft-len")?;
+    }
+    if let Some(n) = args.flags.get("spec-ngram") {
+        cfg.ngram = n.parse().context("--spec-ngram")?;
+    }
+    cfg.validate()?;
+    Ok(Some(cfg))
+}
+
 fn sampler_from(args: &Args) -> Result<SamplerCfg> {
     let mut cfg = SamplerCfg::greedy();
     if let Some(t) = args.flags.get("temp") {
@@ -310,10 +339,15 @@ fn cmd_generate(args: &Args) -> Result<()> {
             Some(e) => Some(e.parse().context("--eos")?),
             None => None,
         },
+        spec: spec_from(args)?,
+    };
+    let spec_label = match &cfg.spec {
+        Some(s) => format!("on(k={},ngram={})", s.draft_len, s.ngram),
+        None => "off".to_string(),
     };
     println!(
         "generate: model={} backend={} ckpt={ckpt_path} prompt_len={} max_new={} \
-         temp={} top_k={} top_p={} seed={}",
+         temp={} top_k={} top_p={} seed={} spec={spec_label}",
         sess.spec.config.name,
         sess.backend_name(),
         prompt.len(),
@@ -332,6 +366,14 @@ fn cmd_generate(args: &Args) -> Result<()> {
         g.decode_tps,
         g.tokens.len(),
     );
+    if let Some(st) = g.spec {
+        println!(
+            "spec: {} drafted · {} accepted · acceptance {:.2}",
+            st.drafted,
+            st.accepted,
+            st.acceptance_rate(),
+        );
+    }
     Ok(())
 }
 
@@ -391,6 +433,11 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
             None => 4096,
         },
         prefix_cache,
+        prefill_chunk: match args.flags.get("prefill-chunk") {
+            Some(n) => n.parse().context("--prefill-chunk")?,
+            None => 0,
+        },
+        spec: spec_from(args)?,
     };
     let sampler = sampler_from(args)?;
     let mc = &sess.spec.config;
@@ -402,14 +449,20 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         Some(c) => format!("on(cap={},entries={})", c.capacity, c.max_entries),
         None => "off".to_string(),
     };
+    let spec_label = match &cfg.spec {
+        Some(s) => format!("on(k={},ngram={})", s.draft_len, s.ngram),
+        None => "off".to_string(),
+    };
     println!(
         "bench-serve: model={} backend={} requests={requests} max_new={max_new} \
          prompt_len={prompt_len} shared_prefix={shared_prefix} slots={} \
-         token_budget={} prefix_cache={cache_label} threads={}",
+         token_budget={} prefix_cache={cache_label} prefill_chunk={} \
+         spec={spec_label} threads={}",
         mc.name,
         sess.backend_name(),
         cfg.max_slots,
         cfg.token_budget,
+        cfg.prefill_chunk,
         misa::tensor::threads(),
     );
     let mut rng = Rng::new(seed ^ 0x5E57E);
@@ -428,8 +481,16 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     };
     for id in 0..requests as u64 {
         let mut prompt = shared.clone();
+        // each request's unique tail cycles a short random motif — the
+        // repeated-structure synthetic workload (retrieval spans,
+        // templates, code) that self-drafting speculation exploits
+        let motif: Vec<i32> = (0..4)
+            .map(|_| rng.range(misa::data::tok::SYM0 as usize, vocab) as i32)
+            .collect();
+        let mut j = 0usize;
         while prompt.len() < target_len {
-            prompt.push(rng.range(misa::data::tok::SYM0 as usize, vocab) as i32);
+            prompt.push(motif[j % motif.len()]);
+            j += 1;
         }
         sched.submit(Request {
             id,
@@ -475,11 +536,22 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
             stats.evictions,
         );
     }
+    let spec_stats = sched.spec_stats();
+    let sp = spec_stats.unwrap_or_default();
+    if spec_stats.is_some() {
+        println!(
+            "speculation: {} drafted · {} accepted · acceptance rate {:.2}",
+            sp.drafted,
+            sp.accepted,
+            sp.acceptance_rate(),
+        );
+    }
     if let Some(path) = args.flags.get("json") {
         misa::util::BenchRecord::new("bench-serve")
             .tag("model", mc.name.clone())
             .tag("backend", sess.backend_name())
             .tag("prefix_cache", if cache_stats.is_some() { "on" } else { "off" })
+            .tag("spec", if spec_stats.is_some() { "on" } else { "off" })
             .num("threads", misa::tensor::threads() as f64)
             .num("requests", done.len() as f64)
             .num("slots", cfg.max_slots as f64)
@@ -487,6 +559,8 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
             .num("prompt_len", prompt_len as f64)
             .num("shared_prefix", shared_prefix as f64)
             .num("max_new", max_new as f64)
+            .num("prefill_chunk", cfg.prefill_chunk as f64)
+            .num("draft_len", cfg.spec.map_or(0.0, |s| s.draft_len as f64))
             .num("wall_s", wall)
             .num("aggregate_tok_s", new_tokens as f64 / wall.max(1e-9))
             .num("mean_ttft_ms", mean_ttft_ms)
@@ -500,6 +574,9 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
                 ("cache_reused_tokens", stats.reused_tokens as f64),
                 ("cache_entries", stats.entries as f64),
                 ("cache_evictions", stats.evictions as f64),
+                ("drafted_tokens", sp.drafted as f64),
+                ("accepted_tokens", sp.accepted as f64),
+                ("acceptance_rate", sp.acceptance_rate()),
             ])
             .write(Path::new(path))?;
         println!("bench record written: {path}");
@@ -775,6 +852,38 @@ mod tests {
         let a = parse_args(&v(&["bench-serve", "--prefix-cache", "9"])).unwrap();
         assert!(a.switches.contains("prefix-cache"));
         assert_eq!(a.positional, vec!["bench-serve", "9"]);
+    }
+
+    #[test]
+    fn spec_flags_parse() {
+        let a = parse_args(&v(&[
+            "bench-serve", "--spec", "--draft-len", "6", "--spec-ngram", "2",
+            "--prefill-chunk", "32",
+        ]))
+        .unwrap();
+        assert!(a.switches.contains("spec"));
+        let s = spec_from(&a).unwrap().expect("--spec enables speculation");
+        assert_eq!(s.draft_len, 6);
+        assert_eq!(s.ngram, 2);
+        assert_eq!(a.flags.get("prefill-chunk").unwrap(), "32");
+        // degenerate draft lengths are rejected at parse time
+        let a = parse_args(&v(&["generate", "--spec", "--draft-len", "0"])).unwrap();
+        assert!(spec_from(&a).is_err());
+        let a = parse_args(&v(&["generate", "--spec", "--spec-ngram", "0"])).unwrap();
+        assert!(spec_from(&a).is_err());
+        // --spec alone takes the defaults; the switch consumes no value
+        let a = parse_args(&v(&["bench-serve", "--spec", "9"])).unwrap();
+        assert!(a.switches.contains("spec"));
+        assert_eq!(a.positional, vec!["bench-serve", "9"]);
+        assert_eq!(spec_from(&a).unwrap(), Some(SpecCfg::default()));
+        // spec knobs without --spec are hard errors, not a silent
+        // non-speculative baseline
+        let a = parse_args(&v(&["bench-serve", "--draft-len", "8"])).unwrap();
+        let err = spec_from(&a).unwrap_err();
+        assert!(format!("{err:#}").contains("--spec"), "{err:#}");
+        // without the switch the MISA_SPEC environment default applies
+        let a = parse_args(&v(&["bench-serve"])).unwrap();
+        assert_eq!(spec_from(&a).unwrap(), SpecCfg::from_env());
     }
 
     #[test]

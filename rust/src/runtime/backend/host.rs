@@ -153,6 +153,13 @@ struct Trace<'a> {
     loss: f64,
 }
 
+/// Largest stacked-row count the shared workspace keeps warm. Decode
+/// and speculative-verify ticks run `slots * (draft + 1)` rows — well
+/// under this — so their scratch is never reallocated; a one-shot long
+/// prefill may grow past it, and shrinks back afterwards so the
+/// backend does not pin prefill-sized buffers for its lifetime.
+const WS_RETAIN_ROWS: usize = 64;
+
 /// Reusable scratch for the decode hot path. One decode step used to
 /// allocate ~10 fresh `Vec`s per layer per token; at batch 1 that
 /// allocation churn is a measurable slice of the step. The buffers are
@@ -185,6 +192,30 @@ struct DecodeWorkspace {
     /// rows are copied out of it (the ABI returns owned rows) but the
     /// flat matrix itself is never reallocated
     logits: Vec<f32>,
+}
+
+impl DecodeWorkspace {
+    /// Release capacity above a `rows`-row envelope (`scores` is
+    /// window-sized, not row-sized, and is left alone). `shrink_to`
+    /// only trims capacity, so the next call's `resize` still finds
+    /// the retained envelope warm.
+    fn shrink_to_rows(&mut self, rows: usize, d: usize, kd: usize, f: usize, v: usize) {
+        fn cap(b: &mut Vec<f32>, n: usize) {
+            b.truncate(n);
+            b.shrink_to(n);
+        }
+        cap(&mut self.x, rows * d);
+        cap(&mut self.h, rows * d);
+        cap(&mut self.q, rows * d);
+        cap(&mut self.k, rows * kd);
+        cap(&mut self.v, rows * kd);
+        cap(&mut self.concat, rows * d);
+        cap(&mut self.proj, rows * d);
+        cap(&mut self.gpre, rows * f);
+        cap(&mut self.up, rows * f);
+        cap(&mut self.act, rows * f);
+        cap(&mut self.logits, rows * v);
+    }
 }
 
 /// The pure-Rust backend. Stateless beyond the model layout, the
@@ -399,6 +430,29 @@ impl HostBackend {
         chunks: &[&[i32]],
         caches: &mut [&mut KvCache],
     ) -> Result<Vec<Vec<f32>>> {
+        self.ragged_forward(host, chunks, caches, false)
+    }
+
+    /// The shared ragged stacked forward behind [`Backend::prefill`],
+    /// [`Backend::prefill_batch`] and [`Backend::verify_step`]: slot
+    /// `i` runs `chunks[i]` at absolute positions `caches[i].len()..`,
+    /// appending each position's K/V to its own ring buffers. With
+    /// `all_logits` false only each slot's final position feeds the LM
+    /// head (prefill); with `all_logits` true every row does, and slot
+    /// `i` gets back `chunks[i].len() * vocab` stacked logits — the
+    /// verifier's view of the model at every draft position.
+    ///
+    /// Scratch comes from the same grow-only [`DecodeWorkspace`] the
+    /// batched decode path uses (the buffers are `resize`d — a no-op
+    /// once warm — and fully overwritten), so a speculative tick
+    /// allocates nothing beyond its returned rows.
+    fn ragged_forward(
+        &self,
+        host: &[Vec<f32>],
+        chunks: &[&[i32]],
+        caches: &mut [&mut KvCache],
+        all_logits: bool,
+    ) -> Result<Vec<Vec<f32>>> {
         let mc = &self.spec.config;
         let (d, v, f) = (mc.dim, mc.vocab, mc.ffn_dim);
         let (nh, nkv) = (mc.n_heads, mc.n_kv_heads);
@@ -437,30 +491,42 @@ impl HostBackend {
         }
         let starts: Vec<usize> = caches.iter().map(|c| c.len()).collect();
 
+        let mut guard = self.ws.lock().unwrap_or_else(|e| e.into_inner());
+        let ws = &mut *guard;
+        ws.x.resize(rows * d, 0.0);
+        ws.h.resize(rows * d, 0.0);
+        ws.q.resize(rows * d, 0.0);
+        ws.k.resize(rows * kd, 0.0);
+        ws.v.resize(rows * kd, 0.0);
+        ws.concat.resize(rows * d, 0.0);
+        ws.proj.resize(rows * d, 0.0);
+        ws.gpre.resize(rows * f, 0.0);
+        ws.up.resize(rows * f, 0.0);
+        ws.act.resize(rows * f, 0.0);
+
         // token embedding: one stacked [rows, d] residual stream
         let embed = &host[self.layout.embed];
-        let mut x = vec![0.0f32; rows * d];
         {
             let mut r = 0;
             for tokens in chunks {
                 for &tk in *tokens {
                     let tok = tk as usize;
-                    x[r * d..(r + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
+                    ws.x[r * d..(r + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
                     r += 1;
                 }
             }
         }
 
         for (li, lp) in self.layout.layers.iter().enumerate() {
-            let (h1, _) = rms_forward(&x, &host[lp.attn_norm], rows, d);
-            let mut q = gemm_nn(&h1, &host[lp.wq], rows, d, d);
-            let mut k = gemm_nn(&h1, &host[lp.wk], rows, d, kd);
-            let v_proj = gemm_nn(&h1, &host[lp.wv], rows, d, kd);
+            rms_forward_into(&ws.x, &host[lp.attn_norm], rows, d, &mut ws.h);
+            gemm_nn_into(&ws.h, &host[lp.wq], rows, d, d, &mut ws.q);
+            gemm_nn_into(&ws.h, &host[lp.wk], rows, d, kd, &mut ws.k);
+            gemm_nn_into(&ws.h, &host[lp.wv], rows, d, kd, &mut ws.v);
             for i in 0..bsz {
                 for j in 0..chunks[i].len() {
                     let r = offs[i] + j;
-                    self.rope_row(&mut q[r * d..(r + 1) * d], nh, starts[i] + j);
-                    self.rope_row(&mut k[r * kd..(r + 1) * kd], nkv, starts[i] + j);
+                    self.rope_row(&mut ws.q[r * d..(r + 1) * d], nh, starts[i] + j);
+                    self.rope_row(&mut ws.k[r * kd..(r + 1) * kd], nkv, starts[i] + j);
                 }
             }
             // causal attention over each slot's resident window. Each
@@ -470,8 +536,7 @@ impl HostBackend {
             // query still needs — ring slot `p % capacity` frees exactly
             // when position `p - capacity` has left every remaining
             // window.
-            let mut concat = vec![0.0f32; rows * d];
-            let mut scores: Vec<f32> = Vec::new();
+            ws.concat.fill(0.0);
             for i in 0..bsz {
                 let cache = &mut *caches[i];
                 for j in 0..chunks[i].len() {
@@ -480,50 +545,77 @@ impl HostBackend {
                     cache.write_kv(
                         li,
                         p,
-                        &k[r * kd..(r + 1) * kd],
-                        &v_proj[r * kd..(r + 1) * kd],
+                        &ws.k[r * kd..(r + 1) * kd],
+                        &ws.v[r * kd..(r + 1) * kd],
                     );
                     attend_position(
-                        &q[r * d..(r + 1) * d],
+                        &ws.q[r * d..(r + 1) * d],
                         p,
                         cache,
                         li,
-                        &mut scores,
-                        &mut concat[r * d..(r + 1) * d],
+                        &mut ws.scores,
+                        &mut ws.concat[r * d..(r + 1) * d],
                         (nh, rep, hd, kd),
                         scale,
                     );
                 }
             }
-            let attn_out = gemm_nn(&concat, &host[lp.wo], rows, d, d);
-            for i in 0..rows * d {
-                x[i] += attn_out[i];
+            gemm_nn_into(&ws.concat, &host[lp.wo], rows, d, d, &mut ws.proj);
+            for (x, &p) in ws.x.iter_mut().zip(&ws.proj) {
+                *x += p;
             }
-            let (h2, _) = rms_forward(&x, &host[lp.mlp_norm], rows, d);
-            let gpre = gemm_nn(&h2, &host[lp.wgate], rows, d, f);
-            let up = gemm_nn(&h2, &host[lp.wup], rows, d, f);
-            let mut act = vec![0.0f32; rows * f];
-            for i in 0..rows * f {
-                act[i] = silu(gpre[i]) * up[i];
+            rms_forward_into(&ws.x, &host[lp.mlp_norm], rows, d, &mut ws.h);
+            gemm_nn_into(&ws.h, &host[lp.wgate], rows, d, f, &mut ws.gpre);
+            gemm_nn_into(&ws.h, &host[lp.wup], rows, d, f, &mut ws.up);
+            for ((a, &g), &u) in ws.act.iter_mut().zip(&ws.gpre).zip(&ws.up) {
+                *a = silu(g) * u;
             }
-            let mlp_out = gemm_nn(&act, &host[lp.wdown], rows, f, d);
-            for i in 0..rows * d {
-                x[i] += mlp_out[i];
+            gemm_nn_into(&ws.act, &host[lp.wdown], rows, f, d, &mut ws.proj);
+            for (x, &p) in ws.x.iter_mut().zip(&ws.proj) {
+                *x += p;
             }
         }
         for (cache, tokens) in caches.iter_mut().zip(chunks) {
             cache.advance(tokens.len());
         }
 
-        // only each slot's final position feeds the LM head
-        let mut fin = vec![0.0f32; bsz * d];
-        for i in 0..bsz {
-            let r = offs[i] + chunks[i].len() - 1;
-            fin[i * d..(i + 1) * d].copy_from_slice(&x[r * d..(r + 1) * d]);
+        let out: Vec<Vec<f32>> = if all_logits {
+            // every position feeds the LM head: slot `i` gets its
+            // chunk's stacked logits back for draft verification
+            rms_forward_into(&ws.x, &host[self.layout.final_norm], rows, d, &mut ws.h);
+            ws.logits.resize(rows * v, 0.0);
+            gemm_nn_into(&ws.h, &host[self.layout.head], rows, d, v, &mut ws.logits);
+            (0..bsz)
+                .map(|i| ws.logits[offs[i] * v..(offs[i] + chunks[i].len()) * v].to_vec())
+                .collect()
+        } else {
+            // only each slot's final position feeds the LM head
+            // (`concat` is free after the layer loop and doubles as the
+            // [bsz, d] gather buffer)
+            for i in 0..bsz {
+                let r = offs[i] + chunks[i].len() - 1;
+                let (dst, src) = (&mut ws.concat, &ws.x);
+                dst[i * d..(i + 1) * d].copy_from_slice(&src[r * d..(r + 1) * d]);
+            }
+            rms_forward_into(
+                &ws.concat[..bsz * d],
+                &host[self.layout.final_norm],
+                bsz,
+                d,
+                &mut ws.h[..bsz * d],
+            );
+            ws.logits.resize(bsz * v, 0.0);
+            gemm_nn_into(&ws.h[..bsz * d], &host[self.layout.head], bsz, d, v, &mut ws.logits);
+            ws.logits[..bsz * v].chunks(v).map(|row| row.to_vec()).collect()
+        };
+        // steady-state decode/verify runs a handful of rows per tick; a
+        // one-shot long prefill must not pin prefill-sized scratch for
+        // the backend's lifetime, so capacity above the retained
+        // envelope is released (rare, off the decode hot path)
+        if rows > WS_RETAIN_ROWS {
+            ws.shrink_to_rows(WS_RETAIN_ROWS, d, kd, f, v);
         }
-        let (hf, _) = rms_forward(&fin, &host[self.layout.final_norm], bsz, d);
-        let logits = gemm_nn(&hf, &host[self.layout.head], bsz, d, v);
-        Ok(logits.chunks(v).map(|row| row.to_vec()).collect())
+        Ok(out)
     }
 
     /// The hand-derived backward pass: gradients for every registry
@@ -769,6 +861,41 @@ impl Backend for HostBackend {
         caches: &mut [&mut KvCache],
     ) -> Result<Vec<Vec<f32>>> {
         self.prefill_many(host, chunks, caches)
+    }
+
+    /// Speculative verification is the all-positions case of the same
+    /// ragged stacked path that serves prefill: one `[total_tokens,
+    /// hidden]` forward over every slot's `[last_token, draft...]`
+    /// chunk, with the LM head applied to **every** row instead of
+    /// each slot's last. Per-row numerics are identical to sequential
+    /// [`Backend::decode_step`] calls (same GEMM cores computing each
+    /// output row independently in a fixed reduction order, same
+    /// `attend_position` kernel), which is what makes greedy
+    /// speculative decode bit-identical to greedy sequential decode —
+    /// the invariant `rust/tests/serve.rs` pins.
+    fn verify_step(
+        &self,
+        host: &[Vec<f32>],
+        chunks: &[&[i32]],
+        positions: &[usize],
+        caches: &mut [&mut KvCache],
+    ) -> Result<Vec<Vec<f32>>> {
+        ensure!(
+            chunks.len() == positions.len() && chunks.len() == caches.len(),
+            "verify_step: {} chunks, {} positions, {} caches",
+            chunks.len(),
+            positions.len(),
+            caches.len()
+        );
+        for (i, (&pos, cache)) in positions.iter().zip(caches.iter()).enumerate() {
+            ensure!(
+                pos == cache.len(),
+                "verify_step slot {i}: position {pos} but the cache holds {} positions — \
+                 verification must be contiguous",
+                cache.len()
+            );
+        }
+        self.ragged_forward(host, chunks, caches, true)
     }
 
     /// One token is the batch-of-one case of [`Backend::decode_batch`]:

@@ -246,6 +246,43 @@ impl KvCache {
         self.len = 0;
     }
 
+    /// Roll back to `len` resident positions — the speculative-decode
+    /// rejection path: draft positions the verifier rejected are
+    /// forgotten, and the next decode step overwrites their ring slots
+    /// as if they were never written.
+    ///
+    /// No K/V rows are restored, because none need to be: rollback is
+    /// only sound when the rolled-back writes did not overwrite any
+    /// ring slot the retained attention window (queries at `len..`)
+    /// still reads. A rolled-back position `p` clobbered position
+    /// `p - capacity`, which the retained window needs iff
+    /// `p >= len + 1` and `p >= capacity` — so truncation is refused
+    /// (wrap-aware) when the ring has wrapped over retained positions,
+    /// i.e. unless `self.len() <= capacity` (the draft never wrapped)
+    /// or `self.len() <= len + 1` (at most the next slot, which frees
+    /// exactly when its wrapped-out position leaves every window).
+    ///
+    /// Fork-aware by construction: the draft writes already went
+    /// through `write_kv`'s copy-on-write, so chunks shared with a
+    /// parent or child were cloned before being dirtied — truncating
+    /// one side never exposes draft garbage to the other.
+    pub fn truncate(&mut self, len: usize) -> Result<()> {
+        ensure!(
+            len <= self.len,
+            "truncate to {len} positions but only {} are resident",
+            self.len
+        );
+        ensure!(
+            self.len <= self.capacity || self.len <= len + 1,
+            "truncate to {len}: the ring (capacity {}, {} positions written) has \
+             wrapped over retained positions — rolled-back rows cannot be restored",
+            self.capacity,
+            self.len
+        );
+        self.len = len;
+        Ok(())
+    }
+
     /// One layer's K row at ring slot `slot` (read path). Ring indexing
     /// is the backend's contract: absolute position `pos` lives at slot
     /// `pos % capacity`, and the attention window for a query at `pos`
@@ -422,6 +459,49 @@ pub trait Backend {
         }
         Ok(out)
     }
+
+    /// Serving entry point for speculative decoding: a multi-token
+    /// *cached* forward per slot that returns logits at **every**
+    /// position of the chunk, not just the final one. Slot `i` runs
+    /// `chunks[i]` (its last sampled token followed by the draft) at
+    /// absolute positions `positions[i]..` (must equal
+    /// `caches[i].len()`), appending each position's K/V to its own
+    /// cache; row `i` of the result is slot `i`'s stacked logits,
+    /// `chunks[i].len() * vocab` floats (position-major).
+    ///
+    /// K/V for *all* draft positions lands in the cache — the caller
+    /// verifies the draft against the returned logits and rolls the
+    /// rejected suffix back with [`KvCache::truncate`]. Backends that
+    /// can stack every slot's rows into one ragged activation matrix
+    /// (the host backend) override this so the whole tick is one GEMM
+    /// per projection; the default loops [`Backend::decode_step`]
+    /// position by position, which keeps the batched and per-token
+    /// paths semantically interchangeable.
+    fn verify_step(
+        &self,
+        host: &[Vec<f32>],
+        chunks: &[&[i32]],
+        positions: &[usize],
+        caches: &mut [&mut KvCache],
+    ) -> Result<Vec<Vec<f32>>> {
+        ensure!(
+            chunks.len() == positions.len() && chunks.len() == caches.len(),
+            "verify_step: {} chunks, {} positions, {} caches",
+            chunks.len(),
+            positions.len(),
+            caches.len()
+        );
+        let mut out = Vec::with_capacity(chunks.len());
+        for ((tokens, &start), cache) in chunks.iter().zip(positions).zip(caches.iter_mut()) {
+            ensure!(!tokens.is_empty(), "verify_step: empty token chunk");
+            let mut rows = Vec::new();
+            for (j, &tok) in tokens.iter().enumerate() {
+                rows.extend_from_slice(&self.decode_step(host, tok, start + j, cache)?);
+            }
+            out.push(rows);
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -513,6 +593,86 @@ mod tests {
         fill(&mut wrapped, 6);
         let err = KvCache::copy_prefix(&wrapped, 4, 64).unwrap_err();
         assert!(format!("{err:#}").contains("wrapped"), "{err:#}");
+    }
+
+    #[test]
+    fn truncate_rolls_back_across_a_chunk_boundary() {
+        // capacity 40 = 3 chunks; fill past the first 16-position chunk,
+        // roll back across the boundary, and re-decode different rows
+        let mut cache = tiny_cache(40);
+        fill(&mut cache, 20);
+        cache.truncate(10).unwrap();
+        assert_eq!(cache.len(), 10);
+        // retained prefix is untouched
+        assert_eq!(cache.k_row(0, 9)[0], 10.0);
+        assert_eq!(cache.v_row(0, 9)[0], -10.0);
+        // new writes land where the rolled-back rows were (both sides of
+        // the chunk-1 boundary at slot 16)
+        let kd = cache.kv_dim();
+        for p in 10..18 {
+            for layer in 0..cache.n_layers() {
+                cache.write_kv(layer, p, &vec![100.0 + p as f32; kd], &vec![0.5; kd]);
+            }
+            cache.advance(1);
+        }
+        assert_eq!(cache.len(), 18);
+        assert_eq!(cache.k_row(0, 12)[0], 112.0);
+        assert_eq!(cache.k_row(0, 17)[0], 117.0);
+        // rolling back below zero-length is fine; beyond len is not
+        assert!(cache.truncate(19).is_err());
+        cache.truncate(0).unwrap();
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn truncate_is_wrap_aware() {
+        // wrapped ring (6 positions into capacity 4): positions 4, 5
+        // overwrote 0, 1 — rolling back one position is safe (slot
+        // `len % capacity` frees exactly when its wrapped-out position
+        // leaves every window) but deeper rollback cannot restore the
+        // clobbered rows and must be refused
+        let mut cache = tiny_cache(4);
+        fill(&mut cache, 6);
+        let err = cache.truncate(3).unwrap_err();
+        assert!(format!("{err:#}").contains("wrapped"), "{err:#}");
+        cache.truncate(5).unwrap();
+        assert_eq!(cache.len(), 5);
+        // an unwrapped ring rolls back anywhere
+        let mut flat = tiny_cache(8);
+        fill(&mut flat, 8); // full but never wrapped
+        flat.truncate(2).unwrap();
+        assert_eq!(flat.len(), 2);
+        assert_eq!(flat.k_row(0, 1)[0], 2.0);
+    }
+
+    #[test]
+    fn truncate_on_a_cow_fork_leaves_the_parent_intact() {
+        let mut parent = tiny_cache(40);
+        fill(&mut parent, 6);
+        let mut child = KvCache::fork_from(&parent, 6).unwrap();
+        // the child speculates: draft rows at positions 6..9, then the
+        // verifier rejects them all
+        let kd = child.kv_dim();
+        for p in 6..9 {
+            for layer in 0..child.n_layers() {
+                child.write_kv(layer, p, &vec![9.9; kd], &vec![9.9; kd]);
+            }
+            child.advance(1);
+        }
+        child.truncate(6).unwrap();
+        assert_eq!(child.len(), 6);
+        // the parent never saw the draft writes (COW cloned the shared
+        // chunk before it was dirtied) and keeps its own tip
+        assert_eq!(parent.len(), 6);
+        for p in 0..6 {
+            assert_eq!(parent.k_row(0, p)[0], p as f32 + 1.0);
+            assert_eq!(parent.v_row(0, p)[0], -(p as f32) - 1.0);
+        }
+        // the parent can keep appending from its tip as if never forked
+        fill(&mut parent, 2);
+        assert_eq!(parent.k_row(0, 7)[0], 8.0);
+        // and the child's retained prefix still reads the shared rows
+        assert_eq!(child.k_row(0, 5)[0], 6.0);
     }
 
     #[test]

@@ -301,4 +301,15 @@ impl Backend for PjrtBackend {
              contain no prefill/decode graphs — serve with --backend host"
         ))
     }
+
+    // Explicit (not the looping default) so speculative decoding fails
+    // once, clearly, instead of from the first draft position's
+    // decode_step.
+    fn verify_step(&self, _host: &[Vec<f32>], _chunks: &[&[i32]], _positions: &[usize],
+                   _caches: &mut [&mut KvCache]) -> Result<Vec<Vec<f32>>> {
+        Err(anyhow!(
+            "pjrt backend does not support incremental decode: the AOT artifacts \
+             contain no prefill/decode graphs — serve with --backend host"
+        ))
+    }
 }

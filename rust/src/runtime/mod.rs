@@ -242,6 +242,23 @@ impl Session {
         self.backend.decode_batch(&self.host, tokens, positions, caches)
     }
 
+    /// Serve: speculative verification — run each slot's
+    /// `[last_token, draft...]` chunk through one multi-token cached
+    /// forward (slot `i`: `chunks[i]` at absolute positions
+    /// `positions[i]..` = `caches[i].len()..`) and return logits at
+    /// **every** chunk position (`chunks[i].len() * vocab` floats per
+    /// slot, position-major). The caller accepts the longest verified
+    /// draft prefix and rolls rejected K/V back with
+    /// [`KvCache::truncate`].
+    pub fn verify_step(
+        &self,
+        chunks: &[&[i32]],
+        positions: &[usize],
+        caches: &mut [&mut KvCache],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.backend.verify_step(&self.host, chunks, positions, caches)
+    }
+
     /// Fused Adam update of parameter `idx` on the hot path: consumes
     /// grad + moments, updates the parameter in place (host mirror and
     /// any backend copy), returns (m', v', sum(g^2)).

@@ -19,12 +19,22 @@
 //!   trie whose entries are prefilled prompts; a new request forks the
 //!   longest matching prefix (`KvCache::fork_from`, copy-on-write at
 //!   ring-chunk granularity) and prefills only its novel suffix.
+//! - [`spec`] — speculative decoding: a self-drafting n-gram proposer
+//!   over each stream's own token history, the multi-token acceptance
+//!   walk against `Backend::verify_step`'s stacked logits, and the
+//!   adaptive draft-length controller. Greedy *and* seeded-sampled
+//!   output is bit-identical with speculation on or off (the
+//!   acceptance walk consumes the same RNG stream sequential decode
+//!   would); only the number of forwards changes.
 //! - [`scheduler`] — continuous batching: a request queue with
 //!   token-budget admission, per-slot KV caches, iteration-level
 //!   scheduling (new requests are admitted the moment finished ones
 //!   free slots), shared-prefix admission grouping with one stacked
-//!   `prefill_batch` forward per wave, and per-request TTFT /
-//!   tokens-per-second / prefix-reuse metrics through `util::metrics`.
+//!   `prefill_batch` forward per wave, chunked prefill
+//!   (`SchedulerCfg::prefill_chunk`) so giant prompts never stall
+//!   in-flight decode, speculative multi-token ticks through one
+//!   ragged `verify_step`, and per-request TTFT / tokens-per-second /
+//!   prefix-reuse / draft-acceptance metrics through `util::metrics`.
 //!   Powers `misa bench-serve`.
 //!
 //! Memory accounting: one slot's KV cache holds
@@ -44,8 +54,10 @@ pub mod cache_store;
 pub mod generate;
 pub mod sampler;
 pub mod scheduler;
+pub mod spec;
 
 pub use cache_store::{CacheStats, CacheStore, CacheStoreCfg};
 pub use generate::{generate, GenerateCfg, Generation};
 pub use sampler::{argmax, sample, SamplerCfg};
 pub use scheduler::{Completion, FinishReason, Request, Scheduler, SchedulerCfg};
+pub use spec::{DraftCtl, SpecCfg, SpecStats};

@@ -1,0 +1,405 @@
+//! Speculative decoding: a self-drafting n-gram proposer plus the
+//! multi-token acceptance walk.
+//!
+//! Decode emits one token per forward pass, so latency is bound by
+//! model depth rather than arithmetic throughput. Speculative decoding
+//! converts several sequential decode steps into one stacked
+//! verification forward: a cheap proposer guesses up to `k` draft
+//! tokens, `Backend::verify_step` runs `[last_token, draft...]` as one
+//! multi-token cached forward returning logits at *every* position,
+//! and the longest draft prefix the model itself would have produced
+//! is accepted — together with the model's one corrective (or bonus)
+//! token from the row after the last accepted draft. Rejected draft
+//! positions are rolled out of the KV cache with
+//! `KvCache::truncate`. The same accept-only-what-verifies idea MISA
+//! applies to sampled modules in training, applied to decode work.
+//!
+//! No second model is needed: the proposer is prompt-lookup / n-gram
+//! matching over the slot's own token history ([`propose`]) — serving
+//! workloads are full of repeated structure (retrieval spans, code,
+//! template continuations), and whenever the recent suffix occurred
+//! earlier, whatever followed it then is a strong guess for what
+//! follows now. [`DraftCtl`] adapts the draft length per slot: full
+//! acceptance grows it back toward the configured cap, zero acceptance
+//! halves it, so slots whose history stops predicting pay for at most
+//! a halving cascade rather than `k` wasted rows per tick.
+//!
+//! **Exact parity.** The acceptance walk ([`accept`]) samples each
+//! verified row with the *same* sampler and the *same* per-request RNG
+//! stream the sequential loop would have used, and the host backend's
+//! verify rows are bit-identical to sequential `decode_step` rows (one
+//! GEMM core, fixed per-row reduction order). By induction, every
+//! emitted token — greedy *or* seeded-sampled — equals the token the
+//! non-speculative loop would have emitted; drafting changes
+//! wall-clock, never output. `rust/tests/serve.rs` pins this, and the
+//! entire test suite can be re-run with speculation forced on via
+//! `MISA_SPEC` (see [`SpecCfg::from_env`]).
+
+use anyhow::{ensure, Result};
+
+use crate::serve::sampler::{sample, SamplerCfg};
+use crate::util::Rng;
+
+/// Speculative-decoding configuration (per scheduler or generation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpecCfg {
+    /// Maximum draft tokens proposed per slot per tick (`k`). The
+    /// verify chunk is `k + 1` rows (the last sampled token plus the
+    /// draft), so a fully accepted tick advances `k + 1` tokens.
+    pub draft_len: usize,
+    /// Longest history suffix the proposer tries to match (it backs
+    /// off `ngram..=1` until a match is found).
+    pub ngram: usize,
+}
+
+impl Default for SpecCfg {
+    fn default() -> Self {
+        SpecCfg { draft_len: 4, ngram: 3 }
+    }
+}
+
+impl SpecCfg {
+    /// Reject configurations the drafting loop cannot execute.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.draft_len >= 1, "spec: draft-len must be >= 1");
+        ensure!(self.ngram >= 1, "spec: ngram must be >= 1");
+        Ok(())
+    }
+
+    /// The `MISA_SPEC` environment default: unset, `0`, or unparseable
+    /// disables speculation (`None`); `MISA_SPEC=k` enables it with
+    /// `draft_len = k` and the default n-gram order. `GenerateCfg` and
+    /// `SchedulerCfg` defaults read this, so `MISA_SPEC=4 cargo test`
+    /// re-runs the whole suite speculatively — and, because parity is
+    /// exact, it must pass identically (a CI job pins that).
+    pub fn from_env() -> Option<SpecCfg> {
+        match std::env::var("MISA_SPEC").ok()?.parse::<usize>() {
+            Ok(k) if k >= 1 => Some(SpecCfg { draft_len: k, ..SpecCfg::default() }),
+            _ => None,
+        }
+    }
+}
+
+/// Aggregate drafting counters — `misa bench-serve --json` exports
+/// them as `drafted_tokens` / `accepted_tokens` / `acceptance_rate`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpecStats {
+    /// Draft tokens proposed to the verifier.
+    pub drafted: u64,
+    /// Draft tokens the model verified and accepted.
+    pub accepted: u64,
+}
+
+impl SpecStats {
+    /// `accepted / drafted` (0 when nothing was drafted).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+
+    /// Fold one slot-tick's outcome into the totals.
+    pub fn record(&mut self, drafted: usize, accepted: usize) {
+        self.drafted += drafted as u64;
+        self.accepted += accepted as u64;
+    }
+}
+
+/// Per-slot adaptive draft length: starts at the configured cap, is
+/// halved (floor 1) by a tick with zero accepted drafts, grown back by
+/// one by a fully accepted tick, and held by partial acceptance —
+/// slots whose history predicts well speculate deep, slots that stop
+/// predicting back off geometrically instead of burning `k` verify
+/// rows per tick.
+#[derive(Clone, Copy, Debug)]
+pub struct DraftCtl {
+    cur: usize,
+}
+
+impl DraftCtl {
+    /// Start at the configured draft cap.
+    pub fn new(cfg: &SpecCfg) -> Self {
+        DraftCtl { cur: cfg.draft_len.max(1) }
+    }
+
+    /// Draft tokens this slot should attempt next tick.
+    pub fn draft_len(&self) -> usize {
+        self.cur
+    }
+
+    /// Fold one tick's outcome into the back-off state.
+    pub fn record(&mut self, cfg: &SpecCfg, drafted: usize, accepted: usize) {
+        if drafted == 0 {
+            return; // nothing proposed: no evidence either way
+        }
+        if accepted == drafted {
+            self.cur = (self.cur + 1).min(cfg.draft_len.max(1));
+        } else if accepted == 0 {
+            self.cur = (self.cur / 2).max(1);
+        }
+    }
+}
+
+/// Longest draft a slot may attempt this tick.
+///
+/// Two caps compose with the adaptive length `ctl_len`:
+/// - the verify chunk (`1 + draft`) must not wrap the ring past
+///   `capacity` written positions, or the rejected suffix could not be
+///   rolled back exactly (`KvCache::truncate` is refused once rolled-
+///   back writes clobber retained positions) — a slot at or past its
+///   ring capacity simply decodes one token per tick through the same
+///   verify path;
+/// - a fully accepted tick emits `draft + 1` tokens, which must not
+///   exceed the request's remaining token allowance, so speculation
+///   never drafts rows the request could not use.
+pub fn draft_budget(ctl_len: usize, cache_len: usize, capacity: usize, remaining: usize) -> usize {
+    ctl_len
+        .min(capacity.saturating_sub(cache_len + 1))
+        .min(remaining.saturating_sub(1))
+}
+
+/// Prompt-lookup drafting: propose up to `k` tokens by matching the
+/// longest suffix n-gram (order `ngram` backing off to 1) of `history`
+/// against its own earlier occurrences and replaying what followed the
+/// **earliest** one. Returns an empty draft when no suffix recurs —
+/// the tick then degrades to a plain one-token decode through the
+/// verify path. Proposed tokens come verbatim from `history`, so they
+/// are always in-vocabulary.
+///
+/// The earliest occurrence (not the most recent) is deliberate: on a
+/// periodic stream — exactly where self-drafting shines — the most
+/// recent match ends right before the suffix itself and leaves almost
+/// no recorded continuation to replay, while the earliest match has
+/// the whole rest of the history behind it, so the draft fills the
+/// full `k` budget. The scan is O(`history.len() * ngram`) per order
+/// in the worst case; slot histories here are serving-scale (hundreds
+/// of positions), so the proposer costs microseconds against a
+/// multi-millisecond forward.
+pub fn propose(history: &[i32], ngram: usize, k: usize) -> Vec<i32> {
+    let len = history.len();
+    if k == 0 || len < 2 {
+        return Vec::new();
+    }
+    for n in (1..=ngram.min(len - 1)).rev() {
+        let pat = &history[len - n..];
+        // earliest occurrence whose match ends strictly before the
+        // suffix itself, so the continuation is recorded history
+        for s in 0..len - n {
+            if &history[s..s + n] == pat {
+                let from = s + n;
+                let take = k.min(len - from);
+                return history[from..from + take].to_vec();
+            }
+        }
+    }
+    Vec::new()
+}
+
+/// Assemble one slot's verify chunk: its last sampled token (the final
+/// element of `history`, which has not been fed to the model yet)
+/// followed by the history-drafted continuation. Returns `(chunk,
+/// drafts)`. Shared by the solo generate loop, the scheduler's batched
+/// tick, and the parity tests, so the `[last, draft...]` layout — which
+/// the acceptance walk and the `start + 1 + accepted` rollback length
+/// both assume — lives in exactly one place.
+pub fn draft_chunk(history: &[i32], ngram: usize, budget: usize) -> (Vec<i32>, Vec<i32>) {
+    let last = *history.last().expect("a stream always holds at least one token");
+    let drafts = propose(history, ngram, budget);
+    let mut chunk = Vec::with_capacity(1 + drafts.len());
+    chunk.push(last);
+    chunk.extend_from_slice(&drafts);
+    (chunk, drafts)
+}
+
+/// The acceptance walk over one slot's verify output.
+///
+/// `rows` is `(drafts.len() + 1) * vocab` stacked logits — row `j` is
+/// the model's next-token distribution after consuming the last
+/// sampled token and the first `j` draft tokens. Each row is sampled
+/// with the slot's own sampler and RNG stream, exactly as the
+/// sequential loop would have: row 0's sample is the token sequential
+/// decode would emit next; if it equals `drafts[0]`, row 1's context
+/// matches the sequential loop's next step, so its sample is the
+/// *following* sequential token, and so on by induction. The walk
+/// stops at the first sampled token that diverges from its draft (the
+/// corrective token) or after sampling the row past the full draft
+/// (the bonus token).
+///
+/// Returns `(emitted, accepted)`: `emitted` are the `accepted + 1`
+/// tokens the sequential loop would have produced this tick, and
+/// `accepted` (`= emitted.len() - 1`) is how many draft positions —
+/// and therefore how many cache positions — survive the rollback.
+pub fn accept(
+    rows: &[f32],
+    vocab: usize,
+    drafts: &[i32],
+    sampler: &SamplerCfg,
+    rng: &mut Rng,
+) -> (Vec<i32>, usize) {
+    let n_rows = drafts.len() + 1;
+    debug_assert_eq!(rows.len(), n_rows * vocab, "verify rows do not match the draft");
+    let mut emitted = Vec::with_capacity(n_rows);
+    for j in 0..n_rows {
+        let x = sample(&rows[j * vocab..(j + 1) * vocab], sampler, rng) as i32;
+        emitted.push(x);
+        if j >= drafts.len() || x != drafts[j] {
+            break;
+        }
+    }
+    let accepted = emitted.len() - 1;
+    (emitted, accepted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn propose_replays_the_earliest_matching_continuation() {
+        // suffix [7, 8] occurred earlier twice; the earliest occurrence
+        // (indices 1..3) wins and its full continuation is replayed
+        let h = [1, 7, 8, 9, 2, 7, 8, 5, 6, 7, 8];
+        assert_eq!(propose(&h, 3, 4), vec![9, 2, 7, 8]);
+        assert_eq!(propose(&h, 3, 2), vec![9, 2]);
+        assert_eq!(propose(&h, 8, 1), vec![9]);
+        // no recurrence → no draft
+        assert_eq!(propose(&[1, 2, 3, 4], 3, 4), Vec::<i32>::new());
+        // degenerate histories
+        assert_eq!(propose(&[5], 3, 4), Vec::<i32>::new());
+        assert_eq!(propose(&[], 3, 4), Vec::<i32>::new());
+        assert_eq!(propose(&h, 3, 0), Vec::<i32>::new());
+    }
+
+    #[test]
+    fn propose_prefers_longer_ngrams_and_fills_on_periodic_streams() {
+        // suffix ...[2, 9]: the order-2 match (at index 1, continuing
+        // with 4) must win over the order-1 matches on [9] alone
+        let h = [1, 2, 9, 4, 9, 7, 2, 9];
+        assert_eq!(propose(&h, 2, 1), vec![4]);
+        assert_eq!(propose(&h, 1, 2), vec![4, 9], "order-1 earliest [9] is index 2");
+        // periodic stream: the earliest match leaves a full-budget
+        // continuation (a most-recent matcher would see one token)
+        let p = [5, 6, 7, 5, 6, 7, 5, 6, 7];
+        assert_eq!(propose(&p, 3, 4), vec![5, 6, 7, 5]);
+    }
+
+    #[test]
+    fn draft_chunk_prepends_the_unfed_last_token() {
+        let h = [5, 6, 7, 5, 6, 7, 5, 6, 7];
+        let (chunk, drafts) = draft_chunk(&h, 3, 4);
+        assert_eq!(drafts, vec![5, 6, 7, 5]);
+        assert_eq!(chunk, vec![7, 5, 6, 7, 5]);
+        // no recurrence → the chunk degrades to the bare last token
+        let (chunk, drafts) = draft_chunk(&[1, 2, 3], 3, 4);
+        assert!(drafts.is_empty());
+        assert_eq!(chunk, vec![3]);
+    }
+
+    #[test]
+    fn accept_walks_greedy_rows_against_the_draft() {
+        // vocab 4; rows' argmaxes: 2, 1, 3
+        let rows = [
+            0.0, 0.1, 0.9, 0.2, // argmax 2
+            0.0, 0.8, 0.1, 0.2, // argmax 1
+            0.1, 0.0, 0.2, 0.9, // argmax 3
+        ];
+        let greedy = SamplerCfg::greedy();
+        let mut rng = Rng::new(1);
+        // full acceptance: drafts equal the argmax chain → bonus token
+        let (em, acc) = accept(&rows, 4, &[2, 1], &greedy, &mut rng);
+        assert_eq!((em, acc), (vec![2, 1, 3], 2));
+        // first-draft mismatch: the corrective token is row 0's sample
+        let (em, acc) = accept(&rows[..8], 4, &[0], &greedy, &mut rng);
+        assert_eq!((em, acc), (vec![2], 0));
+        // partial: first draft verifies, second diverges
+        let (em, acc) = accept(&rows, 4, &[2, 0], &greedy, &mut rng);
+        assert_eq!((em, acc), (vec![2, 1], 1));
+        // empty draft: plain decode through the verify path
+        let (em, acc) = accept(&rows[..4], 4, &[], &greedy, &mut rng);
+        assert_eq!((em, acc), (vec![2], 0));
+    }
+
+    #[test]
+    fn accept_consumes_the_same_rng_stream_as_sequential_sampling() {
+        // sampled (non-greedy) acceptance draws once per emitted token,
+        // in row order — exactly the sequential loop's stream
+        let rows: Vec<f32> = (0..3)
+            .flat_map(|j| (0..5).map(move |i| ((i * 7 + j * 3) % 5) as f32 * 0.3))
+            .collect();
+        let cfg = SamplerCfg { temperature: 0.9, top_k: 4, top_p: 0.95 };
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        // sequential reference: sample row by row while drafts match
+        let mut want = Vec::new();
+        let drafts = {
+            // pre-compute what the stream emits so the draft fully matches
+            let mut probe = Rng::new(9);
+            (0..2)
+                .map(|j| sample(&rows[j * 5..(j + 1) * 5], &cfg, &mut probe) as i32)
+                .collect::<Vec<i32>>()
+        };
+        for j in 0..3 {
+            want.push(sample(&rows[j * 5..(j + 1) * 5], &cfg, &mut a) as i32);
+            if j < 2 && want[j] != drafts[j] {
+                break;
+            }
+        }
+        let (em, acc) = accept(&rows, 5, &drafts, &cfg, &mut b);
+        assert_eq!(em, want);
+        assert_eq!(acc, em.len() - 1);
+        // both RNGs sit at the same stream position afterwards
+        assert_eq!(a.f64().to_bits(), b.f64().to_bits());
+    }
+
+    #[test]
+    fn draft_budget_respects_ring_and_allowance() {
+        // plenty of room: the adaptive length rules
+        assert_eq!(draft_budget(4, 10, 64, 20), 4);
+        // verify chunk may not wrap: 1 + m <= capacity - cache_len
+        assert_eq!(draft_budget(4, 62, 64, 20), 1);
+        assert_eq!(draft_budget(4, 63, 64, 20), 0);
+        assert_eq!(draft_budget(4, 70, 64, 20), 0, "wrapped slots decode one by one");
+        // a fully accepted tick emits m + 1 tokens <= remaining
+        assert_eq!(draft_budget(4, 10, 64, 3), 2);
+        assert_eq!(draft_budget(4, 10, 64, 1), 0);
+    }
+
+    #[test]
+    fn draft_ctl_backs_off_and_recovers() {
+        let cfg = SpecCfg { draft_len: 8, ngram: 3 };
+        let mut ctl = DraftCtl::new(&cfg);
+        assert_eq!(ctl.draft_len(), 8);
+        ctl.record(&cfg, 8, 0); // zero acceptance: halve
+        assert_eq!(ctl.draft_len(), 4);
+        ctl.record(&cfg, 4, 0);
+        ctl.record(&cfg, 2, 0);
+        ctl.record(&cfg, 1, 0);
+        assert_eq!(ctl.draft_len(), 1, "floor is 1, never 0");
+        ctl.record(&cfg, 1, 1); // full acceptance: grow by one
+        assert_eq!(ctl.draft_len(), 2);
+        ctl.record(&cfg, 2, 1); // partial: hold
+        assert_eq!(ctl.draft_len(), 2);
+        ctl.record(&cfg, 0, 0); // no draft: no evidence
+        assert_eq!(ctl.draft_len(), 2);
+        for _ in 0..10 {
+            ctl.record(&cfg, 2, 2);
+        }
+        assert_eq!(ctl.draft_len(), 8, "growth is capped at the configured draft_len");
+    }
+
+    #[test]
+    fn spec_stats_and_cfg_validate() {
+        let mut st = SpecStats::default();
+        assert_eq!(st.acceptance_rate(), 0.0);
+        st.record(4, 3);
+        st.record(2, 0);
+        assert_eq!(st.drafted, 6);
+        assert_eq!(st.accepted, 3);
+        assert!((st.acceptance_rate() - 0.5).abs() < 1e-12);
+        assert!(SpecCfg::default().validate().is_ok());
+        assert!(SpecCfg { draft_len: 0, ngram: 3 }.validate().is_err());
+        assert!(SpecCfg { draft_len: 4, ngram: 0 }.validate().is_err());
+    }
+}

@@ -183,7 +183,7 @@ fn train_checkpoint_generate_roundtrip_is_deterministic() {
         max_new: 10,
         sampler: SamplerCfg { temperature: 0.7, top_k: 24, top_p: 0.9 },
         seed: 5,
-        eos: None,
+        ..GenerateCfg::default()
     };
     let mut outs = Vec::new();
     for _ in 0..2 {
@@ -206,7 +206,7 @@ fn scheduler_end_to_end_over_session() {
     let mut sched = Scheduler::new(SchedulerCfg {
         max_slots: 3,
         token_budget: 128,
-        prefix_cache: None,
+        ..SchedulerCfg::default()
     });
     let mk = |id: u64, plen: usize, max_new: usize| Request {
         id,
@@ -229,7 +229,13 @@ fn scheduler_end_to_end_over_session() {
         let solo = generate(
             &sess,
             &r.prompt,
-            &GenerateCfg { max_new: r.max_new, sampler: r.sampler, seed: r.seed, eos: r.eos },
+            &GenerateCfg {
+                max_new: r.max_new,
+                sampler: r.sampler,
+                seed: r.seed,
+                eos: r.eos,
+                ..GenerateCfg::default()
+            },
         )
         .unwrap();
         assert_eq!(c.tokens, solo.tokens, "request {} depends on batch composition", r.id);
@@ -327,7 +333,7 @@ fn scheduler_batched_decode_matches_solo_at_thread_counts() {
         let mut sched = Scheduler::new(SchedulerCfg {
             max_slots: 4,
             token_budget: 256,
-            prefix_cache: None,
+            ..SchedulerCfg::default()
         });
         for r in &reqs {
             sched.submit(r.clone()).unwrap();
@@ -339,7 +345,13 @@ fn scheduler_batched_decode_matches_solo_at_thread_counts() {
             let solo = generate(
                 &sess,
                 &r.prompt,
-                &GenerateCfg { max_new: r.max_new, sampler: r.sampler, seed: r.seed, eos: r.eos },
+                &GenerateCfg {
+                    max_new: r.max_new,
+                    sampler: r.sampler,
+                    seed: r.seed,
+                    eos: r.eos,
+                    ..GenerateCfg::default()
+                },
             )
             .unwrap();
             assert_eq!(
@@ -513,6 +525,7 @@ fn scheduler_prefix_cache_matches_solo_and_reports_reuse() {
         max_slots: 3,
         token_budget: 512,
         prefix_cache: Some(CacheStoreCfg { capacity: 64, max_entries: 8, min_prefix: 4 }),
+        ..SchedulerCfg::default()
     });
     for r in &reqs {
         sched.submit(r.clone()).unwrap();
@@ -524,7 +537,13 @@ fn scheduler_prefix_cache_matches_solo_and_reports_reuse() {
         let solo = generate(
             &sess,
             &r.prompt,
-            &GenerateCfg { max_new: r.max_new, sampler: r.sampler, seed: r.seed, eos: r.eos },
+            &GenerateCfg {
+                max_new: r.max_new,
+                sampler: r.sampler,
+                seed: r.seed,
+                eos: r.eos,
+                ..GenerateCfg::default()
+            },
         )
         .unwrap();
         assert_eq!(
@@ -552,4 +571,218 @@ fn kv_cache_memory_accounting() {
     // tiny is GQA 4/2: kv_dim is half of dim
     assert_eq!(mc.kv_dim() * 2, mc.dim);
     assert!(cache.is_empty());
+}
+
+/// Tentpole acceptance: `verify_step`'s stacked multi-token forward
+/// must match sequential `decode_step` logits at every draft position
+/// — at `threads = 1` and `threads = 4` — and rolling a rejected
+/// draft back with `truncate` must leave the slot exactly where it
+/// was. (The implementation is bit-identical by construction; the
+/// tolerance is the contract.)
+#[test]
+fn verify_step_matches_sequential_decode_and_rolls_back() {
+    let _knob = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let (be, host) = tiny_backend();
+    let spec = Manifest::builtin().model("tiny").unwrap().clone();
+    let vocab = 256usize;
+    for &threads in &[1usize, 4] {
+        misa::tensor::set_threads(threads);
+        let prompts: Vec<Vec<i32>> = (0..3)
+            .map(|i| random_prompt(3 + 2 * i, vocab, 140 + i as u64))
+            .collect();
+        // arbitrary ragged "draft" chunks of 2..=4 tokens per slot
+        let chunks_tok: Vec<Vec<i32>> = (0..3)
+            .map(|i| random_prompt(2 + i, vocab, 240 + i as u64))
+            .collect();
+        let mut vcaches: Vec<KvCache> = Vec::new();
+        let mut rcaches: Vec<KvCache> = Vec::new();
+        for p in &prompts {
+            let mut cv = KvCache::new(&spec, 32).unwrap();
+            be.prefill(&host, p, &mut cv).unwrap();
+            vcaches.push(cv);
+            let mut cr = KvCache::new(&spec, 32).unwrap();
+            be.prefill(&host, p, &mut cr).unwrap();
+            rcaches.push(cr);
+        }
+        let starts: Vec<usize> = vcaches.iter().map(|c| c.len()).collect();
+        let rows = {
+            let chunks: Vec<&[i32]> = chunks_tok.iter().map(|c| c.as_slice()).collect();
+            let mut refs: Vec<&mut KvCache> = vcaches.iter_mut().collect();
+            be.verify_step(&host, &chunks, &starts, &mut refs).unwrap()
+        };
+        for (slot, chunk) in chunks_tok.iter().enumerate() {
+            assert_eq!(rows[slot].len(), chunk.len() * vocab);
+            for (j, &tk) in chunk.iter().enumerate() {
+                let want = be
+                    .decode_step(&host, tk, rcaches[slot].len(), &mut rcaches[slot])
+                    .unwrap();
+                let got = &rows[slot][j * vocab..(j + 1) * vocab];
+                let mut max_err = 0.0f32;
+                for (a, b) in got.iter().zip(&want) {
+                    max_err = max_err.max((a - b).abs());
+                }
+                assert!(
+                    max_err < 1e-5,
+                    "threads={threads} slot={slot} pos={j}: verify diverged \
+                     (max |Δ| {max_err})"
+                );
+                assert_eq!(
+                    misa::serve::argmax(got),
+                    misa::serve::argmax(&want),
+                    "threads={threads} slot={slot} pos={j}: argmax diverged"
+                );
+            }
+        }
+        // rollback: rejecting the whole draft must leave each slot
+        // exactly where it was — the next real decode step matches a
+        // stream that never speculated
+        for (slot, &start) in starts.iter().enumerate() {
+            assert_eq!(vcaches[slot].len(), start + chunks_tok[slot].len());
+            vcaches[slot].truncate(start).unwrap();
+            let mut fresh = KvCache::new(&spec, 32).unwrap();
+            be.prefill(&host, &prompts[slot], &mut fresh).unwrap();
+            let a = be
+                .decode_step(&host, 7, vcaches[slot].len(), &mut vcaches[slot])
+                .unwrap();
+            let b = be.decode_step(&host, 7, fresh.len(), &mut fresh).unwrap();
+            let mut max_err = 0.0f32;
+            for (x, y) in a.iter().zip(&b) {
+                max_err = max_err.max((x - y).abs());
+            }
+            assert!(
+                max_err < 1e-5,
+                "threads={threads} slot={slot}: post-rollback decode diverged \
+                 (max |Δ| {max_err})"
+            );
+        }
+    }
+    misa::tensor::set_threads(0);
+}
+
+/// Tentpole acceptance: the speculative loop must emit exactly the
+/// greedy sequential tokens on a slot whose ring buffer *wraps*
+/// mid-stream — drafting backs off to single-token verification as the
+/// ring fills (rollback past a wrap would be impossible), and
+/// positions keep advancing in sliding-window attention. Run at
+/// `threads = 1` and `threads = 4`.
+#[test]
+fn spec_decode_on_a_wrapping_ring_matches_sequential_greedy() {
+    use misa::serve::spec::{accept, draft_budget, draft_chunk};
+    use misa::serve::{DraftCtl, SamplerCfg, SpecCfg};
+    let _knob = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let (be, host) = tiny_backend();
+    let spec = Manifest::builtin().model("tiny").unwrap().clone();
+    let capacity = 12;
+    let max_new = 13usize;
+    let prompt = vec![1, 8, 9, 8, 9]; // recurring bigram: drafting engages early
+    for &threads in &[1usize, 4] {
+        misa::tensor::set_threads(threads);
+        // sequential greedy reference on the same ring layout
+        let mut rc = KvCache::new(&spec, capacity).unwrap();
+        let mut rl = be.prefill(&host, &prompt, &mut rc).unwrap();
+        let mut want = vec![misa::serve::argmax(&rl) as i32];
+        while want.len() < max_new {
+            let last = *want.last().unwrap();
+            rl = be.decode_step(&host, last, rc.len(), &mut rc).unwrap();
+            want.push(misa::serve::argmax(&rl) as i32);
+        }
+        assert!(rc.len() > rc.capacity(), "the reference ring must wrap");
+        // speculative stream: draft, verify, accept, roll back
+        let scfg = SpecCfg { draft_len: 3, ngram: 2 };
+        let greedy = SamplerCfg::greedy();
+        let mut ctl = DraftCtl::new(&scfg);
+        let mut rng = Rng::new(0); // greedy draws nothing; the API needs a stream
+        let mut vc = KvCache::new(&spec, capacity).unwrap();
+        let vl = be.prefill(&host, &prompt, &mut vc).unwrap();
+        let mut got = vec![misa::serve::argmax(&vl) as i32];
+        let mut history = prompt.clone();
+        history.extend_from_slice(&got);
+        while got.len() < max_new {
+            let remaining = max_new - got.len();
+            let budget = draft_budget(ctl.draft_len(), vc.len(), vc.capacity(), remaining);
+            let (chunk, drafts) = draft_chunk(&history, scfg.ngram, budget);
+            let start = vc.len();
+            let rows = {
+                let mut refs = [&mut vc];
+                be.verify_step(&host, &[chunk.as_slice()], &[start], &mut refs).unwrap()
+            };
+            let (emitted, accepted) = accept(&rows[0], 256, &drafts, &greedy, &mut rng);
+            ctl.record(&scfg, drafts.len(), accepted);
+            for &x in &emitted {
+                got.push(x);
+                history.push(x);
+                if got.len() >= max_new {
+                    break;
+                }
+            }
+            vc.truncate(start + 1 + accepted).unwrap();
+        }
+        assert_eq!(got, want, "threads={threads}: speculation changed a wrapping stream");
+        assert!(vc.len() > vc.capacity(), "the speculative ring must wrap too");
+    }
+    misa::tensor::set_threads(0);
+}
+
+/// Tentpole acceptance: scheduled speculative generation equals plain
+/// solo generation for every request — greedy and seeded-sampled — at
+/// `threads = 1` and `threads = 4`.
+#[test]
+fn spec_scheduler_matches_plain_solo_across_thread_counts() {
+    use misa::serve::SpecCfg;
+    let _knob = THREAD_KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let mut eng = Engine::host();
+    let sess = Session::create(&mut eng, "tiny", 21).unwrap();
+    for &threads in &[1usize, 4] {
+        misa::tensor::set_threads(threads);
+        let reqs: Vec<Request> = (0..4)
+            .map(|i| {
+                let t = 30 + i as i32;
+                Request {
+                    id: i,
+                    // recurring structure so the proposer has material
+                    prompt: vec![1, t, t + 1, t, t + 1, t],
+                    max_new: 6 + i as usize,
+                    sampler: if i % 2 == 0 {
+                        SamplerCfg::greedy()
+                    } else {
+                        SamplerCfg { temperature: 0.8, top_k: 16, top_p: 0.9 }
+                    },
+                    seed: 600 + i,
+                    eos: None,
+                }
+            })
+            .collect();
+        let mut sched = Scheduler::new(SchedulerCfg {
+            max_slots: 4,
+            token_budget: 256,
+            spec: Some(SpecCfg { draft_len: 4, ngram: 3 }),
+            ..SchedulerCfg::default()
+        });
+        for r in &reqs {
+            sched.submit(r.clone()).unwrap();
+        }
+        let mut done = sched.run(&sess).unwrap();
+        done.sort_by_key(|c| c.id);
+        for (c, r) in done.iter().zip(&reqs) {
+            let solo = generate(
+                &sess,
+                &r.prompt,
+                &GenerateCfg {
+                    max_new: r.max_new,
+                    sampler: r.sampler,
+                    seed: r.seed,
+                    eos: r.eos,
+                    spec: None,
+                },
+            )
+            .unwrap();
+            assert_eq!(
+                c.tokens, solo.tokens,
+                "threads={threads}: request {} diverged under speculation", r.id
+            );
+        }
+        let st = sched.spec_stats().unwrap();
+        assert!(st.accepted <= st.drafted);
+    }
+    misa::tensor::set_threads(0);
 }
