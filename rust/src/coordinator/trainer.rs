@@ -153,6 +153,7 @@ impl Trainer {
 
     /// One training step; returns the train loss.
     pub fn step(&mut self) -> Result<f32> {
+        let _sp = crate::span!("train_step", "coordinator");
         let batch = self.train.next_batch();
         let t0 = std::time::Instant::now();
         let out = self.sess.fwd_bwd(&batch)?;
@@ -170,11 +171,17 @@ impl Trainer {
             }
         }
         let t1 = std::time::Instant::now();
-        self.opt.step(&mut self.sess, &out, self.cfg.lr)?;
-        let optim_s = t1.elapsed().as_secs_f64();
+        let optim_s = {
+            let _sp = crate::span!("optim_step", "coordinator");
+            self.opt.step(&mut self.sess, &out, self.cfg.lr)?;
+            t1.elapsed().as_secs_f64()
+        };
         self.times.fwd_bwd_s += fwd_bwd_s;
         self.times.optim_s += optim_s;
         self.times.steps += 1;
+        crate::obs::metrics::observe("train.fwd_bwd_ms", fwd_bwd_s * 1e3);
+        crate::obs::metrics::observe("train.optim_ms", optim_s * 1e3);
+        crate::obs::metrics::counter_add("train.steps", 1);
         self.charge_memory();
         // total grad norm = Σ sq_norms (convergence metric, Thm. 1)
         let total_grad_sq: f64 = out.sq_norms.iter().map(|&x| x as f64).sum();

@@ -20,6 +20,9 @@
 //! Module map (see DESIGN.md for the full inventory):
 //!
 //! - [`util`] — PRNG, metrics JSONL, mini property-test harness.
+//! - [`obs`] — observability: scoped spans with Chrome-trace export,
+//!   counter/gauge/histogram registry with Prometheus-style dump,
+//!   per-request latency timelines, leveled logging.
 //! - [`tensor`] — host linear algebra for adapter/projection math.
 //! - [`modelspec`] — the parameter/module registry (the L2 ABI) +
 //!   the builtin model registry (artifact-free mirror of configs.py).
@@ -42,6 +45,7 @@ pub mod coordinator;
 pub mod data;
 pub mod memory;
 pub mod modelspec;
+pub mod obs;
 pub mod optim;
 pub mod runtime;
 pub mod serve;

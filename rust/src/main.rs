@@ -30,6 +30,7 @@ use misa::serve::{
     SpecCfg,
 };
 use misa::util::Rng;
+use misa::{log_error, log_info};
 
 fn usage() -> ! {
     eprintln!(
@@ -51,7 +52,10 @@ fn usage() -> ! {
          \x20 misa exp <name|all|list> [--full] [--artifacts DIR] [--backend B]\n\
          \x20 misa info [--artifacts DIR] [--backend B]\n\n\
          Every subcommand also takes --threads N (GEMM worker-pool width;\n\
-         default: MISA_THREADS, else 1).\n"
+         default: MISA_THREADS, else 1), --trace-out FILE (record spans and\n\
+         write a Chrome trace-event JSON on exit; also MISA_TRACE=1) and\n\
+         --metrics-out FILE (Prometheus-style metrics dump on exit).\n\
+         MISA_LOG=error|warn|info|debug sets stderr log verbosity.\n"
     );
     std::process::exit(2)
 }
@@ -63,7 +67,7 @@ const VALUED_FLAGS: &[&str] = &[
     "data", "seed", "out", "artifacts", "backend", "save-ckpt", "ckpt", "prompt",
     "max-new", "temp", "top-k", "top-p", "eos", "requests", "prompt-len", "shared-prefix",
     "slots", "token-budget", "prefix-cache-cap", "prefix-cache-entries", "prefill-chunk",
-    "draft-len", "spec-ngram", "threads", "json",
+    "draft-len", "spec-ngram", "threads", "json", "trace-out", "metrics-out",
 ];
 
 /// Boolean switches.
@@ -130,6 +134,43 @@ fn apply_threads(args: &Args) -> Result<()> {
         let n: usize = t.parse().context("--threads")?;
         anyhow::ensure!(n >= 1, "--threads must be >= 1");
         misa::tensor::set_threads(n);
+    }
+    Ok(())
+}
+
+/// Destination files for the run's observability exports, resolved
+/// from `--trace-out` / `--metrics-out` before the subcommand runs.
+struct ObsOut {
+    trace: Option<PathBuf>,
+    metrics: Option<PathBuf>,
+}
+
+/// `--trace-out FILE` switches span recording on for the whole process
+/// (same effect as `MISA_TRACE=1`); `--metrics-out FILE` needs no
+/// enablement — the metrics registry is always live. The export itself
+/// happens in [`finish_obs`] after the subcommand completes.
+fn apply_obs(args: &Args) -> ObsOut {
+    let out = ObsOut {
+        trace: args.flags.get("trace-out").map(PathBuf::from),
+        metrics: args.flags.get("metrics-out").map(PathBuf::from),
+    };
+    if out.trace.is_some() {
+        misa::obs::span::enable_tracing();
+    }
+    out
+}
+
+/// Write the Chrome trace and/or the Prometheus-style dump. Runs even
+/// when the subcommand failed, so the trace of a failing run survives.
+fn finish_obs(out: &ObsOut) -> Result<()> {
+    if let Some(path) = &out.trace {
+        let n = misa::obs::span::export_chrome_trace(path)?;
+        log_info!("trace written: {} ({n} spans)", path.display());
+    }
+    if let Some(path) = &out.metrics {
+        std::fs::write(path, misa::obs::metrics::prometheus_dump())
+            .with_context(|| format!("writing metrics dump {path:?}"))?;
+        log_info!("metrics written: {}", path.display());
     }
     Ok(())
 }
@@ -366,6 +407,13 @@ fn cmd_generate(args: &Args) -> Result<()> {
         g.decode_tps,
         g.tokens.len(),
     );
+    if !g.itl_ms.is_empty() {
+        let itl = misa::obs::LatencySummary::of(&g.itl_ms);
+        println!(
+            "itl p50 {:.3} ms · p90 {:.3} ms · p99 {:.3} ms · max {:.3} ms",
+            itl.p50, itl.p90, itl.p99, itl.max,
+        );
+    }
     if let Some(st) = g.spec {
         println!(
             "spec: {} drafted · {} accepted · acceptance {:.2}",
@@ -522,6 +570,17 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         sched.peak_active(),
         kv_bytes as f64 / (1024.0 * 1024.0),
     );
+    // pooled per-request timelines → exact percentile distributions
+    let ttft = sched.latencies().ttft();
+    let itl = sched.latencies().itl();
+    println!(
+        "ttft p50 {:.1} / p90 {:.1} / p99 {:.1} ms · \
+         itl p50 {:.3} / p90 {:.3} / p99 {:.3} ms",
+        ttft.p50, ttft.p90, ttft.p99, itl.p50, itl.p90, itl.p99,
+    );
+    // land the run's gauges + cache/spec counters in the registry so a
+    // --metrics-out dump reflects this run, not just the histograms
+    sched.publish_metrics();
     let cache_stats = sched.cache_stats();
     let stats = cache_stats.unwrap_or_default();
     if cache_stats.is_some() {
@@ -565,6 +624,12 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
             .num("aggregate_tok_s", new_tokens as f64 / wall.max(1e-9))
             .num("mean_ttft_ms", mean_ttft_ms)
             .num("mean_decode_tps", mean_tps)
+            .num("ttft_p50", ttft.p50)
+            .num("ttft_p90", ttft.p90)
+            .num("ttft_p99", ttft.p99)
+            .num("itl_p50", itl.p50)
+            .num("itl_p90", itl.p90)
+            .num("itl_p99", itl.p99)
             .num("peak_active", sched.peak_active() as f64)
             .num("peak_kv_mib", kv_bytes as f64 / (1024.0 * 1024.0))
             .nums(&[
@@ -707,14 +772,15 @@ fn main() {
     let args = match parse_args(&argv) {
         Ok(a) => a,
         Err(e) => {
-            eprintln!("error: {e:#}\n");
+            log_error!("{e:#}");
             usage();
         }
     };
     if let Err(e) = apply_threads(&args) {
-        eprintln!("error: {e:#}\n");
+        log_error!("{e:#}");
         usage();
     }
+    let obs = apply_obs(&args);
     let result = match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
         Some("generate") => cmd_generate(&args),
@@ -724,8 +790,9 @@ fn main() {
         Some("info") => cmd_info(&args),
         _ => usage(),
     };
-    if let Err(e) = result {
-        eprintln!("error: {e:#}");
+    // export even on failure, then report whichever error came first
+    if let Err(e) = result.and(finish_obs(&obs)) {
+        log_error!("{e:#}");
         std::process::exit(1);
     }
 }
@@ -884,6 +951,41 @@ mod tests {
         // without the switch the MISA_SPEC environment default applies
         let a = parse_args(&v(&["bench-serve"])).unwrap();
         assert_eq!(spec_from(&a).unwrap(), SpecCfg::from_env());
+    }
+
+    #[test]
+    fn obs_flags_parse_and_export() {
+        let dir = std::env::temp_dir();
+        let trace = dir.join("misa_cli_obs_trace.json");
+        let metrics = dir.join("misa_cli_obs_metrics.prom");
+        let a = parse_args(&v(&[
+            "bench-serve",
+            "--trace-out",
+            trace.to_str().unwrap(),
+            "--metrics-out",
+            metrics.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let out = apply_obs(&a);
+        assert!(misa::obs::span::tracing_enabled(), "--trace-out enables spans");
+        {
+            let _sp = misa::span!("cli_obs_test", "test");
+        }
+        misa::obs::metrics::counter_add("cli.obs_test", 1);
+        finish_obs(&out).unwrap();
+        misa::obs::span::disable_tracing();
+        let body = std::fs::read_to_string(&trace).unwrap();
+        assert!(body.contains("\"traceEvents\""), "{body}");
+        assert!(body.contains("cli_obs_test"), "{body}");
+        let prom = std::fs::read_to_string(&metrics).unwrap();
+        assert!(prom.contains("misa_cli_obs_test"), "{prom}");
+        let _ = std::fs::remove_file(&trace);
+        let _ = std::fs::remove_file(&metrics);
+        // absent flags resolve to no outputs and finish_obs is a no-op
+        let a = parse_args(&v(&["bench"])).unwrap();
+        let out = apply_obs(&a);
+        assert!(out.trace.is_none() && out.metrics.is_none());
+        finish_obs(&out).unwrap();
     }
 
     #[test]

@@ -1,0 +1,183 @@
+//! Leveled stderr logger replacing the scattered `eprintln!`
+//! diagnostics.
+//!
+//! Level resolves from `MISA_LOG` (`off|error|warn|info|debug`, read
+//! once; default `info`) and can be overridden programmatically with
+//! [`set_level`]. Timestamps are **off by default** so test output and
+//! CI greps stay byte-stable; `MISA_LOG_TS=1` prefixes each line with
+//! seconds since the logger's first use.
+//!
+//! Diagnostics go to **stderr**; machine-read data output (the
+//! `tokens:` line, bench summaries, JSON records) stays on stdout and
+//! never routes through here.
+//!
+//! Call sites use the [`crate::log_error!`] / [`crate::log_warn!`] /
+//! [`crate::log_info!`] / [`crate::log_debug!`] macros, which build
+//! `format_args!` lazily — a disabled level costs one atomic load and
+//! never formats.
+
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Log severity, ordered so `level as u8` comparisons work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    /// Suppress everything.
+    Off = 0,
+    /// Unrecoverable or surprising failures.
+    Error = 1,
+    /// Degraded-but-continuing conditions.
+    Warn = 2,
+    /// Run lifecycle milestones (default).
+    Info = 3,
+    /// Per-step / per-tick detail.
+    Debug = 4,
+}
+
+impl Level {
+    fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "none" => Some(Level::Off),
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Off => "off",
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+/// u8::MAX = "unset, resolve from the environment".
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+static TIMESTAMPS: AtomicBool = AtomicBool::new(false);
+
+fn env_level() -> u8 {
+    static ENV: OnceLock<u8> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        if std::env::var("MISA_LOG_TS").map(|v| v.trim() == "1").unwrap_or(false) {
+            TIMESTAMPS.store(true, Ordering::Relaxed);
+        }
+        std::env::var("MISA_LOG")
+            .ok()
+            .and_then(|v| Level::parse(&v))
+            .unwrap_or(Level::Info) as u8
+    })
+}
+
+/// The active log level.
+pub fn level() -> Level {
+    let v = match LEVEL.load(Ordering::Relaxed) {
+        u8::MAX => env_level(),
+        v => v,
+    };
+    match v {
+        0 => Level::Off,
+        1 => Level::Error,
+        2 => Level::Warn,
+        3 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// Override the log level (e.g. a future `--log` flag or tests).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Whether a message at `l` would currently be emitted.
+pub fn enabled(l: Level) -> bool {
+    l != Level::Off && l <= level()
+}
+
+fn logger_epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Emit one line at level `l` (macro back-end; formatting already
+/// deferred by `format_args!` at the call site).
+pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    if TIMESTAMPS.load(Ordering::Relaxed) {
+        let t = Instant::now().saturating_duration_since(logger_epoch()).as_secs_f64();
+        eprintln!("[{t:9.3}s {}] {args}", l.tag());
+    } else {
+        eprintln!("[{}] {args}", l.tag());
+    }
+}
+
+/// Log at [`Level::Error`] with `format!` syntax.
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::obs::logger::log($crate::obs::logger::Level::Error, format_args!($($arg)*))
+    };
+}
+
+/// Log at [`Level::Warn`] with `format!` syntax.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::obs::logger::log($crate::obs::logger::Level::Warn, format_args!($($arg)*))
+    };
+}
+
+/// Log at [`Level::Info`] with `format!` syntax.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::obs::logger::log($crate::obs::logger::Level::Info, format_args!($($arg)*))
+    };
+}
+
+/// Log at [`Level::Debug`] with `format!` syntax.
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::obs::logger::log($crate::obs::logger::Level::Debug, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_known_levels() {
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse(" WARN "), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("off"), Some(Level::Off));
+        assert_eq!(Level::parse("verbose"), None);
+    }
+
+    #[test]
+    fn levels_order_and_gate() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        // set_level/enabled are process-global; exercise and restore
+        let before = level();
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Off);
+        assert!(!enabled(Level::Error));
+        set_level(before);
+    }
+}

@@ -1,0 +1,443 @@
+//! The metrics registry: counters, gauges, and log-bucketed latency
+//! histograms with percentile extraction, plus the Prometheus-style
+//! text exporter.
+//!
+//! One process-global registry (serde-free, hand-rolled like the rest
+//! of `util`) collects everything the instrumented hot paths emit.
+//! Recording is a name lookup plus an integer update under one mutex —
+//! cheap against the multi-millisecond forwards it measures, and
+//! deliberately *outside* every numeric code path so instrumentation
+//! can never perturb a result (the bit-parity suites re-run with it
+//! fully enabled).
+//!
+//! Histograms are log-bucketed: 256 geometric buckets growing by
+//! `2^(1/8)` (~9%) per bucket from `1e-3`, so one histogram spans
+//! microsecond spikes to minute-long stalls when fed milliseconds.
+//! [`Histogram::percentile`] returns the geometric midpoint of the
+//! bucket holding the requested rank — within one bucket ratio
+//! (≤ ~4.4%) of the exact order statistic, which `rust/tests/obs.rs`
+//! pins against a sorted-vec oracle. Exact percentiles over raw
+//! samples (the serving TTFT/ITL report) go through
+//! [`percentile_exact`] instead.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+
+/// Smallest bucketed histogram value; below it samples land in the
+/// underflow bucket and percentiles report the observed minimum.
+const HIST_MIN: f64 = 1e-3;
+/// Number of geometric buckets.
+const HIST_BUCKETS: usize = 256;
+/// Buckets per doubling: bucket width is `2^(1/8)` (~9% growth).
+const BUCKETS_PER_OCTAVE: f64 = 8.0;
+
+/// A log-bucketed histogram of non-negative samples (unit-agnostic;
+/// the serving and training paths feed milliseconds).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    underflow: u64,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![0; HIST_BUCKETS],
+            underflow: 0,
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Bucket index of `v`, or `None` for the underflow bucket.
+    fn bucket(v: f64) -> Option<usize> {
+        if v < HIST_MIN {
+            return None;
+        }
+        let i = ((v / HIST_MIN).log2() * BUCKETS_PER_OCTAVE).floor();
+        Some((i.max(0.0) as usize).min(HIST_BUCKETS - 1))
+    }
+
+    /// Geometric midpoint of bucket `i` — the value [`Self::percentile`]
+    /// reports for ranks landing in it.
+    fn representative(i: usize) -> f64 {
+        HIST_MIN * 2f64.powf((i as f64 + 0.5) / BUCKETS_PER_OCTAVE)
+    }
+
+    /// Upper bound of bucket `i` (Prometheus `le` label).
+    fn upper(i: usize) -> f64 {
+        HIST_MIN * 2f64.powf((i as f64 + 1.0) / BUCKETS_PER_OCTAVE)
+    }
+
+    /// Record one sample. Negative and NaN samples are counted in the
+    /// underflow bucket rather than dropped silently.
+    pub fn observe(&mut self, v: f64) {
+        self.count += 1;
+        if v.is_finite() {
+            self.sum += v;
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        match Self::bucket(v) {
+            Some(i) => self.counts[i] += 1,
+            None => self.underflow += 1,
+        }
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all finite samples.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Smallest finite sample (0.0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 || !self.min.is_finite() {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest finite sample (0.0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 || !self.max.is_finite() {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Mean of all finite samples (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// The `q`-quantile (`0.0..=1.0`): the geometric midpoint of the
+    /// bucket holding the rank-`ceil(q·count)` sample, clamped to the
+    /// observed `[min, max]`. Within one bucket ratio (`2^(1/8)`,
+    /// ~9%; midpoint error ≤ ~4.4%) of the exact order statistic —
+    /// test-pinned against a sorted-vec oracle. Returns 0.0 when
+    /// empty.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        if rank <= self.underflow {
+            return self.min();
+        }
+        let mut cum = self.underflow;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if rank <= cum {
+                return Self::representative(i).clamp(self.min(), self.max());
+            }
+        }
+        self.max()
+    }
+
+    /// `(upper_bound, cumulative_count)` for every non-empty bucket,
+    /// ascending — the Prometheus exposition shape.
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = self.underflow;
+        if self.underflow > 0 {
+            out.push((HIST_MIN, cum));
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                cum += c;
+                out.push((Self::upper(i), cum));
+            }
+        }
+        out
+    }
+}
+
+/// Exact `q`-quantile of an ascending-sorted slice: the sample at rank
+/// `ceil(q·n)` (1-based, clamped) — the same rank convention
+/// [`Histogram::percentile`] approximates. Returns 0.0 when empty.
+pub fn percentile_exact(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// A stats struct that can publish itself into the registry as flat
+/// `(name, value)` gauges — `CacheStats` and `SpecStats` implement
+/// this, so the serving counters land in the same Prometheus dump as
+/// the histograms.
+pub trait MetricSource {
+    /// Flat, fully-namespaced `(name, value)` pairs (e.g.
+    /// `serve.cache.hits`).
+    fn metric_kvs(&self) -> Vec<(String, f64)>;
+}
+
+/// Publish every key of a [`MetricSource`] as a gauge.
+pub fn publish(src: &dyn MetricSource) {
+    for (k, v) in src.metric_kvs() {
+        gauge_set(&k, v);
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+fn registry() -> &'static Mutex<Inner> {
+    static REG: OnceLock<Mutex<Inner>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Inner::default()))
+}
+
+fn with_registry<T>(f: impl FnOnce(&mut Inner) -> T) -> T {
+    let mut g = registry().lock().unwrap_or_else(|e| e.into_inner());
+    f(&mut g)
+}
+
+/// Add `delta` to the named monotonic counter (created at 0).
+pub fn counter_add(name: &str, delta: u64) {
+    with_registry(|r| *r.counters.entry(name.to_string()).or_insert(0) += delta);
+}
+
+/// Current value of a counter (0 if never written).
+pub fn counter(name: &str) -> u64 {
+    with_registry(|r| r.counters.get(name).copied().unwrap_or(0))
+}
+
+/// Set the named gauge to `v` (last write wins).
+pub fn gauge_set(name: &str, v: f64) {
+    with_registry(|r| {
+        r.gauges.insert(name.to_string(), v);
+    });
+}
+
+/// Current value of a gauge, if ever written.
+pub fn gauge(name: &str) -> Option<f64> {
+    with_registry(|r| r.gauges.get(name).copied())
+}
+
+/// Record one sample into the named histogram (created empty).
+pub fn observe(name: &str, v: f64) {
+    with_registry(|r| r.hists.entry(name.to_string()).or_default().observe(v));
+}
+
+/// Snapshot of the named histogram, if ever written.
+pub fn histogram(name: &str) -> Option<Histogram> {
+    with_registry(|r| r.hists.get(name).cloned())
+}
+
+/// Clear every counter, gauge and histogram (tests, bench re-runs).
+pub fn reset() {
+    with_registry(|r| *r = Inner::default());
+}
+
+/// Sanitize a metric name into the Prometheus charset and prefix it
+/// with `misa_` (dots and dashes become underscores).
+fn prom_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 5);
+    out.push_str("misa_");
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+fn prom_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else if v.is_nan() {
+        "NaN".to_string()
+    } else if v > 0.0 {
+        "+Inf".to_string()
+    } else {
+        "-Inf".to_string()
+    }
+}
+
+/// Render the whole registry as a Prometheus-style text exposition:
+/// `# TYPE` lines, counters and gauges as bare samples, histograms as
+/// cumulative `_bucket{le="..."}` series plus `_sum`/`_count`, and
+/// quantile gauges (`p50`/`p90`/`p99`) precomputed for dashboards
+/// without a quantile engine.
+pub fn prometheus_dump() -> String {
+    with_registry(|r| {
+        let mut out = String::new();
+        for (k, v) in &r.counters {
+            let n = prom_name(k);
+            out.push_str(&format!("# TYPE {n} counter\n{n} {v}\n"));
+        }
+        for (k, v) in &r.gauges {
+            let n = prom_name(k);
+            out.push_str(&format!("# TYPE {n} gauge\n{n} {}\n", prom_f64(*v)));
+        }
+        for (k, h) in &r.hists {
+            let n = prom_name(k);
+            out.push_str(&format!("# TYPE {n} histogram\n"));
+            for (le, cum) in h.cumulative_buckets() {
+                out.push_str(&format!("{n}_bucket{{le=\"{}\"}} {cum}\n", prom_f64(le)));
+            }
+            out.push_str(&format!("{n}_bucket{{le=\"+Inf\"}} {}\n", h.count()));
+            out.push_str(&format!("{n}_sum {}\n", prom_f64(h.sum())));
+            out.push_str(&format!("{n}_count {}\n", h.count()));
+            for (q, label) in [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99")] {
+                out.push_str(&format!(
+                    "{n}_quantile{{q=\"{label}\"}} {}\n",
+                    prom_f64(h.percentile(q))
+                ));
+            }
+        }
+        out
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts_and_moments() {
+        let mut h = Histogram::new();
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 10.0).abs() < 1e-12);
+        assert!((h.mean() - 2.5).abs() < 1e-12);
+        assert!((h.min() - 1.0).abs() < 1e-12);
+        assert!((h.max() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_percentile_brackets_exact_value() {
+        let mut h = Histogram::new();
+        let xs: Vec<f64> = (1..=1000).map(|i| i as f64 * 0.37).collect();
+        for &v in &xs {
+            h.observe(v);
+        }
+        let bucket_ratio = 2f64.powf(1.0 / BUCKETS_PER_OCTAVE);
+        for q in [0.01, 0.5, 0.9, 0.99, 1.0] {
+            let exact = percentile_exact(&xs, q); // xs is already ascending
+            let approx = h.percentile(q);
+            assert!(
+                approx <= exact * bucket_ratio * 1.0001
+                    && approx >= exact / bucket_ratio / 1.0001,
+                "q={q}: approx {approx} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn histogram_edge_cases() {
+        let h = Histogram::new();
+        assert_eq!(h.percentile(0.5), 0.0);
+        assert_eq!(h.count(), 0);
+        let mut h = Histogram::new();
+        h.observe(0.0); // underflow bucket
+        h.observe(-1.0); // negative: counted, not dropped
+        h.observe(f64::NAN); // non-finite: counted, excluded from moments
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.percentile(0.5), h.min());
+        let mut h = Histogram::new();
+        h.observe(42.0);
+        // a single sample clamps every quantile to itself
+        assert!((h.percentile(0.5) - 42.0).abs() < 1e-12);
+        assert!((h.percentile(0.99) - 42.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_exact_matches_rank_convention() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile_exact(&xs, 0.5), 3.0);
+        assert_eq!(percentile_exact(&xs, 0.0), 1.0);
+        assert_eq!(percentile_exact(&xs, 1.0), 5.0);
+        assert_eq!(percentile_exact(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn registry_counters_gauges_histograms() {
+        reset();
+        counter_add("t.count", 2);
+        counter_add("t.count", 3);
+        assert_eq!(counter("t.count"), 5);
+        gauge_set("t.gauge", 1.5);
+        assert_eq!(gauge("t.gauge"), Some(1.5));
+        observe("t.lat", 10.0);
+        observe("t.lat", 20.0);
+        let h = histogram("t.lat").unwrap();
+        assert_eq!(h.count(), 2);
+        reset();
+        assert_eq!(counter("t.count"), 0);
+        assert!(histogram("t.lat").is_none());
+    }
+
+    #[test]
+    fn prometheus_dump_is_well_formed() {
+        reset();
+        counter_add("t.reqs", 7);
+        gauge_set("t.depth", 3.0);
+        observe("t.ms", 5.0);
+        observe("t.ms", 50.0);
+        let dump = prometheus_dump();
+        assert!(dump.contains("# TYPE misa_t_reqs counter"), "{dump}");
+        assert!(dump.contains("misa_t_reqs 7"), "{dump}");
+        assert!(dump.contains("# TYPE misa_t_depth gauge"), "{dump}");
+        assert!(dump.contains("# TYPE misa_t_ms histogram"), "{dump}");
+        assert!(dump.contains("misa_t_ms_count 2"), "{dump}");
+        assert!(dump.contains("_bucket{le=\"+Inf\"} 2"), "{dump}");
+        assert!(dump.contains("misa_t_ms_quantile{q=\"0.99\"}"), "{dump}");
+        // cumulative bucket counts are ascending
+        let mut last = 0u64;
+        for line in dump.lines().filter(|l| l.starts_with("misa_t_ms_bucket")) {
+            let c: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(c >= last, "{dump}");
+            last = c;
+        }
+        reset();
+    }
+
+    #[test]
+    fn metric_source_publishes_gauges() {
+        struct S;
+        impl MetricSource for S {
+            fn metric_kvs(&self) -> Vec<(String, f64)> {
+                vec![("t.src.a".to_string(), 1.0), ("t.src.b".to_string(), 2.0)]
+            }
+        }
+        reset();
+        publish(&S);
+        assert_eq!(gauge("t.src.a"), Some(1.0));
+        assert_eq!(gauge("t.src.b"), Some(2.0));
+        reset();
+    }
+}

@@ -1,0 +1,35 @@
+//! Observability: scoped spans, metrics, per-request timelines,
+//! leveled logging — zero dependencies, deterministic by
+//! construction.
+//!
+//! Four pieces, one design rule — **instrumentation reads clocks and
+//! counters, never the computation**, so every bit-parity invariant
+//! in the repo holds with observability fully enabled:
+//!
+//! - [`span`] — hierarchical RAII spans on the hot paths (GEMM
+//!   dispatch, backend forwards, scheduler phases, trainer steps),
+//!   exported as Chrome trace-event JSON (`--trace-out`, Perfetto).
+//!   Off by default; one relaxed atomic load per disabled call site.
+//! - [`metrics`] — process-global registry of counters, gauges and
+//!   log-bucketed latency histograms with p50/p90/p99 extraction;
+//!   Prometheus-style text export (`--metrics-out`). `CacheStats`
+//!   and `SpecStats` publish into it as [`MetricSource`]s.
+//! - [`timeline`] — per-request lifecycle stamps (enqueue → admit →
+//!   prefill → first token → finish) and exact TTFT/ITL percentile
+//!   summaries for `bench-serve` and `generate`.
+//! - [`logger`] — `MISA_LOG`-leveled stderr logging replacing raw
+//!   `eprintln!` diagnostics; timestamps opt-in (`MISA_LOG_TS=1`) so
+//!   test output stays stable.
+//!
+//! See DESIGN.md §7 "Observability architecture" for the span model,
+//! overhead budget, and exporter formats.
+
+pub mod logger;
+pub mod metrics;
+pub mod span;
+pub mod timeline;
+
+pub use logger::Level;
+pub use metrics::{percentile_exact, Histogram, MetricSource};
+pub use span::{SpanEvent, SpanGuard};
+pub use timeline::{Latencies, LatencySummary, Timeline};

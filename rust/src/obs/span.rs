@@ -1,0 +1,365 @@
+//! Hierarchical scoped spans with Chrome trace-event export.
+//!
+//! A span is an RAII guard: [`span`] (or the [`crate::span!`] macro)
+//! pushes a name onto a thread-local stack and records a start
+//! timestamp; dropping the guard pops the stack and appends one
+//! completed [`SpanEvent`] to a process-global buffer. Nesting falls
+//! out of the stack — each event remembers its parent's name and its
+//! depth at open time.
+//!
+//! **Disabled is the default and costs one relaxed atomic load per
+//! call site**: when tracing is off, [`span`] returns an inert guard
+//! without touching the clock, the thread-local stack, or the event
+//! buffer. Enable with `MISA_TRACE=1` (read once at first use) or
+//! programmatically with [`enable_tracing`] (the `--trace-out` flag).
+//!
+//! **Spans never perturb computation.** A guard only reads `Instant`
+//! — never an RNG stream, never a tensor — so every bit-parity
+//! invariant (spec ≡ plain, scheduled ≡ solo, threads 1 vs 4) holds
+//! verbatim with tracing fully enabled; `rust/tests/obs.rs` re-runs
+//! those suites under tracing to pin it.
+//!
+//! Worker threads spawned via `std::thread::scope` do not inherit the
+//! parent's thread-local stack, so the GEMM pool captures
+//! [`current`] on the calling thread and opens worker spans with
+//! [`span_child`], keeping the tree connected across the fan-out.
+//!
+//! The buffer is bounded at [`MAX_EVENTS`]; once full, further events
+//! increment a visible drop counter instead of growing without bound
+//! or silently vanishing ([`take_events`] reports the count).
+
+use std::cell::RefCell;
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+/// Hard cap on buffered events (~72 MiB at the `SpanEvent` size);
+/// beyond it events are counted as dropped, not stored.
+pub const MAX_EVENTS: usize = 1 << 20;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+/// `MISA_TRACE` is folded into the flag exactly once, before the
+/// first enabled-check; later [`enable_tracing`]/[`disable_tracing`]
+/// calls override it.
+fn env_init() {
+    static INIT: OnceLock<()> = OnceLock::new();
+    INIT.get_or_init(|| {
+        if let Ok(v) = std::env::var("MISA_TRACE") {
+            let v = v.trim();
+            if !v.is_empty() && v != "0" {
+                ENABLED.store(true, Ordering::Relaxed);
+            }
+        }
+    });
+}
+
+/// Whether span guards are currently recording.
+pub fn tracing_enabled() -> bool {
+    env_init();
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn span recording on (idempotent).
+pub fn enable_tracing() {
+    env_init();
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Turn span recording off; buffered events stay until
+/// [`take_events`].
+pub fn disable_tracing() {
+    env_init();
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// Process-wide trace epoch: all timestamps are microseconds since
+/// the first span (or export) touched the clock.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn now_us() -> u64 {
+    Instant::now().saturating_duration_since(epoch()).as_micros() as u64
+}
+
+fn events() -> &'static Mutex<Vec<SpanEvent>> {
+    static EVENTS: OnceLock<Mutex<Vec<SpanEvent>>> = OnceLock::new();
+    EVENTS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    /// Small dense per-thread id (std's `ThreadId` has no stable
+    /// numeric accessor), assigned on a thread's first span.
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    /// The open-span stack this thread is inside.
+    static STACK: RefCell<Vec<&'static str>> = const { RefCell::new(Vec::new()) };
+}
+
+/// One completed span, ready for Chrome trace-event export.
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    /// Span name (the trace-event `name`).
+    pub name: &'static str,
+    /// Coarse subsystem category (`tensor`, `backend`, `serve`, ...).
+    pub cat: &'static str,
+    /// Name of the enclosing span at open time, if any.
+    pub parent: Option<&'static str>,
+    /// Nesting depth at open time (0 = root).
+    pub depth: u32,
+    /// Dense per-thread id (see module docs).
+    pub tid: u64,
+    /// Microseconds since the trace epoch at open.
+    pub start_us: u64,
+    /// Span duration in microseconds.
+    pub dur_us: u64,
+}
+
+struct ActiveSpan {
+    name: &'static str,
+    cat: &'static str,
+    parent: Option<&'static str>,
+    depth: u32,
+    tid: u64,
+    start_us: u64,
+}
+
+/// RAII span guard: records a [`SpanEvent`] when dropped. Inert (and
+/// nearly free) when tracing is disabled.
+pub struct SpanGuard {
+    active: Option<ActiveSpan>,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(a) = self.active.take() else { return };
+        STACK.with(|s| {
+            s.borrow_mut().pop();
+        });
+        let dur_us = now_us().saturating_sub(a.start_us);
+        let ev = SpanEvent {
+            name: a.name,
+            cat: a.cat,
+            parent: a.parent,
+            depth: a.depth,
+            tid: a.tid,
+            start_us: a.start_us,
+            dur_us,
+        };
+        let mut buf = events().lock().unwrap_or_else(|e| e.into_inner());
+        if buf.len() < MAX_EVENTS {
+            buf.push(ev);
+        } else {
+            DROPPED.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+fn open(name: &'static str, cat: &'static str, forced_parent: Option<&'static str>) -> SpanGuard {
+    if !tracing_enabled() {
+        return SpanGuard { active: None };
+    }
+    let tid = TID.with(|t| *t);
+    let (parent, depth) = STACK.with(|s| {
+        let mut s = s.borrow_mut();
+        let parent = s.last().copied().or(forced_parent);
+        // a forced parent lives on another thread's stack; count it
+        let depth = s.len() as u32 + u32::from(s.is_empty() && forced_parent.is_some());
+        s.push(name);
+        (parent, depth)
+    });
+    SpanGuard {
+        active: Some(ActiveSpan { name, cat, parent, depth, tid, start_us: now_us() }),
+    }
+}
+
+/// Open a span nested under this thread's current span (if any).
+pub fn span(name: &'static str, cat: &'static str) -> SpanGuard {
+    open(name, cat, None)
+}
+
+/// Open a span whose parent was captured on *another* thread — the
+/// scoped-worker case, where thread-locals don't cross the spawn.
+pub fn span_child(
+    name: &'static str,
+    cat: &'static str,
+    parent: Option<&'static str>,
+) -> SpanGuard {
+    open(name, cat, parent)
+}
+
+/// Name of the innermost open span on this thread, if any (capture
+/// before spawning workers, pass to [`span_child`]).
+pub fn current() -> Option<&'static str> {
+    if !tracing_enabled() {
+        return None;
+    }
+    STACK.with(|s| s.borrow().last().copied())
+}
+
+/// Drain the buffered events, returning `(events, dropped_count)` and
+/// resetting both.
+pub fn take_events() -> (Vec<SpanEvent>, u64) {
+    let evs = std::mem::take(&mut *events().lock().unwrap_or_else(|e| e.into_inner()));
+    (evs, DROPPED.swap(0, Ordering::Relaxed))
+}
+
+/// Number of events buffered so far (diagnostics, tests).
+pub fn event_count() -> usize {
+    events().lock().unwrap_or_else(|e| e.into_inner()).len()
+}
+
+/// Render events as Chrome trace-event JSON (complete `"ph": "X"`
+/// events) — loadable in Perfetto / `chrome://tracing`.
+pub fn render_chrome_trace(events: &[SpanEvent], dropped: u64) -> String {
+    let mut out = String::with_capacity(128 + events.len() * 128);
+    out.push_str("{\"traceEvents\":[");
+    let mut first = true;
+    for ev in events {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&format!(
+            "\n{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":1,\"tid\":{},\"args\":{{\"parent\":{},\"depth\":{}}}}}",
+            crate::util::bench::escape(ev.name),
+            crate::util::bench::escape(ev.cat),
+            ev.start_us,
+            ev.dur_us,
+            ev.tid,
+            match ev.parent {
+                Some(p) => format!("\"{}\"", crate::util::bench::escape(p)),
+                None => "null".to_string(),
+            },
+            ev.depth,
+        ));
+    }
+    out.push_str("\n],");
+    out.push_str(&format!("\"displayTimeUnit\":\"ms\",\"misa_dropped_events\":{dropped}}}\n"));
+    out
+}
+
+/// Drain the buffer and write it to `path` as Chrome trace-event
+/// JSON; returns the number of events written.
+pub fn export_chrome_trace(path: &Path) -> Result<usize> {
+    let (evs, dropped) = take_events();
+    let body = render_chrome_trace(&evs, dropped);
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating trace file {path:?}"))?;
+    f.write_all(body.as_bytes())
+        .with_context(|| format!("writing trace file {path:?}"))?;
+    Ok(evs.len())
+}
+
+/// Open a scoped span: `span!("name")` or `span!("name", "category")`.
+/// Bind the result (`let _sp = span!(...)`) — dropping it closes the
+/// span.
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        $crate::obs::span::span($name, "misa")
+    };
+    ($name:expr, $cat:expr) => {
+        $crate::obs::span::span($name, $cat)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Span tests share process-global state (the enabled flag, the
+    // event buffer) with integration tests; within this unit-test
+    // binary, serialize through one mutex.
+    static GATE: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        disable_tracing();
+        let before = event_count();
+        {
+            let _sp = span("t_disabled", "test");
+            assert!(current().is_none());
+        }
+        assert_eq!(event_count(), before);
+    }
+
+    #[test]
+    fn nested_spans_record_parent_and_depth() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        let _ = take_events();
+        enable_tracing();
+        {
+            let _outer = span("t_outer", "test");
+            assert_eq!(current(), Some("t_outer"));
+            {
+                let _inner = span("t_inner", "test");
+                assert_eq!(current(), Some("t_inner"));
+            }
+            assert_eq!(current(), Some("t_outer"));
+        }
+        disable_tracing();
+        let (evs, dropped) = take_events();
+        assert_eq!(dropped, 0);
+        // inner closes before outer
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].name, "t_inner");
+        assert_eq!(evs[0].parent, Some("t_outer"));
+        assert_eq!(evs[0].depth, 1);
+        assert_eq!(evs[1].name, "t_outer");
+        assert_eq!(evs[1].parent, None);
+        assert_eq!(evs[1].depth, 0);
+        assert_eq!(evs[0].tid, evs[1].tid);
+        assert!(evs[1].dur_us >= evs[0].dur_us);
+    }
+
+    #[test]
+    fn span_child_links_across_threads() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        let _ = take_events();
+        enable_tracing();
+        {
+            let _outer = span("t_root", "test");
+            let parent = current();
+            std::thread::scope(|s| {
+                s.spawn(move || {
+                    let _w = span_child("t_worker", "test", parent);
+                });
+            });
+        }
+        disable_tracing();
+        let (evs, _) = take_events();
+        let worker = evs.iter().find(|e| e.name == "t_worker").unwrap();
+        let root = evs.iter().find(|e| e.name == "t_root").unwrap();
+        assert_eq!(worker.parent, Some("t_root"));
+        assert_eq!(worker.depth, 1);
+        assert_ne!(worker.tid, root.tid);
+    }
+
+    #[test]
+    fn chrome_render_escapes_and_reports_drops() {
+        let evs = vec![SpanEvent {
+            name: "a",
+            cat: "test",
+            parent: None,
+            depth: 0,
+            tid: 1,
+            start_us: 10,
+            dur_us: 5,
+        }];
+        let body = render_chrome_trace(&evs, 3);
+        assert!(body.contains("\"traceEvents\":["), "{body}");
+        assert!(body.contains("\"name\":\"a\""), "{body}");
+        assert!(body.contains("\"ph\":\"X\""), "{body}");
+        assert!(body.contains("\"misa_dropped_events\":3"), "{body}");
+        assert!(body.contains("\"parent\":null"), "{body}");
+    }
+}

@@ -1,0 +1,270 @@
+//! Per-request lifecycle timelines and latency distributions.
+//!
+//! Every serving request carries a [`Timeline`] from enqueue to
+//! completion: the scheduler stamps admission, prefill completion,
+//! first token, every later emission, and finish. From those stamps
+//! fall out the two latencies the serving roadmap cares about —
+//! **TTFT** (submit → first token) and **ITL** (gap between emitted
+//! tokens) — as raw sample vectors, so `bench-serve` reports exact
+//! p50/p90/p99, not just means.
+//!
+//! ITL semantics under speculative decoding: a verify tick can emit
+//! `n > 1` tokens at once; [`Timeline::emit`] then records the gap
+//! divided by `n`, once per token. Every emitted token after the
+//! first contributes exactly one sample, so spec on/off produce
+//! comparable distributions (`samples == tokens - 1` either way).
+//!
+//! Timelines only read `Instant` — like spans, they cannot perturb
+//! the deterministic token streams they annotate.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use super::metrics::percentile_exact;
+
+/// Lifecycle stamps + inter-token gaps for one request.
+#[derive(Clone, Debug)]
+pub struct Timeline {
+    /// When the request entered the scheduler queue.
+    pub enqueued: Instant,
+    /// When it was admitted to a slot (left the queue).
+    pub admitted: Option<Instant>,
+    /// When chunked prefill covered the full prompt.
+    pub prefilled: Option<Instant>,
+    /// When the first token was sampled.
+    pub first_token: Option<Instant>,
+    /// When the request completed.
+    pub finished: Option<Instant>,
+    /// Per-token inter-token gaps in milliseconds (see module docs).
+    pub itl_ms: Vec<f64>,
+    last_emit: Option<Instant>,
+}
+
+impl Timeline {
+    /// Start a timeline at `now` (request submission).
+    pub fn start() -> Self {
+        Timeline {
+            enqueued: Instant::now(),
+            admitted: None,
+            prefilled: None,
+            first_token: None,
+            finished: None,
+            itl_ms: Vec::new(),
+            last_emit: None,
+        }
+    }
+
+    /// Stamp admission (idempotent: first call wins).
+    pub fn admit(&mut self) {
+        self.admitted.get_or_insert_with(Instant::now);
+    }
+
+    /// Stamp prefill completion (idempotent).
+    pub fn prefill_done(&mut self) {
+        self.prefilled.get_or_insert_with(Instant::now);
+    }
+
+    /// Stamp the first sampled token and arm the inter-token clock.
+    pub fn mark_first_token(&mut self) {
+        let now = Instant::now();
+        self.first_token.get_or_insert(now);
+        self.last_emit = Some(now);
+    }
+
+    /// Record the emission of `n >= 1` tokens in one tick: the gap
+    /// since the previous emission, divided by `n`, recorded `n`
+    /// times (no-op before [`Self::mark_first_token`]).
+    pub fn emit(&mut self, n: usize) {
+        let Some(prev) = self.last_emit else { return };
+        if n == 0 {
+            return;
+        }
+        let now = Instant::now();
+        let gap_ms = now.saturating_duration_since(prev).as_secs_f64() * 1e3;
+        let per_tok = gap_ms / n as f64;
+        for _ in 0..n {
+            self.itl_ms.push(per_tok);
+        }
+        self.last_emit = Some(now);
+    }
+
+    /// Stamp completion (idempotent).
+    pub fn finish(&mut self) {
+        self.finished.get_or_insert_with(Instant::now);
+    }
+
+    /// Submit → first-token latency in milliseconds, if reached.
+    pub fn ttft_ms(&self) -> Option<f64> {
+        self.first_token
+            .map(|t| t.saturating_duration_since(self.enqueued).as_secs_f64() * 1e3)
+    }
+
+    /// Check the ordering invariants: enqueued ≤ admitted ≤ prefilled
+    /// ≤ first_token ≤ finished for every stamp present, and no ITL
+    /// samples without a first token.
+    pub fn validate(&self) -> Result<()> {
+        let mut prev = ("enqueued", self.enqueued);
+        for (name, stamp) in [
+            ("admitted", self.admitted),
+            ("prefilled", self.prefilled),
+            ("first_token", self.first_token),
+            ("finished", self.finished),
+        ] {
+            if let Some(t) = stamp {
+                ensure!(t >= prev.1, "timeline: {name} precedes {}", prev.0);
+                prev = (name, t);
+            }
+        }
+        ensure!(
+            self.itl_ms.is_empty() || self.first_token.is_some(),
+            "timeline: ITL samples without a first token"
+        );
+        ensure!(
+            self.itl_ms.iter().all(|&g| g >= 0.0 && g.is_finite()),
+            "timeline: negative or non-finite ITL gap"
+        );
+        Ok(())
+    }
+}
+
+/// Raw latency samples pooled across completed requests.
+#[derive(Clone, Debug, Default)]
+pub struct Latencies {
+    /// One TTFT sample (ms) per completed request.
+    pub ttft_ms: Vec<f64>,
+    /// One ITL sample (ms) per emitted token after each request's
+    /// first.
+    pub itl_ms: Vec<f64>,
+}
+
+impl Latencies {
+    /// Fold one completed request's timeline into the pool.
+    pub fn absorb(&mut self, ttft_ms: Option<f64>, itl_ms: &[f64]) {
+        if let Some(t) = ttft_ms {
+            self.ttft_ms.push(t);
+        }
+        self.itl_ms.extend_from_slice(itl_ms);
+    }
+
+    /// Exact percentile summary of the TTFT samples.
+    pub fn ttft(&self) -> LatencySummary {
+        LatencySummary::of(&self.ttft_ms)
+    }
+
+    /// Exact percentile summary of the ITL samples.
+    pub fn itl(&self) -> LatencySummary {
+        LatencySummary::of(&self.itl_ms)
+    }
+}
+
+/// Exact distribution summary over raw samples (rank `ceil(q·n)`,
+/// the same convention the bucketed histograms approximate).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencySummary {
+    /// Number of samples (all other fields are 0.0 when this is 0).
+    pub count: usize,
+    /// Arithmetic mean.
+    pub mean: f64,
+    /// Exact median.
+    pub p50: f64,
+    /// Exact 90th percentile.
+    pub p90: f64,
+    /// Exact 99th percentile.
+    pub p99: f64,
+    /// Largest sample.
+    pub max: f64,
+}
+
+impl LatencySummary {
+    /// Summarize `xs` (need not be sorted).
+    pub fn of(xs: &[f64]) -> Self {
+        if xs.is_empty() {
+            return LatencySummary::default();
+        }
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        LatencySummary {
+            count: sorted.len(),
+            mean: sorted.iter().sum::<f64>() / sorted.len() as f64,
+            p50: percentile_exact(&sorted, 0.50),
+            p90: percentile_exact(&sorted, 0.90),
+            p99: percentile_exact(&sorted, 0.99),
+            max: *sorted.last().unwrap(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stamps_preserve_ordering() {
+        let mut tl = Timeline::start();
+        tl.admit();
+        tl.prefill_done();
+        tl.mark_first_token();
+        tl.emit(1);
+        tl.emit(3);
+        tl.finish();
+        tl.validate().unwrap();
+        assert_eq!(tl.itl_ms.len(), 4);
+        assert!(tl.ttft_ms().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn emit_before_first_token_is_noop() {
+        let mut tl = Timeline::start();
+        tl.emit(5);
+        assert!(tl.itl_ms.is_empty());
+        tl.validate().unwrap();
+    }
+
+    #[test]
+    fn stamps_are_idempotent() {
+        let mut tl = Timeline::start();
+        tl.admit();
+        let first = tl.admitted;
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        tl.admit();
+        assert_eq!(tl.admitted, first);
+    }
+
+    #[test]
+    fn multi_token_emit_splits_gap() {
+        let mut tl = Timeline::start();
+        tl.mark_first_token();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        tl.emit(4);
+        assert_eq!(tl.itl_ms.len(), 4);
+        let g = tl.itl_ms[0];
+        assert!(tl.itl_ms.iter().all(|&x| (x - g).abs() < 1e-12));
+        assert!(g > 0.0);
+    }
+
+    #[test]
+    fn summary_is_exact_on_known_samples() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = LatencySummary::of(&xs);
+        assert_eq!(s.count, 100);
+        assert_eq!(s.p50, 50.0);
+        assert_eq!(s.p90, 90.0);
+        assert_eq!(s.p99, 99.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.mean - 50.5).abs() < 1e-12);
+        let empty = LatencySummary::of(&[]);
+        assert_eq!(empty.count, 0);
+        assert_eq!(empty.p99, 0.0);
+    }
+
+    #[test]
+    fn latencies_pool_absorbs() {
+        let mut lat = Latencies::default();
+        lat.absorb(Some(10.0), &[1.0, 2.0]);
+        lat.absorb(None, &[3.0]);
+        assert_eq!(lat.ttft_ms.len(), 1);
+        assert_eq!(lat.itl_ms.len(), 3);
+        assert_eq!(lat.itl().count, 3);
+    }
+}

@@ -430,6 +430,7 @@ impl HostBackend {
         chunks: &[&[i32]],
         caches: &mut [&mut KvCache],
     ) -> Result<Vec<Vec<f32>>> {
+        let _sp = crate::span!("prefill_many", "backend");
         self.ragged_forward(host, chunks, caches, false)
     }
 
@@ -453,6 +454,7 @@ impl HostBackend {
         caches: &mut [&mut KvCache],
         all_logits: bool,
     ) -> Result<Vec<Vec<f32>>> {
+        let _sp = crate::span!("ragged_forward", "backend");
         let mc = &self.spec.config;
         let (d, v, f) = (mc.dim, mc.vocab, mc.ffn_dim);
         let (nh, nkv) = (mc.n_heads, mc.n_kv_heads);
@@ -788,12 +790,14 @@ impl Backend for HostBackend {
     }
 
     fn fwd_bwd(&self, host: &[Vec<f32>], batch: &Batch) -> Result<StepOutput> {
+        let _sp = crate::span!("fwd_bwd", "backend");
         let tr = self.forward(host, batch)?;
         let (grads, sq_norms) = self.backward(host, batch, &tr);
         Ok(StepOutput { loss: tr.loss as f32, grads, sq_norms })
     }
 
     fn predict(&self, host: &[Vec<f32>], batch: &Batch) -> Result<EvalOutput> {
+        let _sp = crate::span!("predict", "backend");
         let tr = self.forward(host, batch)?;
         let v = self.spec.config.vocab;
         let n = batch.batch * batch.seq_len;
@@ -815,6 +819,7 @@ impl Backend for HostBackend {
         v: &[f32],
         lr: f32,
     ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+        let _sp = crate::span!("adam_update", "backend");
         ensure!(
             p.len() == grad.len() && grad.len() == m.len() && m.len() == v.len(),
             "adam_update length mismatch"
@@ -895,6 +900,7 @@ impl Backend for HostBackend {
                 cache.len()
             );
         }
+        let _sp = crate::span!("verify_step", "backend");
         self.ragged_forward(host, chunks, caches, true)
     }
 
@@ -924,6 +930,7 @@ impl Backend for HostBackend {
         positions: &[usize],
         caches: &mut [&mut KvCache],
     ) -> Result<Vec<Vec<f32>>> {
+        let _sp = crate::span!("decode_batch", "backend");
         let mc = &self.spec.config;
         let (d, v, f) = (mc.dim, mc.vocab, mc.ffn_dim);
         let (nh, nkv) = (mc.n_heads, mc.n_kv_heads);

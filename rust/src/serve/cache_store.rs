@@ -92,6 +92,20 @@ impl CacheStats {
     }
 }
 
+impl crate::obs::MetricSource for CacheStats {
+    fn metric_kvs(&self) -> Vec<(String, f64)> {
+        vec![
+            ("serve.cache.lookups".to_string(), self.lookups as f64),
+            ("serve.cache.hits".to_string(), self.hits as f64),
+            ("serve.cache.hit_rate".to_string(), self.hit_rate()),
+            ("serve.cache.reused_tokens".to_string(), self.reused_tokens as f64),
+            ("serve.cache.insertions".to_string(), self.insertions as f64),
+            ("serve.cache.evictions".to_string(), self.evictions as f64),
+            ("serve.cache.entries".to_string(), self.entries as f64),
+        ]
+    }
+}
+
 /// One trie node: children keyed by the next token; `entry` is set on
 /// nodes where a stored prompt ends.
 #[derive(Default)]

@@ -7,6 +7,7 @@
 
 use anyhow::{ensure, Result};
 
+use crate::obs::Timeline;
 use crate::runtime::Session;
 use crate::serve::sampler::{sample, SamplerCfg};
 use crate::serve::spec::{self, DraftCtl, SpecCfg, SpecStats};
@@ -54,6 +55,10 @@ pub struct Generation {
     pub ttft_s: f64,
     /// Decode throughput over the post-prefill tokens, tokens/second.
     pub decode_tps: f64,
+    /// Inter-token latency samples in milliseconds, one per token
+    /// after the first (a speculative tick emitting `n` tokens
+    /// contributes `n` samples of `gap / n`).
+    pub itl_ms: Vec<f64>,
     /// Drafting counters when speculative decoding ran (`None`
     /// otherwise).
     pub spec: Option<SpecStats>,
@@ -67,23 +72,27 @@ pub fn generate(sess: &Session, prompt: &[i32], cfg: &GenerateCfg) -> Result<Gen
     if let Some(s) = &cfg.spec {
         s.validate()?;
     }
+    let _sp = crate::span!("generate", "serve");
     let mut cache = sess.kv_cache(prompt.len() + cfg.max_new)?;
     let mut rng = Rng::new(cfg.seed);
+    let mut tl = Timeline::start();
     let t0 = std::time::Instant::now();
     let logits = sess.prefill(prompt, &mut cache)?;
     let first = sample(&logits, &cfg.sampler, &mut rng) as i32;
     let ttft_s = t0.elapsed().as_secs_f64();
+    tl.mark_first_token();
     let mut tokens = vec![first];
     let t1 = std::time::Instant::now();
     let stats = match cfg.spec {
-        Some(scfg) => {
-            Some(spec_decode_loop(sess, prompt, &mut tokens, &mut cache, &mut rng, cfg, &scfg)?)
-        }
+        Some(scfg) => Some(spec_decode_loop(
+            sess, prompt, &mut tokens, &mut cache, &mut rng, &mut tl, cfg, &scfg,
+        )?),
         None => {
             while tokens.len() < cfg.max_new && cfg.eos != Some(*tokens.last().unwrap()) {
                 let last = *tokens.last().unwrap();
                 let logits = sess.decode_step(last, cache.len(), &mut cache)?;
                 tokens.push(sample(&logits, &cfg.sampler, &mut rng) as i32);
+                tl.emit(1);
             }
             None
         }
@@ -94,6 +103,7 @@ pub fn generate(sess: &Session, prompt: &[i32], cfg: &GenerateCfg) -> Result<Gen
         tokens,
         ttft_s,
         decode_tps: if decode_s > 0.0 { decoded as f64 / decode_s } else { 0.0 },
+        itl_ms: tl.itl_ms,
         spec: stats,
     })
 }
@@ -102,12 +112,14 @@ pub fn generate(sess: &Session, prompt: &[i32], cfg: &GenerateCfg) -> Result<Gen
 /// chunk in one forward, keep the verified prefix plus the model's own
 /// next token, roll the rejected suffix out of the cache. Emits
 /// exactly the tokens the sequential loop in [`generate`] would.
+#[allow(clippy::too_many_arguments)]
 fn spec_decode_loop(
     sess: &Session,
     prompt: &[i32],
     tokens: &mut Vec<i32>,
     cache: &mut crate::runtime::KvCache,
     rng: &mut Rng,
+    tl: &mut Timeline,
     cfg: &GenerateCfg,
     scfg: &SpecCfg,
 ) -> Result<SpecStats> {
@@ -129,13 +141,16 @@ fn spec_decode_loop(
         let (emitted, accepted) = spec::accept(&rows[0], vocab, &drafts, &cfg.sampler, rng);
         stats.record(drafts.len(), accepted);
         ctl.record(scfg, drafts.len(), accepted);
+        let mut pushed = 0usize;
         for &x in &emitted {
             tokens.push(x);
             history.push(x);
+            pushed += 1;
             if tokens.len() >= cfg.max_new || cfg.eos == Some(x) {
                 break;
             }
         }
+        tl.emit(pushed);
         // the verified-correct prefix stays resident: `last` plus the
         // accepted drafts; the corrective/bonus token is fed next tick
         cache.truncate(start + 1 + accepted)?;
@@ -164,6 +179,12 @@ mod tests {
         let v = sess.spec.config.vocab as i32;
         assert!(a.tokens.iter().all(|&t| t >= 0 && t < v));
         assert!(a.ttft_s >= 0.0 && a.decode_tps >= 0.0);
+        assert_eq!(
+            a.itl_ms.len(),
+            a.tokens.len() - 1,
+            "one ITL sample per token after the first"
+        );
+        assert!(a.itl_ms.iter().all(|&g| g >= 0.0));
     }
 
     #[test]

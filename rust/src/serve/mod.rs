@@ -35,7 +35,11 @@
 //!   in-flight decode, speculative multi-token ticks through one
 //!   ragged `verify_step`, and per-request TTFT / tokens-per-second /
 //!   prefix-reuse / draft-acceptance metrics through `util::metrics`.
-//!   Powers `misa bench-serve`.
+//!   Powers `misa bench-serve`. Every request carries a
+//!   [`crate::obs::Timeline`] (enqueue → admit → prefill → first token
+//!   → finish) pooled into exact TTFT/ITL percentile distributions,
+//!   and the hot paths are spanned for `--trace-out` Chrome traces —
+//!   see DESIGN.md §7.
 //!
 //! Memory accounting: one slot's KV cache holds
 //! `2 * n_layers * capacity * kv_dim` f32s (`KvCache::bytes`), where

@@ -57,12 +57,21 @@
 //! [`crate::serve::generate()`] alone with the same seed, with or
 //! without the prefix cache, chunked prefill, or speculation. The
 //! tests pin exactly that.
+//!
+//! Observability: every request carries a [`crate::obs::Timeline`]
+//! (enqueue → admit → prefill done → first token → finish, plus
+//! per-token gaps), each scheduler phase runs under a span
+//! (`sched_tick` / `admission` / `prefill_rounds` / `decode_tick` /
+//! `spec_tick`), and completions feed the `serve.ttft_ms` /
+//! `serve.itl_ms` histograms. All of it only reads clocks — the
+//! parity invariants above hold verbatim with tracing enabled
+//! (test-pinned in `rust/tests/obs.rs`).
 
 use std::collections::VecDeque;
-use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
+use crate::obs::{self, Latencies, Timeline};
 use crate::runtime::{KvCache, Session};
 use crate::serve::cache_store::{CacheStats, CacheStore, CacheStoreCfg};
 use crate::serve::sampler::{sample, SamplerCfg};
@@ -116,6 +125,12 @@ pub struct Completion {
     pub ttft_s: f64,
     /// Decode throughput after the first token, tokens/second.
     pub decode_tps: f64,
+    /// Inter-token latency samples in milliseconds: one per generated
+    /// token after the first. A speculative tick emitting `n` tokens
+    /// contributes `n` samples of `gap / n`, so spec on/off produce
+    /// comparable distributions (`len == tokens.len() - 1` either
+    /// way; empty for rejected requests).
+    pub itl_ms: Vec<f64>,
     /// Why the request finished.
     pub finish: FinishReason,
 }
@@ -163,9 +178,8 @@ struct Slot {
     cache: KvCache,
     rng: Rng,
     generated: Vec<i32>,
-    submitted: Instant,
-    /// set once the first token exists (prefill done)
-    first_token_at: Option<Instant>,
+    /// lifecycle stamps + inter-token gaps (enqueue → finish)
+    tl: Timeline,
     /// KV positions charged against the token budget
     /// (`prompt + max_new`, independent of the cache's ring capacity)
     cost: usize,
@@ -199,7 +213,8 @@ impl Slot {
 /// same-tick carrier can seed the store first).
 struct PrefillJob {
     req: Request,
-    submitted: Instant,
+    /// lifecycle stamps, carried from the queue entry
+    tl: Timeline,
     cost: usize,
     cache: Option<KvCache>,
     rng: Rng,
@@ -253,7 +268,7 @@ fn job_defers(store: &Option<CacheStore>, jobs: &VecDeque<PrefillJob>, i: usize)
 /// to completion (or step iterations manually with [`Self::tick`]).
 pub struct Scheduler {
     cfg: SchedulerCfg,
-    queue: VecDeque<(Request, Instant)>,
+    queue: VecDeque<(Request, Timeline)>,
     /// admitted, budget-charged, prompt not yet fully resident
     prefilling: VecDeque<PrefillJob>,
     active: Vec<Slot>,
@@ -263,6 +278,8 @@ pub struct Scheduler {
     peak_active: usize,
     /// aggregate speculative-decoding counters
     spec_totals: SpecStats,
+    /// pooled TTFT/ITL samples across completed requests
+    latencies: Latencies,
     /// Per-request serving metrics (TTFT, decode tok/s, KV residency,
     /// reused prompt positions), one record per completion.
     pub metrics: MetricsSink,
@@ -288,6 +305,7 @@ impl Scheduler {
             in_flight_tokens: 0,
             peak_active: 0,
             spec_totals: SpecStats::default(),
+            latencies: Latencies::default(),
             metrics: MetricsSink::memory(),
         }
     }
@@ -305,7 +323,7 @@ impl Scheduler {
             req.id,
             self.cfg.token_budget
         );
-        self.queue.push_back((req, Instant::now()));
+        self.queue.push_back((req, Timeline::start()));
         Ok(())
     }
 
@@ -336,11 +354,34 @@ impl Scheduler {
         self.cfg.spec.map(|_| self.spec_totals)
     }
 
+    /// Pooled TTFT/ITL samples across completed requests (exact
+    /// percentiles via [`Latencies::ttft`] / [`Latencies::itl`]).
+    pub fn latencies(&self) -> &Latencies {
+        &self.latencies
+    }
+
+    /// Publish the scheduler's counters into the global metrics
+    /// registry (gauges under `serve.*`), including the cache and
+    /// speculation stats when those features are on — one call makes
+    /// the whole serving state visible to the Prometheus-style dump.
+    pub fn publish_metrics(&self) {
+        obs::metrics::gauge_set("serve.peak_active", self.peak_active as f64);
+        obs::metrics::gauge_set("serve.in_flight_tokens", self.in_flight_tokens as f64);
+        obs::metrics::gauge_set("serve.pending", self.pending() as f64);
+        if let Some(stats) = self.cache_stats() {
+            obs::metrics::publish(&stats);
+        }
+        if let Some(stats) = self.spec_stats() {
+            obs::metrics::publish(&stats);
+        }
+    }
+
     /// One scheduling iteration: admit queued requests, advance prompt
     /// prefill (up to `prefill_chunk` rows), advance every active slot
     /// by at least one decode step, retire finished requests. Returns
     /// the requests that completed during this iteration.
     pub fn tick(&mut self, sess: &Session) -> Result<Vec<Completion>> {
+        let _sp = crate::span!("sched_tick", "serve");
         let mut done = Vec::new();
         let vocab = sess.spec.config.vocab;
 
@@ -349,17 +390,19 @@ impl Scheduler {
         // request waits rather than being bypassed, keeping completion
         // order predictable. Admitted requests charge their full KV
         // cost immediately and enter the prefill pipeline.
+        let _adm = crate::span!("admission", "serve");
         while self.active.len() + self.prefilling.len() < self.cfg.max_slots {
             let Some((req, _)) = self.queue.front() else { break };
             let cost = req.prompt.len() + req.max_new;
             if self.in_flight_tokens + cost > self.cfg.token_budget {
                 break;
             }
-            let (req, submitted) = self.queue.pop_front().unwrap();
+            let (req, mut tl) = self.queue.pop_front().unwrap();
             // token range is only checkable against a concrete model;
             // a bad prompt rejects this request, not the whole run
             if req.prompt.iter().any(|&t| t < 0 || t as usize >= vocab) {
-                let ttft_s = submitted.elapsed().as_secs_f64();
+                let ttft_s = tl.enqueued.elapsed().as_secs_f64();
+                obs::metrics::counter_add("serve.rejected", 1);
                 self.metrics.log(
                     req.id,
                     &[("ttft_ms", ttft_s * 1e3), ("new_tokens", 0.0), ("rejected", 1.0)],
@@ -371,14 +414,16 @@ impl Scheduler {
                     reused_tokens: 0,
                     ttft_s,
                     decode_tps: 0.0,
+                    itl_ms: Vec::new(),
                     finish: FinishReason::Rejected,
                 });
                 continue;
             }
+            tl.admit();
             self.in_flight_tokens += cost;
             self.prefilling.push_back(PrefillJob {
                 rng: Rng::new(req.seed),
-                submitted,
+                tl,
                 cost,
                 cache: None,
                 reused: 0,
@@ -386,6 +431,7 @@ impl Scheduler {
                 req,
             });
         }
+        drop(_adm);
 
         self.prefill_rounds(sess)?;
         self.decode_phase(sess, vocab)?;
@@ -414,6 +460,7 @@ impl Scheduler {
     /// enter the store, and activate; partial prompts keep their state
     /// in [`Scheduler::prefilling`] across ticks.
     fn prefill_rounds(&mut self, sess: &Session) -> Result<()> {
+        let _sp = crate::span!("prefill_rounds", "serve");
         let mut rows_left =
             if self.cfg.prefill_chunk == 0 { usize::MAX } else { self.cfg.prefill_chunk };
         while rows_left > 0 && !self.prefilling.is_empty() {
@@ -506,14 +553,14 @@ impl Scheduler {
             }
             acts.reverse();
             for (job, logits) in acts {
-                let PrefillJob { req, submitted, cost, cache, rng, reused, .. } = job;
+                let PrefillJob { req, mut tl, cost, cache, rng, reused, .. } = job;
+                tl.prefill_done();
                 let spec_on = self.cfg.spec.is_some();
                 let mut slot = Slot {
                     cache: cache.expect("completed job has a cache"),
                     rng,
                     generated: Vec::with_capacity(req.max_new),
-                    submitted,
-                    first_token_at: None,
+                    tl,
                     cost,
                     reused,
                     ctl: self.cfg.spec.map(|s| DraftCtl::new(&s)),
@@ -525,7 +572,7 @@ impl Scheduler {
                 if spec_on {
                     slot.history.push(first);
                 }
-                slot.first_token_at = Some(Instant::now());
+                slot.tl.mark_first_token();
                 // same gate as lookup: requests that can never hit
                 // (lifetime beyond the store ring) also never insert,
                 // so they cannot thrash the LRU or pay the copy
@@ -561,6 +608,7 @@ impl Scheduler {
             return Ok(());
         }
         let Some(scfg) = self.cfg.spec else {
+            let _sp = crate::span!("decode_tick", "serve");
             let tokens: Vec<i32> = batch
                 .iter()
                 .map(|&i| *self.active[i].generated.last().expect("prefill seeded a token"))
@@ -583,12 +631,14 @@ impl Scheduler {
                 let slot = &mut self.active[i];
                 let next = sample(row, &slot.req.sampler, &mut slot.rng) as i32;
                 slot.generated.push(next);
+                slot.tl.emit(1);
             }
             return Ok(());
         };
 
         // speculative tick: draft per slot, verify all slots' chunks in
         // one ragged stacked forward, accept + roll back per slot
+        let _sp = crate::span!("spec_tick", "serve");
         let mut drafts: Vec<Vec<i32>> = Vec::with_capacity(batch.len());
         let mut chunk_buf: Vec<Vec<i32>> = Vec::with_capacity(batch.len());
         for &i in &batch {
@@ -630,13 +680,16 @@ impl Scheduler {
             // emit up to the slot's stop conditions: the budget already
             // guarantees max_new is never overshot, and an early eos
             // simply discards the rest of the verified tail
+            let mut pushed = 0usize;
             for &x in &emitted {
                 slot.generated.push(x);
                 slot.history.push(x);
+                pushed += 1;
                 if slot.finished().is_some() {
                     break;
                 }
             }
+            slot.tl.emit(pushed);
             // the verified-correct prefix stays resident (`last` plus
             // the accepted drafts); the corrective/bonus token is fed
             // next tick
@@ -645,12 +698,18 @@ impl Scheduler {
         Ok(())
     }
 
-    fn complete(&mut self, slot: Slot, finish: FinishReason) -> Completion {
-        let now = Instant::now();
-        let first = slot.first_token_at.unwrap_or(now);
-        let ttft_s = first.duration_since(slot.submitted).as_secs_f64();
+    fn complete(&mut self, mut slot: Slot, finish: FinishReason) -> Completion {
+        slot.tl.finish();
+        debug_assert!(
+            slot.tl.validate().is_ok(),
+            "timeline ordering violated: {:?}",
+            slot.tl.validate()
+        );
+        let now = slot.tl.finished.expect("finish() just stamped");
+        let first = slot.tl.first_token.unwrap_or(now);
+        let ttft_s = first.saturating_duration_since(slot.tl.enqueued).as_secs_f64();
         let decoded = slot.generated.len().saturating_sub(1);
-        let decode_s = now.duration_since(first).as_secs_f64();
+        let decode_s = now.saturating_duration_since(first).as_secs_f64();
         let decode_tps = if decode_s > 0.0 { decoded as f64 / decode_s } else { 0.0 };
         // bytes for the *charged* positions: a forked cache rides the
         // store's (larger) ring but shares its prefix chunks, so the
@@ -671,6 +730,15 @@ impl Scheduler {
                 ("kv_bytes", kv_bytes as f64),
             ],
         );
+        // pool the raw samples (exact percentiles for bench-serve) and
+        // feed the global histograms (Prometheus-style dump)
+        self.latencies.absorb(slot.tl.ttft_ms(), &slot.tl.itl_ms);
+        obs::metrics::observe("serve.ttft_ms", ttft_s * 1e3);
+        for &g in &slot.tl.itl_ms {
+            obs::metrics::observe("serve.itl_ms", g);
+        }
+        obs::metrics::counter_add("serve.completions", 1);
+        obs::metrics::counter_add("serve.tokens_out", slot.generated.len() as u64);
         Completion {
             id: slot.req.id,
             prompt_len: slot.req.prompt.len(),
@@ -678,6 +746,7 @@ impl Scheduler {
             reused_tokens: slot.reused,
             ttft_s,
             decode_tps,
+            itl_ms: slot.tl.itl_ms,
             finish,
         }
     }
@@ -750,7 +819,18 @@ mod tests {
             assert_eq!(c.finish, FinishReason::MaxNew);
             assert!(c.ttft_s >= 0.0);
             assert_eq!(c.reused_tokens, 0, "cache disabled: nothing to reuse");
+            assert_eq!(
+                c.itl_ms.len(),
+                c.tokens.len() - 1,
+                "one ITL sample per token after the first"
+            );
+            assert!(c.itl_ms.iter().all(|&g| g >= 0.0));
         }
+        // pooled latency samples match the per-completion ones
+        assert_eq!(sched.latencies().ttft_ms.len(), 5);
+        let itl_total: usize = done.iter().map(|c| c.itl_ms.len()).sum();
+        assert_eq!(sched.latencies().itl_ms.len(), itl_total);
+        assert!(sched.latencies().ttft().p99 >= sched.latencies().ttft().p50);
         // one metrics record per request
         assert_eq!(sched.metrics.history.len(), 5);
         assert_eq!(sched.metrics.series("ttft_ms").len(), 5);

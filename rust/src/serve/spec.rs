@@ -107,6 +107,16 @@ impl SpecStats {
     }
 }
 
+impl crate::obs::MetricSource for SpecStats {
+    fn metric_kvs(&self) -> Vec<(String, f64)> {
+        vec![
+            ("serve.spec.drafted".to_string(), self.drafted as f64),
+            ("serve.spec.accepted".to_string(), self.accepted as f64),
+            ("serve.spec.acceptance_rate".to_string(), self.acceptance_rate()),
+        ]
+    }
+}
+
 /// Per-slot adaptive draft length: starts at the configured cap, is
 /// halved (floor 1) by a tick with zero accepted drafts, grown back by
 /// one by a fully accepted tick, and held by partial acceptance —

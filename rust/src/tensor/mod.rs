@@ -58,6 +58,7 @@ pub fn gemm_nn_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mu
     if m == 0 || n == 0 || k == 0 {
         return;
     }
+    let _sp = crate::span!("gemm_nn", "tensor");
     let workers = par::plan_workers(m, m * k * n);
     par::par_out_rows(out, m, n, workers, |row0, ochunk| {
         let rows = ochunk.len() / n;
@@ -137,6 +138,7 @@ pub fn gemm_tn_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut
     if k == 0 || n == 0 {
         return;
     }
+    let _sp = crate::span!("gemm_tn", "tensor");
     let workers = par::plan_workers(k, m * k * n);
     par::par_out_rows(out, k, n, workers, |kk0, ochunk| {
         let krows = ochunk.len() / n;
@@ -176,6 +178,7 @@ pub fn gemm_nt_into(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mu
     if m == 0 || k == 0 {
         return;
     }
+    let _sp = crate::span!("gemm_nt", "tensor");
     // B-row tile (output-column tile) of the nt core.
     const JC: usize = 64;
     let workers = par::plan_workers(m, m * k * n);

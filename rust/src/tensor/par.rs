@@ -91,6 +91,10 @@ where
         return;
     }
     let chunk_rows = rows.div_ceil(workers);
+    // Scoped threads don't inherit the caller's span stack: capture
+    // the enclosing span here, hand it to each worker span explicitly
+    // so the trace tree stays connected across the fan-out.
+    let parent = crate::obs::span::current();
     std::thread::scope(|s| {
         let body = &body;
         let mut rest = out;
@@ -105,7 +109,10 @@ where
                 // deferred: the caller's own share, run after spawning
                 first = Some((row0, chunk));
             } else {
-                s.spawn(move || body(row0, chunk));
+                s.spawn(move || {
+                    let _sp = crate::obs::span::span_child("gemm_worker", "tensor", parent);
+                    body(row0, chunk)
+                });
             }
             row0 += take;
         }

@@ -66,7 +66,9 @@ impl BenchRecord {
     }
 }
 
-fn escape(s: &str) -> String {
+/// JSON string-escape (shared with the metrics JSONL writer and the
+/// Chrome trace exporter — one escaping routine, one set of tests).
+pub(crate) fn escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
         match c {

@@ -52,7 +52,13 @@ impl MetricsSink {
         if let Some(w) = self.writer.as_mut() {
             let mut line = format!("{{\"step\":{},\"wall_s\":{:.3}", rec.step, rec.wall_s);
             for (k, v) in &rec.fields {
-                line.push_str(&format!(",\"{}\":{}", k, json_f64(*v)));
+                // field names are caller-supplied: escape them, or a
+                // key containing `"` emits invalid JSONL
+                line.push_str(&format!(
+                    ",\"{}\":{}",
+                    super::bench::escape(k),
+                    json_f64(*v)
+                ));
             }
             line.push('}');
             let _ = writeln!(w, "{line}");
@@ -143,5 +149,25 @@ mod tests {
     fn non_finite_serializes_as_null() {
         assert_eq!(json_f64(f64::NAN), "null");
         assert_eq!(json_f64(1.5), "1.5");
+    }
+
+    #[test]
+    fn field_keys_are_escaped() {
+        let dir = std::env::temp_dir().join(format!("misa_metrics_esc_{}", std::process::id()));
+        let mut m = MetricsSink::to_dir(&dir).unwrap();
+        m.log(0, &[("weird\"key\\name", 1.0)]);
+        m.flush();
+        let text = std::fs::read_to_string(dir.join("metrics.jsonl")).unwrap();
+        assert!(text.contains("\"weird\\\"key\\\\name\":1"), "{text}");
+        // the line is balanced: every unescaped quote is a delimiter
+        let line = text.lines().next().unwrap();
+        let unescaped_quotes = line
+            .as_bytes()
+            .iter()
+            .enumerate()
+            .filter(|&(i, &b)| b == b'"' && (i == 0 || line.as_bytes()[i - 1] != b'\\'))
+            .count();
+        assert_eq!(unescaped_quotes % 2, 0, "{line}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

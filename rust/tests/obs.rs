@@ -1,0 +1,300 @@
+//! Observability integration tests: the histogram against a sorted-vec
+//! oracle, span nesting across the scoped GEMM worker pool, timeline
+//! ordering invariants through a real scheduler run, exporter output,
+//! and — the headline claim — bit-parity of every decode path with
+//! tracing fully enabled.
+
+use std::sync::Mutex;
+
+use misa::obs::{metrics, span, Histogram, Timeline};
+use misa::runtime::{Engine, Session};
+use misa::serve::{
+    generate, GenerateCfg, Request, SamplerCfg, Scheduler, SchedulerCfg, SpecCfg,
+};
+use misa::util::Rng;
+
+/// Tracing, the span buffer, the metrics registry, and the GEMM thread
+/// knob are process-global; serialize every test that touches them so
+/// cargo's parallel harness cannot interleave their state.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tiny_session(seed: u64) -> Session {
+    let mut eng = Engine::host();
+    Session::create(&mut eng, "tiny", seed).unwrap()
+}
+
+fn random_prompt(len: usize, vocab: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    let mut p = vec![1i32]; // BOS
+    while p.len() < len {
+        p.push(rng.range(4, vocab) as i32);
+    }
+    p
+}
+
+/// The log-bucketed histogram must track the exact order statistic
+/// within one bucket ratio (2^(1/8) ≈ 9%) across six decades of
+/// sample magnitude and a sweep of quantiles.
+#[test]
+fn histogram_percentiles_track_a_sorted_vec_oracle() {
+    let mut rng = Rng::new(0x0B5E);
+    let mut h = Histogram::new();
+    let mut xs: Vec<f64> = Vec::with_capacity(5000);
+    for _ in 0..5000 {
+        // log-uniform over [1e-1, 1e5): microsecond blips to minute
+        // stalls, all well above the underflow bucket
+        let v = 10f64.powf(-1.0 + 6.0 * rng.f64());
+        h.observe(v);
+        xs.push(v);
+    }
+    xs.sort_by(|a, b| a.total_cmp(b));
+    let max_log_err = (2f64).ln() / 8.0 * 1.0001; // one bucket, in log space
+    for q in [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 0.999, 1.0] {
+        let exact = misa::obs::percentile_exact(&xs, q);
+        let approx = h.percentile(q);
+        let log_err = (approx / exact).ln().abs();
+        assert!(
+            log_err <= max_log_err,
+            "q={q}: histogram {approx} vs exact {exact} (log err {log_err})"
+        );
+    }
+    assert_eq!(h.count(), 5000);
+    assert!((h.min() - xs[0]).abs() < 1e-12);
+    assert!((h.max() - xs[xs.len() - 1]).abs() < 1e-12);
+}
+
+/// A 4-way GEMM dispatch records one `gemm_nn` root plus three
+/// `gemm_worker` children whose parent pointer survives the scoped
+/// thread hop (thread-locals do not cross `thread::scope`).
+#[test]
+fn gemm_worker_spans_attach_to_the_dispatch_span() {
+    let _g = lock();
+    span::enable_tracing();
+    let _ = span::take_events(); // flush whatever ran before
+    misa::tensor::set_threads(4);
+    // 256×64×64: 1M MACs clears the 128k-per-worker floor at width 4
+    let (m, k, n) = (256usize, 64usize, 64usize);
+    let a = vec![0.5f32; m * k];
+    let b = vec![0.25f32; k * n];
+    let out = misa::tensor::gemm_nn(&a, &b, m, k, n);
+    misa::tensor::set_threads(0); // back to the environment default
+    let (evs, dropped) = span::take_events();
+    span::disable_tracing();
+    assert_eq!(out.len(), m * n);
+    assert_eq!(dropped, 0);
+    let roots: Vec<_> = evs.iter().filter(|e| e.name == "gemm_nn").collect();
+    assert_eq!(roots.len(), 1, "one dispatch span: {evs:?}");
+    assert_eq!(roots[0].depth, 0);
+    assert_eq!(roots[0].cat, "tensor");
+    let workers: Vec<_> = evs.iter().filter(|e| e.name == "gemm_worker").collect();
+    assert_eq!(workers.len(), 3, "width 4 spawns 3 extra workers: {evs:?}");
+    for w in &workers {
+        assert_eq!(w.parent, Some("gemm_nn"), "worker lost its parent");
+        assert_eq!(w.depth, 1);
+        assert_ne!(w.tid, roots[0].tid, "workers run off the caller thread");
+        assert!(w.start_us >= roots[0].start_us);
+        assert!(w.start_us + w.dur_us <= roots[0].start_us + roots[0].dur_us + 1);
+    }
+    // structural sanity of the Chrome render (CI validates via python)
+    let json = span::render_chrome_trace(&evs, 0);
+    assert!(json.contains("\"traceEvents\""), "{json}");
+    assert!(json.contains("\"gemm_worker\""), "{json}");
+    assert!(json.contains("\"ph\":\"X\""), "{json}");
+}
+
+/// Timeline stamps must respect enqueue ≤ admit ≤ prefill ≤ first
+/// token ≤ finish, and ITL bookkeeping must reject impossible states.
+#[test]
+fn timeline_ordering_invariants_hold_and_misuse_is_caught() {
+    let mut tl = Timeline::start();
+    tl.admit();
+    tl.prefill_done();
+    tl.mark_first_token();
+    tl.emit(2);
+    tl.emit(1);
+    tl.finish();
+    tl.validate().unwrap();
+    assert_eq!(tl.itl_ms.len(), 3, "emit(2)+emit(1) → 3 per-token samples");
+    assert!(tl.ttft_ms().unwrap() >= 0.0);
+    // ITL samples without a first token are impossible through the API
+    // (emit no-ops before mark_first_token) and rejected by validate
+    let mut bad = Timeline::start();
+    bad.emit(5);
+    assert!(bad.itl_ms.is_empty(), "emit before first token must no-op");
+    bad.itl_ms.push(1.0);
+    assert!(bad.validate().is_err(), "orphan ITL sample must fail");
+    // negative gaps are rejected too
+    let mut neg = Timeline::start();
+    neg.mark_first_token();
+    neg.itl_ms.push(-1.0);
+    assert!(neg.validate().is_err(), "negative ITL gap must fail");
+}
+
+/// A real scheduler run with tracing on: every hot-path span shows up,
+/// per-request timelines pool into the scheduler's latency vectors,
+/// the registry histograms fill, and the Prometheus dump carries the
+/// precomputed quantiles.
+#[test]
+fn scheduler_run_records_spans_timelines_and_metrics() {
+    let _g = lock();
+    span::enable_tracing();
+    let _ = span::take_events();
+    metrics::reset();
+    let sess = tiny_session(5);
+    // spec pinned off so the non-speculative decode_tick path is the
+    // one under test even when CI forces MISA_SPEC defaults on
+    let mut sched = Scheduler::new(SchedulerCfg {
+        max_slots: 2,
+        token_budget: 128,
+        spec: None,
+        ..SchedulerCfg::default()
+    });
+    let reqs: Vec<Request> = (0..4u64)
+        .map(|id| Request {
+            id,
+            prompt: random_prompt(3 + id as usize, 256, 40 + id),
+            max_new: 6,
+            sampler: SamplerCfg::greedy(),
+            seed: 70 + id,
+            eos: None,
+        })
+        .collect();
+    for r in &reqs {
+        sched.submit(r.clone()).unwrap();
+    }
+    let mut done = sched.run(&sess).unwrap();
+    sched.publish_metrics();
+    let (evs, dropped) = span::take_events();
+    span::disable_tracing();
+    assert_eq!(dropped, 0);
+    done.sort_by_key(|c| c.id);
+    assert_eq!(done.len(), reqs.len());
+    for c in &done {
+        assert_eq!(
+            c.itl_ms.len(),
+            c.tokens.len() - 1,
+            "request {}: one ITL sample per token after the first",
+            c.id
+        );
+        assert!(c.itl_ms.iter().all(|&g| g >= 0.0 && g.is_finite()));
+    }
+    // pooled latencies: one TTFT per request, ITLs sum across requests
+    let lat = sched.latencies();
+    assert_eq!(lat.ttft_ms.len(), reqs.len());
+    let total_itl: usize = done.iter().map(|c| c.itl_ms.len()).sum();
+    assert_eq!(lat.itl_ms.len(), total_itl);
+    let ttft = lat.ttft();
+    assert_eq!(ttft.count, reqs.len());
+    assert!(ttft.p50 <= ttft.p90 && ttft.p90 <= ttft.p99 && ttft.p99 <= ttft.max);
+    // every hot path left its span
+    for name in [
+        "sched_tick",
+        "admission",
+        "prefill_rounds",
+        "decode_tick",
+        "ragged_forward",
+        "decode_batch",
+    ] {
+        assert!(evs.iter().any(|e| e.name == name), "missing span {name:?}");
+    }
+    // the registry saw the run and the dump exposes the quantiles
+    let h = metrics::histogram("serve.ttft_ms").expect("ttft histogram registered");
+    assert_eq!(h.count() as usize, reqs.len());
+    let h = metrics::histogram("serve.itl_ms").expect("itl histogram registered");
+    assert_eq!(h.count() as usize, total_itl);
+    assert_eq!(metrics::counter("serve.completions") as usize, reqs.len());
+    let dump = metrics::prometheus_dump();
+    assert!(dump.contains("# TYPE misa_serve_ttft_ms histogram"), "{dump}");
+    assert!(dump.contains("misa_serve_ttft_ms_quantile{q=\"0.99\"}"), "{dump}");
+    assert!(dump.contains("misa_serve_completions 4"), "{dump}");
+    assert!(dump.contains("misa_serve_peak_active"), "{dump}");
+}
+
+/// Headline correctness claim: instrumentation must not perturb
+/// determinism. With tracing fully enabled, speculative generation
+/// still equals plain generation, scheduled generation still equals
+/// solo generation, and thread counts 1 and 4 agree bit-for-bit with
+/// the tracing-off baseline.
+#[test]
+fn decode_paths_are_bit_identical_with_tracing_enabled() {
+    let _g = lock();
+    let sess = tiny_session(9);
+    let prompt = vec![1, 30, 31, 32, 30, 31, 32, 30, 31];
+    let plain = GenerateCfg {
+        max_new: 16,
+        sampler: SamplerCfg { temperature: 0.8, top_k: 16, top_p: 0.9 },
+        seed: 11,
+        eos: None,
+        spec: None,
+    };
+    let spec = GenerateCfg {
+        spec: Some(SpecCfg { draft_len: 4, ngram: 3 }),
+        ..plain.clone()
+    };
+    // baseline: tracing off, default threads
+    span::disable_tracing();
+    misa::tensor::set_threads(1);
+    let base = generate(&sess, &prompt, &plain).unwrap();
+    // solo requests for the scheduler leg, baseline tokens per request
+    let reqs: Vec<Request> = (0..3u64)
+        .map(|id| Request {
+            id,
+            prompt: random_prompt(4 + id as usize, 256, 300 + id),
+            max_new: 8,
+            sampler: SamplerCfg::greedy(),
+            seed: 500 + id,
+            eos: None,
+        })
+        .collect();
+    let solo: Vec<Vec<i32>> = reqs
+        .iter()
+        .map(|r| {
+            let cfg = GenerateCfg {
+                max_new: r.max_new,
+                sampler: r.sampler,
+                seed: r.seed,
+                eos: r.eos,
+                spec: None,
+            };
+            generate(&sess, &r.prompt, &cfg).unwrap().tokens
+        })
+        .collect();
+    span::enable_tracing();
+    for threads in [1usize, 4] {
+        misa::tensor::set_threads(threads);
+        let a = generate(&sess, &prompt, &plain).unwrap();
+        let b = generate(&sess, &prompt, &spec).unwrap();
+        assert_eq!(a.tokens, base.tokens, "tracing perturbed plain decode (t={threads})");
+        assert_eq!(b.tokens, base.tokens, "tracing perturbed spec decode (t={threads})");
+        let mut sched = Scheduler::new(SchedulerCfg {
+            max_slots: 2,
+            token_budget: 128,
+            spec: None,
+            ..SchedulerCfg::default()
+        });
+        for r in &reqs {
+            sched.submit(r.clone()).unwrap();
+        }
+        let mut done = sched.run(&sess).unwrap();
+        done.sort_by_key(|c| c.id);
+        for (c, want) in done.iter().zip(&solo) {
+            assert_eq!(
+                &c.tokens, want,
+                "tracing perturbed scheduled decode (t={threads}, id={})",
+                c.id
+            );
+        }
+    }
+    misa::tensor::set_threads(0);
+    let (evs, dropped) = span::take_events();
+    span::disable_tracing();
+    assert_eq!(dropped, 0);
+    // the runs above really were traced
+    for name in ["generate", "verify_step", "sched_tick"] {
+        assert!(evs.iter().any(|e| e.name == name), "missing span {name:?}");
+    }
+}
