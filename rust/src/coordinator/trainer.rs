@@ -5,12 +5,14 @@
 //! executables on the hot path) → metrics + simulated-memory accounting.
 //! Python never runs here.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::config::{DataSpec, MethodSpec, RunConfig};
 use crate::data::{loader::exact_match, Loader, TaskKind};
 use crate::memory::{Allocator, Category};
 use crate::modelspec::ModuleKind;
+use crate::obs::memory::MemCategory;
+use crate::obs::optstats::{self, StepRecord, TrainReport, VarianceEstimator, VarianceSample};
 use crate::optim::{
     BAdam, Dora, FullAdam, Galore, Lisa, Lora, LoraMisa, Misa, Optimizer,
 };
@@ -47,6 +49,11 @@ pub struct Trainer {
     /// gradient sq-norm sums by (kind, layer) — Fig. 1 statistics
     pub grad_norm_stats: Vec<(ModuleKind, i32, f64, u64)>,
     collect_grad_stats: bool,
+    /// online MISA-vs-layerwise gradient-variance estimator (always
+    /// on: it only reads norms the backend already computed)
+    pub varest: VarianceEstimator,
+    /// per-step records when `--report-out` is enabled
+    report: Option<TrainReport>,
 }
 
 impl Trainer {
@@ -139,12 +146,37 @@ impl Trainer {
             step_no: 0,
             grad_norm_stats: Vec::new(),
             collect_grad_stats: false,
+            varest: VarianceEstimator::new(),
+            report: None,
         })
     }
 
     /// Record per-(kind, layer) gradient norms during training (Fig. 1).
     pub fn collect_grad_stats(&mut self, on: bool) {
         self.collect_grad_stats = on;
+    }
+
+    /// Start collecting per-step `--report-out` records. Collection is
+    /// a pure read-out of already-computed norms and counters — the
+    /// training trajectory is bit-identical with it on or off
+    /// (test-pinned).
+    pub fn enable_report(&mut self) {
+        self.report = Some(TrainReport::new(&self.cfg.model, &self.opt.name()));
+    }
+
+    /// Write the structured training report collected since
+    /// [`Self::enable_report`] as one `json.load`-valid document.
+    pub fn write_report(&self, path: &std::path::Path) -> Result<()> {
+        let rep = self
+            .report
+            .as_ref()
+            .context("report collection was not enabled (call enable_report first)")?;
+        let (units, rounds) = match self.opt.telemetry() {
+            Some(t) => (t.units(), t.rounds()),
+            None => (Vec::new(), 0),
+        };
+        std::fs::write(path, rep.to_json(&self.varest, &units, rounds))
+            .with_context(|| format!("writing training report {path:?}"))
     }
 
     pub fn step_no(&self) -> u64 {
@@ -185,6 +217,43 @@ impl Trainer {
         self.charge_memory();
         // total grad norm = Σ sq_norms (convergence metric, Thm. 1)
         let total_grad_sq: f64 = out.sq_norms.iter().map(|&x| x as f64).sum();
+        // sampler telemetry + the variance counterfactual: a pure
+        // read-out of the sq-norms above and counters the optimizer
+        // already tracks — never perturbs the step (bit-parity pinned)
+        let sample = if let Some(telem) = self.opt.telemetry() {
+            let units = telem.units();
+            let s: Vec<f64> = units
+                .iter()
+                .map(|u| {
+                    let sq: f64 = u.params.iter().map(|&p| out.sq_norms[p] as f64).sum();
+                    sq / u.numel.max(1) as f64
+                })
+                .collect();
+            let sample = self.varest.record(&units, &s);
+            optstats::publish(telem.sampler_label(), telem.rounds(), &units, &sample);
+            sample
+        } else {
+            VarianceSample {
+                var_sampled: 0.0,
+                var_layerwise: 0.0,
+                ratio: 1.0,
+                counted: false,
+            }
+        };
+        if let Some(rep) = &mut self.report {
+            rep.push(StepRecord {
+                step: self.step_no,
+                loss: out.loss as f64,
+                var_sampled: sample.var_sampled,
+                var_layerwise: sample.var_layerwise,
+                var_ratio: sample.ratio,
+                grad_sq_norm: total_grad_sq,
+                optim_state_bytes: crate::obs::memory::current(MemCategory::OptimStates),
+                activation_scratch_bytes: crate::obs::memory::current(
+                    MemCategory::ActivationScratch,
+                ),
+            });
+        }
         if self.step_no % self.cfg.log_every == 0 {
             self.metrics.log(
                 self.step_no,
@@ -240,6 +309,12 @@ impl Trainer {
         let adapters = self
             .alloc
             .alloc(Category::Adapters, prof.adapter_elems * f32b);
+        // live byte gauge: what actually holds Adam moments right now
+        // (the quantity Alg. 1 line 17's state-clearing shrinks)
+        crate::obs::memory::set_current(
+            MemCategory::OptimStates,
+            (prof.optim_elems + prof.adapter_elems) * f32b,
+        );
         // transient: free activations + grads at step end; optimizer
         // states/adapters/params conceptually persist but we re-charge
         // each step, so free everything to keep the ledger flat.

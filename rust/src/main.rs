@@ -19,7 +19,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use misa::config::{DataSpec, Doc, RunConfig};
+use misa::config::{DataSpec, Doc, MethodSpec, RunConfig};
 use misa::coordinator::experiments::{self, ExpCtx};
 use misa::coordinator::{ckpt, Trainer};
 use misa::memory::{self, Arch, Method, Workload};
@@ -39,6 +39,7 @@ fn usage() -> ! {
          \x20           [--lr F] [--delta F] [--eta F] [--t-inner N] [--data D]\n\
          \x20           [--pretrain] [--seed N] [--out DIR] [--artifacts DIR]\n\
          \x20           [--save-ckpt FILE] [--backend host|pjrt] [--host]\n\
+         \x20           [--report-out FILE]  (per-step JSON training report)\n\
          \x20 misa generate --ckpt FILE [--model M] [--prompt \"1,2,3\"] [--max-new N]\n\
          \x20           [--temp F] [--top-k N] [--top-p F] [--eos TOK] [--seed N]\n\
          \x20           [--spec] [--draft-len N] [--spec-ngram N]\n\
@@ -49,6 +50,8 @@ fn usage() -> ! {
          \x20           [--draft-len N] [--spec-ngram N] [--temp F] [--top-k N]\n\
          \x20           [--top-p F] [--seed N] [--json FILE]\n\
          \x20 misa bench [--model M] [--steps N] [--seed N] [--json FILE]\n\
+         \x20           [--variance-report] [--t-inner N]  (MISA-vs-layerwise\n\
+         \x20           gradient-estimator variance on the same norms)\n\
          \x20 misa exp <name|all|list> [--full] [--artifacts DIR] [--backend B]\n\
          \x20 misa info [--artifacts DIR] [--backend B]\n\n\
          Every subcommand also takes --threads N (GEMM worker-pool width;\n\
@@ -68,10 +71,12 @@ const VALUED_FLAGS: &[&str] = &[
     "max-new", "temp", "top-k", "top-p", "eos", "requests", "prompt-len", "shared-prefix",
     "slots", "token-budget", "prefix-cache-cap", "prefix-cache-entries", "prefill-chunk",
     "draft-len", "spec-ngram", "threads", "json", "trace-out", "metrics-out",
+    "report-out",
 ];
 
 /// Boolean switches.
-const SWITCHES: &[&str] = &["pretrain", "full", "host", "prefix-cache", "spec"];
+const SWITCHES: &[&str] =
+    &["pretrain", "full", "host", "prefix-cache", "spec", "variance-report"];
 
 struct Args {
     positional: Vec<String>,
@@ -168,6 +173,9 @@ fn finish_obs(out: &ObsOut) -> Result<()> {
         log_info!("trace written: {} ({n} spans)", path.display());
     }
     if let Some(path) = &out.metrics {
+        // land the byte-accounting gauges (mem.* + process RSS) in the
+        // registry so every dump carries the run's memory picture
+        misa::obs::memory::publish();
         std::fs::write(path, misa::obs::metrics::prometheus_dump())
             .with_context(|| format!("writing metrics dump {path:?}"))?;
         log_info!("metrics written: {}", path.display());
@@ -233,6 +241,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         engine.backend_name()
     );
     let mut t = Trainer::new(&mut engine, rc.clone())?;
+    if args.flags.contains_key("report-out") {
+        t.enable_report();
+    }
     let eval_every = rc.eval_every.max(1);
     let mut remaining = rc.steps;
     while remaining > 0 {
@@ -253,6 +264,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     let (fb, op) = t.avg_times_ms();
     println!("avg per-step: fwd+bwd {fb:.1} ms, optimizer {op:.1} ms");
     t.metrics.flush();
+    if let Some(path) = args.flags.get("report-out") {
+        t.write_report(Path::new(path))?;
+        println!("training report written: {path}");
+    }
     if let Some(path) = args.flags.get("save-ckpt") {
         ckpt::save(Path::new(path), &t.sess.host)?;
         println!("checkpoint written: {path}");
@@ -557,7 +572,12 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         done.iter().map(|c| c.ttft_s).sum::<f64>() / done.len().max(1) as f64 * 1e3;
     let mean_tps =
         done.iter().map(|c| c.decode_tps).sum::<f64>() / done.len().max(1) as f64;
-    let kv_bytes =
+    // measured peak: the scheduler samples COW-deduplicated physical
+    // bytes across slots + prefill jobs + store entries every tick and
+    // the byte-accounting tracker keeps the high-water mark; the
+    // analytic product bound ignores sharing and ring right-sizing
+    let kv_meas = misa::obs::memory::peak(misa::obs::memory::MemCategory::KvCache);
+    let kv_bound =
         KvCache::bytes_for(&sess.spec, target_len + max_new) * sched.peak_active();
     println!(
         "completed {} requests in {wall:.2} s · aggregate {:.1} tok/s · \
@@ -566,9 +586,11 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         new_tokens as f64 / wall.max(1e-9),
     );
     println!(
-        "peak concurrency {} slots · peak kv residency {:.2} MiB",
+        "peak concurrency {} slots · peak kv residency {:.2} MiB measured \
+         (analytic bound {:.2} MiB)",
         sched.peak_active(),
-        kv_bytes as f64 / (1024.0 * 1024.0),
+        kv_meas as f64 / (1024.0 * 1024.0),
+        kv_bound as f64 / (1024.0 * 1024.0),
     );
     // pooled per-request timelines → exact percentile distributions
     let ttft = sched.latencies().ttft();
@@ -631,7 +653,8 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
             .num("itl_p90", itl.p90)
             .num("itl_p99", itl.p99)
             .num("peak_active", sched.peak_active() as f64)
-            .num("peak_kv_mib", kv_bytes as f64 / (1024.0 * 1024.0))
+            .num("peak_kv_mib", kv_meas as f64 / (1024.0 * 1024.0))
+            .num("peak_kv_bound_mib", kv_bound as f64 / (1024.0 * 1024.0))
             .nums(&[
                 ("cache_lookups", stats.lookups as f64),
                 ("cache_hits", stats.hits as f64),
@@ -649,10 +672,118 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `misa bench --variance-report` — price MISA's importance sampling
+/// against the uniform layer-wise counterfactual. One MISA training
+/// run on the tiny builtin model feeds the online estimator: at every
+/// step it computes the single-draw gradient-estimator variance under
+/// the sampler's actual probabilities *and* under uniform layer
+/// sampling, from the same per-module squared gradient norms
+/// (Proposition 1: p ∝ s minimizes it, so the ratio should land
+/// below 1 once the score EMA differentiates). A LISA run with the
+/// same budget supplies a trained loss reference. Everything lands in
+/// a `bench-train-variance` record (`--json`, default
+/// `BENCH_train.json`).
+fn cmd_bench_variance(args: &Args) -> Result<()> {
+    let model = args.flags.get("model").cloned().unwrap_or_else(|| "tiny".to_string());
+    let steps: u64 = match args.flags.get("steps") {
+        Some(n) => n.parse().context("--steps")?,
+        None => 120,
+    };
+    let seed: u64 = match args.flags.get("seed") {
+        Some(s) => s.parse().context("--seed")?,
+        None => 0,
+    };
+    let t_inner: usize = match args.flags.get("t-inner") {
+        Some(n) => n.parse().context("--t-inner")?,
+        None => 20,
+    };
+    let base = RunConfig { model: model.clone(), steps, seed, ..RunConfig::default() };
+    let mut engine = make_engine(args)?;
+    println!(
+        "bench --variance-report: model={model} steps={steps} t_inner={t_inner} \
+         backend={} threads={}",
+        engine.backend_name(),
+        misa::tensor::threads(),
+    );
+    let t0 = std::time::Instant::now();
+    let (misa_loss, mean_s, mean_l, mean_ratio, ratio_of_means, last_ratio, counted) = {
+        let mut rc = base.clone();
+        rc.method = MethodSpec::Misa(misa::optim::MisaConfig {
+            t_inner,
+            ..misa::optim::MisaConfig::default()
+        });
+        let mut t = Trainer::new(&mut engine, rc)?;
+        t.run(steps)?;
+        let v = &t.varest;
+        (
+            t.metrics.last("train_loss").unwrap_or(f64::NAN),
+            v.mean_sampled(),
+            v.mean_layerwise(),
+            v.mean_ratio(),
+            v.ratio_of_means(),
+            v.last().ratio,
+            v.counted_steps(),
+        )
+    };
+    let lisa_loss = {
+        let mut rc = base;
+        rc.method = MethodSpec::Lisa { t_inner };
+        let mut t = Trainer::new(&mut engine, rc)?;
+        t.run(steps)?;
+        t.metrics.last("train_loss").unwrap_or(f64::NAN)
+    };
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "grad-estimator variance (single draw, same norms): \
+         misa {mean_s:.4e} · layerwise {mean_l:.4e}"
+    );
+    println!(
+        "variance ratio misa/layerwise: mean {mean_ratio:.4} · \
+         ratio-of-means {ratio_of_means:.4} · last {last_ratio:.4} \
+         ({counted} scored steps)"
+    );
+    println!("final train_loss: misa {misa_loss:.4} · lisa {lisa_loss:.4}");
+    if !(mean_ratio < 1.0) {
+        misa::log_warn!(
+            "importance sampling did not reduce estimator variance \
+             (mean ratio {mean_ratio:.4} >= 1); scores may not have \
+             differentiated in {steps} steps"
+        );
+    }
+    let json_path = args
+        .flags
+        .get("json")
+        .cloned()
+        .unwrap_or_else(|| "BENCH_train.json".to_string());
+    misa::util::BenchRecord::new("bench-train-variance")
+        .tag("model", model)
+        .tag("backend", engine.backend_name())
+        .num("threads", misa::tensor::threads() as f64)
+        .num("steps", steps as f64)
+        .num("t_inner", t_inner as f64)
+        .num("counted_steps", counted as f64)
+        .num("var_sampled_mean", mean_s)
+        .num("var_layerwise_mean", mean_l)
+        .num("var_ratio_mean", mean_ratio)
+        .num("var_ratio_of_means", ratio_of_means)
+        .num("var_ratio_last", last_ratio)
+        .num("misa_train_loss", misa_loss)
+        .num("lisa_train_loss", lisa_loss)
+        .num("wall_s", wall)
+        .write(Path::new(&json_path))?;
+    println!("variance report written: {json_path}");
+    Ok(())
+}
+
 /// `misa bench` — training step-time: run `--steps` fwd/bwd+optimizer
 /// steps on `--model` and report/record ms per phase (the training
 /// counterpart of `bench-serve`, sharing the same JSON schema).
+/// `--variance-report` switches to the MISA-vs-layerwise estimator-
+/// variance measurement instead ([`cmd_bench_variance`]).
 fn cmd_bench(args: &Args) -> Result<()> {
+    if args.switches.contains("variance-report") {
+        return cmd_bench_variance(args);
+    }
     let mut engine = make_engine(args)?;
     let mut rc = RunConfig::default();
     if let Some(m) = args.flags.get("model") {
@@ -951,6 +1082,24 @@ mod tests {
         // without the switch the MISA_SPEC environment default applies
         let a = parse_args(&v(&["bench-serve"])).unwrap();
         assert_eq!(spec_from(&a).unwrap(), SpecCfg::from_env());
+    }
+
+    #[test]
+    fn telemetry_flags_parse() {
+        let a = parse_args(&v(&["train", "--report-out", "rep.json", "--steps", "5"]))
+            .unwrap();
+        assert_eq!(a.flags.get("report-out").unwrap(), "rep.json");
+        // --report-out is valued: a missing value is a hard error
+        assert!(parse_args(&v(&["train", "--report-out"])).is_err());
+        assert!(parse_args(&v(&["train", "--report-out", "--steps", "5"])).is_err());
+        // --variance-report is a switch and consumes no value
+        let a = parse_args(&v(&["bench", "--variance-report", "9"])).unwrap();
+        assert!(a.switches.contains("variance-report"));
+        assert_eq!(a.positional, vec!["bench", "9"]);
+        let a =
+            parse_args(&v(&["bench", "--variance-report", "--t-inner", "10"])).unwrap();
+        assert!(a.switches.contains("variance-report"));
+        assert_eq!(a.flags.get("t-inner").unwrap(), "10");
     }
 
     #[test]

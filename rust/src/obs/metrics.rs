@@ -158,6 +158,37 @@ impl Histogram {
         self.max()
     }
 
+    /// The interval histogram `self − earlier`: bucketwise count
+    /// difference (saturating, so a registry reset between snapshots
+    /// degrades to an empty interval instead of underflowing). `sum`
+    /// subtracts exactly; `min`/`max` are *approximated* from the
+    /// interval's populated bucket edges (the exact extrema of only
+    /// the interval's samples are not recoverable from bucket counts),
+    /// so interval percentiles keep the same one-bucket error bound as
+    /// live ones.
+    fn delta_from(&self, earlier: &Histogram) -> Histogram {
+        let mut d = Histogram::new();
+        for i in 0..HIST_BUCKETS {
+            d.counts[i] = self.counts[i].saturating_sub(earlier.counts[i]);
+        }
+        d.underflow = self.underflow.saturating_sub(earlier.underflow);
+        d.count = self.count.saturating_sub(earlier.count);
+        d.sum = if d.count == 0 { 0.0 } else { self.sum - earlier.sum };
+        if d.underflow > 0 {
+            d.min = 0.0;
+            d.max = HIST_MIN;
+        }
+        for (i, &c) in d.counts.iter().enumerate() {
+            if c > 0 {
+                // lower edge of the first populated bucket...
+                d.min = d.min.min(HIST_MIN * 2f64.powf(i as f64 / BUCKETS_PER_OCTAVE));
+                // ...upper edge of the last one
+                d.max = d.max.max(Self::upper(i));
+            }
+        }
+        d
+    }
+
     /// `(upper_bound, cumulative_count)` for every non-empty bucket,
     /// ascending — the Prometheus exposition shape.
     pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
@@ -258,6 +289,70 @@ pub fn reset() {
     with_registry(|r| *r = Inner::default());
 }
 
+/// A point-in-time copy of the whole registry. Two snapshots bracket
+/// an interval; [`Snapshot::delta`] recovers exactly what happened in
+/// between, so windowed reporting doesn't need process-lifetime
+/// counters or a disruptive [`reset`].
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+/// Capture the registry as it is right now.
+pub fn snapshot() -> Snapshot {
+    with_registry(|r| Snapshot {
+        counters: r.counters.clone(),
+        gauges: r.gauges.clone(),
+        hists: r.hists.clone(),
+    })
+}
+
+impl Snapshot {
+    /// Counter value at capture time (0 if never written).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Gauge value at capture time, if ever written.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Histogram at capture time, if ever written.
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.hists.get(name)
+    }
+
+    /// The interval `self − earlier`: counters subtract (saturating),
+    /// histograms subtract bucketwise (see `Histogram::delta_from`),
+    /// and gauges keep `self`'s point-in-time values — a gauge is a
+    /// level, not a flow, so "activity between snapshots" means its
+    /// latest reading. Names absent from `earlier` are treated as
+    /// starting from zero/empty.
+    pub fn delta(&self, earlier: &Snapshot) -> Snapshot {
+        let empty = Histogram::new();
+        Snapshot {
+            counters: self
+                .counters
+                .iter()
+                .map(|(k, &v)| {
+                    (k.clone(), v.saturating_sub(earlier.counter(k)))
+                })
+                .collect(),
+            gauges: self.gauges.clone(),
+            hists: self
+                .hists
+                .iter()
+                .map(|(k, h)| {
+                    (k.clone(), h.delta_from(earlier.hists.get(k).unwrap_or(&empty)))
+                })
+                .collect(),
+        }
+    }
+}
+
 /// Sanitize a metric name into the Prometheus charset and prefix it
 /// with `misa_` (dots and dashes become underscores).
 fn prom_name(name: &str) -> String {
@@ -325,6 +420,10 @@ pub fn prometheus_dump() -> String {
 mod tests {
     use super::*;
 
+    // The registry is process-global; tests that reset or read it
+    // serialize through one mutex so they can't clobber each other.
+    static GATE: Mutex<()> = Mutex::new(());
+
     #[test]
     fn histogram_counts_and_moments() {
         let mut h = Histogram::new();
@@ -386,6 +485,7 @@ mod tests {
 
     #[test]
     fn registry_counters_gauges_histograms() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
         reset();
         counter_add("t.count", 2);
         counter_add("t.count", 3);
@@ -403,6 +503,7 @@ mod tests {
 
     #[test]
     fn prometheus_dump_is_well_formed() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
         reset();
         counter_add("t.reqs", 7);
         gauge_set("t.depth", 3.0);
@@ -427,6 +528,47 @@ mod tests {
     }
 
     #[test]
+    fn snapshot_delta_equals_interval_activity() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        // deltas are insensitive to whatever state preceded the first
+        // snapshot, so no reset() — unique names avoid cross-talk
+        counter_add("t.snap.c", 10);
+        observe("t.snap.h", 4.0);
+        gauge_set("t.snap.g", 1.0);
+        let s1 = snapshot();
+        counter_add("t.snap.c", 3);
+        counter_add("t.snap.new", 2); // born inside the interval
+        observe("t.snap.h", 8.0);
+        observe("t.snap.h", 16.0);
+        gauge_set("t.snap.g", 7.5);
+        let s2 = snapshot();
+        let d = s2.delta(&s1);
+        // counters: exactly the interval's increments
+        assert_eq!(d.counter("t.snap.c"), 3);
+        assert_eq!(d.counter("t.snap.new"), 2);
+        assert_eq!(d.counter("t.snap.never"), 0);
+        // gauges: the later point-in-time level
+        assert_eq!(d.gauge("t.snap.g"), Some(7.5));
+        // histograms: only the interval's samples
+        let h = d.histogram("t.snap.h").unwrap();
+        assert_eq!(h.count(), 2);
+        assert!((h.sum() - 24.0).abs() < 1e-12, "{}", h.sum());
+        assert!((h.mean() - 12.0).abs() < 1e-12);
+        // interval percentiles keep the one-bucket error bound
+        let ratio = 2f64.powf(1.0 / BUCKETS_PER_OCTAVE);
+        let p = h.percentile(1.0);
+        assert!(p <= 16.0 * ratio && p >= 16.0 / ratio, "p100 {p}");
+        let p = h.percentile(0.5);
+        assert!(p <= 8.0 * ratio && p >= 8.0 / ratio, "p50 {p}");
+        // an idle interval deltas to zero activity
+        let s3 = snapshot();
+        let idle = s3.delta(&s2);
+        assert_eq!(idle.counter("t.snap.c"), 0);
+        assert_eq!(idle.histogram("t.snap.h").unwrap().count(), 0);
+        assert_eq!(idle.histogram("t.snap.h").unwrap().percentile(0.9), 0.0);
+    }
+
+    #[test]
     fn metric_source_publishes_gauges() {
         struct S;
         impl MetricSource for S {
@@ -434,6 +576,7 @@ mod tests {
                 vec![("t.src.a".to_string(), 1.0), ("t.src.b".to_string(), 2.0)]
             }
         }
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
         reset();
         publish(&S);
         assert_eq!(gauge("t.src.a"), Some(1.0));

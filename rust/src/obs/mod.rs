@@ -20,16 +20,30 @@
 //! - [`logger`] — `MISA_LOG`-leveled stderr logging replacing raw
 //!   `eprintln!` diagnostics; timestamps opt-in (`MISA_LOG_TS=1`) so
 //!   test output stays stable.
+//! - [`optstats`] — module-sampling telemetry for the training path:
+//!   per-module importance scores, empirical vs. target sampling
+//!   frequencies (chi-square drift), and the online single-draw
+//!   gradient-variance estimator pricing MISA's distribution against
+//!   the uniform layer-wise counterfactual from the same norms
+//!   (`train --report-out`, `bench --variance-report`).
+//! - [`memory`] — byte-accounting gauges: optimizer-state residency,
+//!   activation scratch, COW-deduplicated KV-cache bytes, process
+//!   RSS/HWM high-water marks.
 //!
 //! See DESIGN.md §7 "Observability architecture" for the span model,
-//! overhead budget, and exporter formats.
+//! overhead budget, and exporter formats, and §8 "Training telemetry"
+//! for the variance-estimator math and memory categories.
 
 pub mod logger;
+pub mod memory;
 pub mod metrics;
+pub mod optstats;
 pub mod span;
 pub mod timeline;
 
 pub use logger::Level;
+pub use memory::MemCategory;
 pub use metrics::{percentile_exact, Histogram, MetricSource};
+pub use optstats::{TrainReport, VarianceEstimator, VarianceSample};
 pub use span::{SpanEvent, SpanGuard};
 pub use timeline::{Latencies, LatencySummary, Timeline};

@@ -1,0 +1,639 @@
+//! Module-sampling telemetry: per-module importance scores, empirical
+//! vs. target sampling frequencies with a chi-square drift statistic,
+//! and an online single-draw gradient-variance estimator that turns
+//! the paper's variance-reduction claim (Prop. 1 / Theorem 1) into a
+//! live metric.
+//!
+//! Everything here is a *pure read-out*: the inputs are the scaled
+//! squared gradient norms the backend already computes as a by-product
+//! (App. A.2) and counters the samplers already maintain
+//! ([`SamplingUnit`] snapshots from [`SamplerTelemetry`]). Recording
+//! never touches an RNG stream or a parameter, so bit-parity with
+//! telemetry enabled is structural — pinned by the report on/off
+//! parity tests.
+//!
+//! ## The variance estimator
+//!
+//! A block-sampling optimizer draws block `b` with probability `p_b`
+//! and scales its update by `1/p_b` (importance sampling). For the
+//! per-block scalar `s_b ≥ 0` — here the scaled squared grad norm
+//! `‖g_b‖²/n_b` — the single-draw estimator `X = s_B/p_B`, `B ~ p`,
+//! has
+//!
+//! ```text
+//! Var(p) = Σ_b s_b²/p_b − (Σ_b s_b)²
+//! ```
+//!
+//! minimized at `p_b ∝ s_b` (Prop. 1). [`VarianceEstimator`] evaluates
+//! this functional each step at the sampler's own distribution (MISA's
+//! tempered softmax over the Eq. 4 EMA) **and** at the uniform
+//! layer-wise counterfactual `p_b = 1/(L·k_l)` — pick one of `L`
+//! layers uniformly, then each of its `k_l` modules — i.e. the
+//! LISA/BAdam distribution evaluated on the *same* norms. The ratio of
+//! the two is the measured analogue of the paper's layer-wise
+//! comparison; `misa bench --variance-report` records it into
+//! `BENCH_train.json`.
+//!
+//! [`SamplerTelemetry`]: crate::optim::sampler::SamplerTelemetry
+
+use crate::obs::{memory, metrics};
+use crate::optim::sampler::SamplingUnit;
+use crate::util::bench::escape;
+
+/// Single-draw importance-sampling variance `Σ_b s_b²/p_b − (Σ_b s_b)²`
+/// of the estimator `s_B/p_B`, `B ~ p`. Zero-mass blocks contribute
+/// nothing; a positive-mass block at (numerically) zero probability is
+/// priced at the smallest positive normal instead of `Inf` so one
+/// degenerate softmax tail cannot poison a whole report. Clamped at
+/// 0.0 against rounding when `p ∝ s` exactly.
+pub fn importance_variance(s: &[f64], p: &[f64]) -> f64 {
+    debug_assert_eq!(s.len(), p.len());
+    let total: f64 = s.iter().sum();
+    let mut second = 0.0;
+    for (&si, &pi) in s.iter().zip(p) {
+        if si == 0.0 {
+            continue;
+        }
+        second += si * si / pi.max(f64::MIN_POSITIVE);
+    }
+    (second - total * total).max(0.0)
+}
+
+/// The uniform layer-wise counterfactual distribution over `units`:
+/// `p_b = 1/(L·k_l)` where `L` is the number of layer groups and `k_l`
+/// the number of units in `b`'s group — one of `L` layers drawn
+/// uniformly, then every module of that layer. Layerless units
+/// (`layer < 0`, embed/head/norms) are lumped into one pseudo-group so
+/// the distribution still sums to 1 over mixed pools.
+pub fn layerwise_probs(units: &[SamplingUnit]) -> Vec<f64> {
+    use std::collections::BTreeMap;
+    let mut group_size: BTreeMap<i32, usize> = BTreeMap::new();
+    for u in units {
+        *group_size.entry(u.layer.max(-1)).or_insert(0) += 1;
+    }
+    let l = group_size.len().max(1) as f64;
+    units
+        .iter()
+        .map(|u| 1.0 / (l * group_size[&u.layer.max(-1)] as f64))
+        .collect()
+}
+
+/// Pearson chi-square drift between empirical selection counts and the
+/// sampler's *current* target distribution:
+/// `Σ_b (c_b − N·p_b)²/(N·p_b)` with `N = Σ_b c_b` total selections.
+/// Returns 0.0 before any selection. Near `B−1` when the empirical
+/// frequencies track the target; grows linearly in `N` under a fixed
+/// mismatch. Because MISA's target moves with the score EMA, this is a
+/// drift indicator (how far history lags the present distribution),
+/// not a goodness-of-fit test.
+pub fn chi_square(units: &[SamplingUnit]) -> f64 {
+    let n: u64 = units.iter().map(|u| u.count).sum();
+    if n == 0 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    units
+        .iter()
+        .map(|u| {
+            let e = nf * u.prob;
+            if e <= 0.0 {
+                if u.count == 0 {
+                    0.0
+                } else {
+                    f64::INFINITY
+                }
+            } else {
+                let d = u.count as f64 - e;
+                d * d / e
+            }
+        })
+        .sum()
+}
+
+/// One step's variance read-out.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VarianceSample {
+    /// `Var(p)` at the sampler's own distribution.
+    pub var_sampled: f64,
+    /// `Var(p)` at the uniform layer-wise counterfactual.
+    pub var_layerwise: f64,
+    /// `var_sampled / var_layerwise` (1.0 when the counterfactual is 0).
+    pub ratio: f64,
+    /// Whether this step entered the running means (scores
+    /// differentiated and the counterfactual variance was positive).
+    pub counted: bool,
+}
+
+/// Online accumulator of [`VarianceSample`]s over a training run.
+///
+/// Cold-start steps are excluded from the running means: until the
+/// first EMA refresh every sampler's scores are identical, its
+/// distribution is uniform, and the "comparison" is vacuous (ratio
+/// pinned at ~1.0 by construction). Only steps where the scores
+/// actually differentiate are counted — the per-step samples still
+/// report the raw values either way.
+#[derive(Clone, Debug, Default)]
+pub struct VarianceEstimator {
+    steps: u64,
+    counted: u64,
+    sum_sampled: f64,
+    sum_layerwise: f64,
+    sum_ratio: f64,
+    last: VarianceSample,
+}
+
+impl VarianceEstimator {
+    /// A fresh estimator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one step: `s[i]` is the scaled squared grad norm of
+    /// `units[i]` this step. Pure arithmetic on copies — never
+    /// perturbs the sampler or the step.
+    pub fn record(&mut self, units: &[SamplingUnit], s: &[f64]) -> VarianceSample {
+        let probs: Vec<f64> = units.iter().map(|u| u.prob).collect();
+        let lw = layerwise_probs(units);
+        let var_sampled = importance_variance(s, &probs);
+        let var_layerwise = importance_variance(s, &lw);
+        let mut mn = f64::INFINITY;
+        let mut mx = f64::NEG_INFINITY;
+        for u in units {
+            mn = mn.min(u.score);
+            mx = mx.max(u.score);
+        }
+        let scored = units.len() > 1 && mx > mn;
+        let ratio = if var_layerwise > 0.0 {
+            var_sampled / var_layerwise
+        } else {
+            1.0
+        };
+        let counted = scored && var_layerwise > 0.0;
+        self.steps += 1;
+        if counted {
+            self.counted += 1;
+            self.sum_sampled += var_sampled;
+            self.sum_layerwise += var_layerwise;
+            self.sum_ratio += ratio;
+        }
+        let sample = VarianceSample {
+            var_sampled,
+            var_layerwise,
+            ratio,
+            counted,
+        };
+        self.last = sample;
+        sample
+    }
+
+    /// Steps recorded (counted or not).
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Steps that entered the running means.
+    pub fn counted_steps(&self) -> u64 {
+        self.counted
+    }
+
+    /// Mean sampled-distribution variance over counted steps.
+    pub fn mean_sampled(&self) -> f64 {
+        if self.counted == 0 {
+            0.0
+        } else {
+            self.sum_sampled / self.counted as f64
+        }
+    }
+
+    /// Mean layer-wise counterfactual variance over counted steps.
+    pub fn mean_layerwise(&self) -> f64 {
+        if self.counted == 0 {
+            0.0
+        } else {
+            self.sum_layerwise / self.counted as f64
+        }
+    }
+
+    /// Mean of the per-step ratios over counted steps (1.0 if none).
+    pub fn mean_ratio(&self) -> f64 {
+        if self.counted == 0 {
+            1.0
+        } else {
+            self.sum_ratio / self.counted as f64
+        }
+    }
+
+    /// Ratio of the summed variances `Σ var_sampled / Σ var_layerwise`
+    /// — the aggregate variance reduction, robust to a few
+    /// small-denominator steps that skew [`Self::mean_ratio`].
+    pub fn ratio_of_means(&self) -> f64 {
+        if self.sum_layerwise > 0.0 {
+            self.sum_sampled / self.sum_layerwise
+        } else {
+            1.0
+        }
+    }
+
+    /// The most recent sample.
+    pub fn last(&self) -> VarianceSample {
+        self.last
+    }
+}
+
+/// Publish a sampler snapshot + variance sample into the metrics
+/// registry. Per-unit gauges are namespaced
+/// `optim.<label>.unit.<name>.{score,prob,freq}`; aggregates are
+/// `optim.<label>.{rounds,chi_square}` and `train.grad_var.*`.
+pub fn publish(label: &str, rounds: u64, units: &[SamplingUnit], sample: &VarianceSample) {
+    let n: u64 = units.iter().map(|u| u.count).sum();
+    for u in units {
+        let base = format!("optim.{label}.unit.{}", u.name);
+        metrics::gauge_set(&format!("{base}.score"), u.score);
+        metrics::gauge_set(&format!("{base}.prob"), u.prob);
+        let freq = if n == 0 {
+            0.0
+        } else {
+            u.count as f64 / n as f64
+        };
+        metrics::gauge_set(&format!("{base}.freq"), freq);
+    }
+    metrics::gauge_set(&format!("optim.{label}.rounds"), rounds as f64);
+    metrics::gauge_set(&format!("optim.{label}.chi_square"), chi_square(units));
+    metrics::gauge_set("train.grad_var.sampled", sample.var_sampled);
+    metrics::gauge_set("train.grad_var.layerwise", sample.var_layerwise);
+    metrics::gauge_set("train.grad_var.ratio", sample.ratio);
+}
+
+fn jf(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// One per-step record of the `misa train --report-out` document.
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    /// 0-based trainer step.
+    pub step: u64,
+    /// Training loss at this step.
+    pub loss: f64,
+    /// `Var(p)` at the sampler's distribution (0.0 for non-samplers).
+    pub var_sampled: f64,
+    /// `Var(p)` at the layer-wise counterfactual.
+    pub var_layerwise: f64,
+    /// `var_sampled / var_layerwise`.
+    pub var_ratio: f64,
+    /// Total squared gradient norm over all parameters.
+    pub grad_sq_norm: f64,
+    /// Optimizer-state residency after the update (bytes).
+    pub optim_state_bytes: u64,
+    /// Activation scratch held by the backend this step (bytes).
+    pub activation_scratch_bytes: u64,
+}
+
+impl StepRecord {
+    fn to_json(&self) -> String {
+        format!(
+            "{{\"step\": {}, \"loss\": {}, \"var_sampled\": {}, \"var_layerwise\": {}, \
+             \"var_ratio\": {}, \"grad_sq_norm\": {}, \"optim_state_bytes\": {}, \
+             \"activation_scratch_bytes\": {}}}",
+            self.step,
+            jf(self.loss),
+            jf(self.var_sampled),
+            jf(self.var_layerwise),
+            jf(self.var_ratio),
+            jf(self.grad_sq_norm),
+            self.optim_state_bytes,
+            self.activation_scratch_bytes
+        )
+    }
+}
+
+/// The whole `--report-out` document: per-step records plus a final
+/// summary (variance trajectory, per-module sampling table, peak
+/// memory by category). Renders as ONE `json.load`-valid object,
+/// hand-rolled like the rest of `util::bench`.
+pub struct TrainReport {
+    /// Model registry name.
+    pub model: String,
+    /// Optimizer display name.
+    pub method: String,
+    /// Per-step records, in step order.
+    pub per_step: Vec<StepRecord>,
+}
+
+impl TrainReport {
+    /// An empty report for the given run.
+    pub fn new(model: &str, method: &str) -> Self {
+        TrainReport {
+            model: model.to_string(),
+            method: method.to_string(),
+            per_step: Vec::new(),
+        }
+    }
+
+    /// Append one step's record.
+    pub fn push(&mut self, rec: StepRecord) {
+        self.per_step.push(rec);
+    }
+
+    /// Render the document. `units`/`rounds` come from the optimizer's
+    /// `SamplerTelemetry` (empty slice / 0 for non-sampling methods —
+    /// the sampler table renders as `null`). Memory peaks are read
+    /// from [`crate::obs::memory`] at render time.
+    pub fn to_json(&self, est: &VarianceEstimator, units: &[SamplingUnit], rounds: u64) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"model\": \"{}\",\n", escape(&self.model)));
+        out.push_str(&format!("  \"method\": \"{}\",\n", escape(&self.method)));
+        out.push_str("  \"per_step\": [\n");
+        for (i, r) in self.per_step.iter().enumerate() {
+            let comma = if i + 1 == self.per_step.len() { "" } else { "," };
+            out.push_str(&format!("    {}{comma}\n", r.to_json()));
+        }
+        out.push_str("  ],\n");
+        out.push_str("  \"summary\": {\n");
+        out.push_str(&format!("    \"steps\": {},\n", est.steps()));
+        out.push_str(&format!(
+            "    \"variance\": {{\"counted_steps\": {}, \"mean_sampled\": {}, \
+             \"mean_layerwise\": {}, \"mean_ratio\": {}, \"ratio_of_means\": {}, \
+             \"last_ratio\": {}}},\n",
+            est.counted_steps(),
+            jf(est.mean_sampled()),
+            jf(est.mean_layerwise()),
+            jf(est.mean_ratio()),
+            jf(est.ratio_of_means()),
+            jf(est.last().ratio)
+        ));
+        if units.is_empty() {
+            out.push_str("    \"sampler\": null,\n");
+        } else {
+            let total: u64 = units.iter().map(|u| u.count).sum();
+            out.push_str(&format!(
+                "    \"sampler\": {{\"rounds\": {rounds}, \"chi_square\": {}, \"modules\": [\n",
+                jf(chi_square(units))
+            ));
+            for (i, u) in units.iter().enumerate() {
+                let comma = if i + 1 == units.len() { "" } else { "," };
+                let freq = if total == 0 {
+                    0.0
+                } else {
+                    u.count as f64 / total as f64
+                };
+                out.push_str(&format!(
+                    "      {{\"name\": \"{}\", \"layer\": {}, \"score\": {}, \"prob\": {}, \
+                     \"count\": {}, \"freq\": {}, \"numel\": {}, \"active\": {}}}{comma}\n",
+                    escape(&u.name),
+                    u.layer,
+                    jf(u.score),
+                    jf(u.prob),
+                    u.count,
+                    jf(freq),
+                    u.numel,
+                    u.active
+                ));
+            }
+            out.push_str("    ]},\n");
+        }
+        out.push_str(&format!(
+            "    \"memory\": {{\"optim_states_peak_bytes\": {}, \
+             \"activation_scratch_peak_bytes\": {}, \"kv_cache_peak_bytes\": {}, \
+             \"process_peak_rss_bytes\": {}}}\n",
+            memory::peak(memory::MemCategory::OptimStates),
+            memory::peak(memory::MemCategory::ActivationScratch),
+            memory::peak(memory::MemCategory::KvCache),
+            memory::process_peak_rss_bytes()
+                .map(|b| b.to_string())
+                .unwrap_or_else(|| "null".to_string())
+        ));
+        out.push_str("  }\n}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn unit(name: &str, layer: i32, score: f64, prob: f64, count: u64) -> SamplingUnit {
+        SamplingUnit {
+            name: name.to_string(),
+            params: vec![0],
+            layer,
+            score,
+            prob,
+            count,
+            numel: 64,
+            active: false,
+        }
+    }
+
+    /// The streaming formula must match the naive definitional oracle
+    /// `Σ_b p_b (s_b/p_b − E[X])²` on random instances.
+    #[test]
+    fn variance_matches_naive_oracle() {
+        let mut rng = Rng::new(7);
+        for _ in 0..50 {
+            let b = 2 + rng.below(12);
+            let s: Vec<f64> = (0..b).map(|_| rng.f32() as f64).collect();
+            let raw: Vec<f64> = (0..b).map(|_| 0.05 + rng.f32() as f64).collect();
+            let z: f64 = raw.iter().sum();
+            let p: Vec<f64> = raw.iter().map(|r| r / z).collect();
+            let fast = importance_variance(&s, &p);
+            let mean: f64 = s.iter().sum();
+            let naive: f64 = s
+                .iter()
+                .zip(&p)
+                .map(|(&si, &pi)| pi * (si / pi - mean) * (si / pi - mean))
+                .sum();
+            let scale = naive.abs().max(1.0);
+            assert!(
+                (fast - naive).abs() / scale < 1e-10,
+                "fast {fast} vs naive {naive}"
+            );
+        }
+    }
+
+    /// `p ∝ s` is the minimizer (Prop. 1): any other distribution over
+    /// the same `s` has no smaller variance, and the optimum is ~0.
+    #[test]
+    fn proportional_probabilities_minimize_variance() {
+        let s = [1.0, 4.0, 0.5, 2.5];
+        let total: f64 = s.iter().sum();
+        let opt: Vec<f64> = s.iter().map(|&x| x / total).collect();
+        assert!(importance_variance(&s, &opt) < 1e-9);
+        let uniform = vec![0.25; 4];
+        assert!(importance_variance(&s, &uniform) > importance_variance(&s, &opt));
+        let skew = [0.7, 0.1, 0.1, 0.1];
+        assert!(importance_variance(&s, &skew) > importance_variance(&s, &opt));
+    }
+
+    #[test]
+    fn layerwise_probs_group_by_layer_and_lump_layerless() {
+        // 2 layers with 2 and 1 units + 1 layerless unit => L = 3 groups
+        let units = vec![
+            unit("a", 0, 0.0, 0.0, 0),
+            unit("b", 0, 0.0, 0.0, 0),
+            unit("c", 1, 0.0, 0.0, 0),
+            unit("embed", -1, 0.0, 0.0, 0),
+        ];
+        let p = layerwise_probs(&units);
+        assert!((p[0] - 1.0 / 6.0).abs() < 1e-12);
+        assert!((p[1] - 1.0 / 6.0).abs() < 1e-12);
+        assert!((p[2] - 1.0 / 3.0).abs() < 1e-12);
+        assert!((p[3] - 1.0 / 3.0).abs() < 1e-12);
+        let sum: f64 = p.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chi_square_zero_when_counts_match_target() {
+        let units = vec![
+            unit("a", 0, 0.0, 0.25, 25),
+            unit("b", 0, 0.0, 0.25, 25),
+            unit("c", 1, 0.0, 0.5, 50),
+        ];
+        assert!(chi_square(&units) < 1e-12);
+        let skewed = vec![
+            unit("a", 0, 0.0, 0.25, 50),
+            unit("b", 0, 0.0, 0.25, 0),
+            unit("c", 1, 0.0, 0.5, 50),
+        ];
+        assert!(chi_square(&skewed) > 10.0);
+        assert_eq!(chi_square(&[unit("a", 0, 0.0, 1.0, 0)]), 0.0);
+    }
+
+    #[test]
+    fn estimator_gates_cold_start_and_counts_scored_steps() {
+        let mut est = VarianceEstimator::new();
+        // cold start: identical scores => uniform target, not counted
+        let cold = vec![
+            unit("a", 0, 0.0, 0.5, 0),
+            unit("b", 1, 0.0, 0.5, 0),
+        ];
+        let s0 = est.record(&cold, &[1.0, 3.0]);
+        assert!(!s0.counted);
+        assert_eq!(est.counted_steps(), 0);
+        assert_eq!(est.steps(), 1);
+        // differentiated scores, target tilted toward the larger norm
+        let warm = vec![
+            unit("a", 0, 0.2, 0.3, 3),
+            unit("b", 1, 0.9, 0.7, 7),
+        ];
+        let s1 = est.record(&warm, &[1.0, 3.0]);
+        assert!(s1.counted);
+        assert!(s1.ratio < 1.0, "tilted target must beat uniform: {}", s1.ratio);
+        assert_eq!(est.counted_steps(), 1);
+        assert!(est.mean_ratio() < 1.0);
+        assert!(est.ratio_of_means() < 1.0);
+        assert!((est.last().ratio - s1.ratio).abs() < 1e-15);
+    }
+
+    /// Empirical selection frequencies converge to the importance
+    /// weights over many rounds (the Fig. 11 sanity check, satellite
+    /// test): equal-numel modules, δ budget admitting one per round.
+    #[test]
+    fn empirical_frequency_converges_to_importance_weights() {
+        use crate::optim::sampler::{ImportanceSampler, SamplerConfig};
+        let b = 4;
+        let numel = vec![100u64; b];
+        let n_model = 400 * 3;
+        let cfg = SamplerConfig {
+            // budget fits exactly one 100-elem module per round
+            delta: 100.0 / n_model as f64,
+            ..SamplerConfig::default()
+        };
+        let mut sampler = ImportanceSampler::new(cfg, numel, n_model);
+        sampler.set_static_scores(vec![0.1, 0.4, 0.9, 1.6]);
+        let probs = sampler.probabilities();
+        let mut rng = Rng::new(42);
+        let rounds = 20_000;
+        for _ in 0..rounds {
+            sampler.select(&mut rng);
+        }
+        let total: u64 = sampler.counts.iter().sum();
+        assert_eq!(total, rounds); // one module per round
+        for (i, &c) in sampler.counts.iter().enumerate() {
+            let freq = c as f64 / total as f64;
+            assert!(
+                (freq - probs[i]).abs() < 0.02,
+                "module {i}: freq {freq} vs target {}",
+                probs[i]
+            );
+        }
+        // the chi-square drift over the telemetry snapshot is modest
+        // when frequencies track the target (E[chi2] ≈ B−1)
+        let units: Vec<SamplingUnit> = (0..b)
+            .map(|i| unit(&format!("m{i}"), 0, 0.0, probs[i], sampler.counts[i]))
+            .collect();
+        assert!(chi_square(&units) < 30.0, "{}", chi_square(&units));
+    }
+
+    #[test]
+    fn report_renders_valid_shape() {
+        let mut rep = TrainReport::new("tiny", "MISA(d=3%,T=20)");
+        rep.push(StepRecord {
+            step: 0,
+            loss: 4.5,
+            var_sampled: 1.0,
+            var_layerwise: 2.0,
+            var_ratio: 0.5,
+            grad_sq_norm: 9.0,
+            optim_state_bytes: 1024,
+            activation_scratch_bytes: 2048,
+        });
+        rep.push(StepRecord {
+            step: 1,
+            loss: f64::NAN, // non-finite renders as null, not NaN
+            var_sampled: 0.0,
+            var_layerwise: 0.0,
+            var_ratio: 1.0,
+            grad_sq_norm: 0.0,
+            optim_state_bytes: 0,
+            activation_scratch_bytes: 0,
+        });
+        let mut est = VarianceEstimator::new();
+        let units = vec![
+            unit("layers.0.\"wq\"", 0, 0.5, 0.6, 3),
+            unit("layers.1.wq", 1, 0.1, 0.4, 1),
+        ];
+        est.record(&units, &[1.0, 2.0]);
+        let json = rep.to_json(&est, &units, 4);
+        // balanced braces/brackets and the fields the CI smoke greps
+        assert_eq!(
+            json.matches('{').count(),
+            json.matches('}').count(),
+            "{json}"
+        );
+        assert_eq!(
+            json.matches('[').count(),
+            json.matches(']').count(),
+            "{json}"
+        );
+        for key in [
+            "\"per_step\"",
+            "\"var_sampled\"",
+            "\"var_layerwise\"",
+            "\"var_ratio\"",
+            "\"optim_state_bytes\"",
+            "\"activation_scratch_bytes\"",
+            "\"summary\"",
+            "\"variance\"",
+            "\"sampler\"",
+            "\"modules\"",
+            "\"memory\"",
+            "\"chi_square\"",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        assert!(json.contains("null"), "NaN loss must render as null");
+        // quotes inside module names are escaped
+        assert!(json.contains("layers.0.\\\"wq\\\""), "{json}");
+        // non-sampling methods render a null sampler table
+        let json2 = rep.to_json(&est, &[], 0);
+        assert!(json2.contains("\"sampler\": null"), "{json2}");
+    }
+}

@@ -247,9 +247,19 @@ pub fn render_chrome_trace(events: &[SpanEvent], dropped: u64) -> String {
 }
 
 /// Drain the buffer and write it to `path` as Chrome trace-event
-/// JSON; returns the number of events written.
+/// JSON; returns the number of events written. Buffer overflow is
+/// surfaced, not silent: the drop count lands in the
+/// `trace.dropped_events` counter (`misa_trace_dropped_events` in the
+/// Prometheus dump) and, when non-zero, one warning on stderr.
 pub fn export_chrome_trace(path: &Path) -> Result<usize> {
     let (evs, dropped) = take_events();
+    crate::obs::metrics::counter_add("trace.dropped_events", dropped);
+    if dropped > 0 {
+        crate::log_warn!(
+            "trace buffer overflowed: {dropped} span event(s) dropped (cap {MAX_EVENTS}); \
+             the exported trace is truncated"
+        );
+    }
     let body = render_chrome_trace(&evs, dropped);
     let mut f = std::fs::File::create(path)
         .with_context(|| format!("creating trace file {path:?}"))?;

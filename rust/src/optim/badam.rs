@@ -11,6 +11,7 @@ use anyhow::Result;
 
 use crate::modelspec::ModelSpec;
 use crate::optim::adam::{AdamHyper, AdamState};
+use crate::optim::sampler::{SamplerTelemetry, SamplingUnit};
 use crate::optim::{MemProfile, Optimizer};
 use crate::runtime::{Session, StepOutput};
 
@@ -18,32 +19,43 @@ pub struct BAdam {
     hyper: AdamHyper,
     /// param indices grouped by layer
     layers: Vec<Vec<usize>>,
+    /// total params per layer (telemetry read-out)
+    layer_numel: Vec<u64>,
     active_layer: usize,
     states: Vec<AdamState>,
     t_inner: usize,
     inner_t: usize,
     use_kernel: bool,
     switches: u64,
+    /// times each layer has been active (telemetry; the cycle is
+    /// deterministic, counting reads it — nothing random to perturb)
+    counts: Vec<u64>,
 }
 
 impl BAdam {
     pub fn new(spec: &ModelSpec, t_inner: usize, use_kernel: bool) -> Self {
         let n_layers = spec.config.n_layers;
         let mut layers = vec![Vec::new(); n_layers];
+        let mut layer_numel = vec![0u64; n_layers];
         for (i, p) in spec.params.iter().enumerate() {
             if p.layer >= 0 {
                 layers[p.layer as usize].push(i);
+                layer_numel[p.layer as usize] += p.numel() as u64;
             }
         }
+        let mut counts = vec![0u64; n_layers];
+        counts[0] = 1; // layer 0 is active from construction
         let mut me = BAdam {
             hyper: AdamHyper::default(),
             layers,
+            layer_numel,
             active_layer: 0,
             states: Vec::new(),
             t_inner,
             inner_t: 0,
             use_kernel,
             switches: 0,
+            counts,
         };
         me.states = Vec::new();
         me
@@ -91,6 +103,7 @@ impl Optimizer for BAdam {
             self.states.clear();
             self.inner_t = 0;
             self.switches += 1;
+            self.counts[self.active_layer] += 1;
         }
         Ok(())
     }
@@ -103,6 +116,51 @@ impl Optimizer for BAdam {
             adapter_elems: 0,
             active_indices: self.layers[self.active_layer].clone(),
         }
+    }
+
+    fn sampling_counts(&self) -> Option<Vec<(usize, u64)>> {
+        // per-layer counts keyed by the layer's first param index
+        Some(
+            self.layers
+                .iter()
+                .zip(&self.counts)
+                .filter_map(|(ps, &c)| ps.first().map(|&i| (i, c)))
+                .collect(),
+        )
+    }
+
+    fn telemetry(&self) -> Option<&dyn SamplerTelemetry> {
+        Some(self)
+    }
+}
+
+impl SamplerTelemetry for BAdam {
+    fn sampler_label(&self) -> &'static str {
+        "badam"
+    }
+
+    fn rounds(&self) -> u64 {
+        self.switches + 1 // the construction-time activation counts
+    }
+
+    fn units(&self) -> Vec<SamplingUnit> {
+        // one unit per layer; the cycle visits each in turn, which in
+        // expectation matches the uniform layer-wise distribution
+        let l = self.layers.len().max(1) as f64;
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(i, params)| SamplingUnit {
+                name: format!("layer.{i}"),
+                params: params.clone(),
+                layer: i as i32,
+                score: 0.0, // BAdam keeps no importance scores
+                prob: 1.0 / l,
+                count: self.counts[i],
+                numel: self.layer_numel[i],
+                active: i == self.active_layer,
+            })
+            .collect()
     }
 }
 

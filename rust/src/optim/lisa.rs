@@ -8,6 +8,7 @@ use anyhow::Result;
 
 use crate::modelspec::{ModelSpec, ModuleKind};
 use crate::optim::adam::{AdamHyper, AdamState};
+use crate::optim::sampler::{SamplerTelemetry, SamplingUnit};
 use crate::optim::{MemProfile, Optimizer};
 use crate::runtime::{Session, StepOutput};
 use crate::util::Rng;
@@ -15,6 +16,8 @@ use crate::util::Rng;
 pub struct Lisa {
     hyper: AdamHyper,
     layers: Vec<Vec<usize>>,
+    /// total params per layer (telemetry read-out)
+    layer_numel: Vec<u64>,
     /// embed + head indices (always active)
     dense: Vec<(usize, AdamState)>,
     active_layer: usize,
@@ -24,25 +27,35 @@ pub struct Lisa {
     inner_t: usize,
     use_kernel: bool,
     rng: Rng,
+    /// times each layer has been drawn (telemetry; counting reads the
+    /// draw the optimizer already made — no extra RNG calls)
+    counts: Vec<u64>,
+    /// layer draws so far (1 at construction + one per switch)
+    rounds: u64,
 }
 
 impl Lisa {
     pub fn new(spec: &ModelSpec, t_inner: usize, use_kernel: bool, seed: u64) -> Self {
         let n_layers = spec.config.n_layers;
         let mut layers = vec![Vec::new(); n_layers];
+        let mut layer_numel = vec![0u64; n_layers];
         let mut dense = Vec::new();
         for (i, p) in spec.params.iter().enumerate() {
             if p.layer >= 0 {
                 layers[p.layer as usize].push(i);
+                layer_numel[p.layer as usize] += p.numel() as u64;
             } else if matches!(p.kind, ModuleKind::Embed | ModuleKind::Head) {
                 dense.push((i, AdamState::zeros(p.numel())));
             }
         }
         let mut rng = Rng::new(seed ^ 0x4C495341); // "LISA"
         let active_layer = rng.below(n_layers);
+        let mut counts = vec![0u64; n_layers];
+        counts[active_layer] = 1;
         Lisa {
             hyper: AdamHyper::default(),
             layers,
+            layer_numel,
             dense,
             active_layer,
             states: Vec::new(),
@@ -50,6 +63,8 @@ impl Lisa {
             inner_t: 0,
             use_kernel,
             rng,
+            counts,
+            rounds: 1,
         }
     }
 }
@@ -89,6 +104,8 @@ impl Optimizer for Lisa {
         self.inner_t += 1;
         if self.inner_t >= self.t_inner {
             self.active_layer = self.rng.below(self.layers.len());
+            self.counts[self.active_layer] += 1;
+            self.rounds += 1;
             self.states.clear();
             self.inner_t = 0;
         }
@@ -108,6 +125,51 @@ impl Optimizer for Lisa {
                 v
             },
         }
+    }
+
+    fn sampling_counts(&self) -> Option<Vec<(usize, u64)>> {
+        // per-layer counts keyed by the layer's first param index
+        Some(
+            self.layers
+                .iter()
+                .zip(&self.counts)
+                .filter_map(|(ps, &c)| ps.first().map(|&i| (i, c)))
+                .collect(),
+        )
+    }
+
+    fn telemetry(&self) -> Option<&dyn SamplerTelemetry> {
+        Some(self)
+    }
+}
+
+impl SamplerTelemetry for Lisa {
+    fn sampler_label(&self) -> &'static str {
+        "lisa"
+    }
+
+    fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    fn units(&self) -> Vec<SamplingUnit> {
+        // one unit per transformer layer, drawn uniformly; embed/head
+        // are always-on dense parameters, not sampling units
+        let l = self.layers.len().max(1) as f64;
+        self.layers
+            .iter()
+            .enumerate()
+            .map(|(i, params)| SamplingUnit {
+                name: format!("layer.{i}"),
+                params: params.clone(),
+                layer: i as i32,
+                score: 0.0, // LISA keeps no importance scores
+                prob: 1.0 / l,
+                count: self.counts[i],
+                numel: self.layer_numel[i],
+                active: i == self.active_layer,
+            })
+            .collect()
     }
 }
 

@@ -17,7 +17,9 @@ use anyhow::Result;
 
 use crate::modelspec::ModelSpec;
 use crate::optim::adam::{AdamHyper, AdamState};
-use crate::optim::sampler::{ImportanceSampler, SamplerConfig, ScoreFn};
+use crate::optim::sampler::{
+    ImportanceSampler, SamplerConfig, SamplerTelemetry, SamplingUnit, ScoreFn,
+};
 use crate::optim::{MemProfile, Optimizer};
 use crate::runtime::{Session, StepOutput};
 use crate::util::Rng;
@@ -70,6 +72,10 @@ pub struct Misa {
     hyper: AdamHyper,
     /// module pool: global param indices the sampler draws from
     pool: Vec<usize>,
+    /// param names of the pool (telemetry labels), pool order
+    unit_names: Vec<String>,
+    /// transformer layer per pool module (telemetry grouping)
+    unit_layers: Vec<i32>,
     /// sampler over the pool (local indices)
     pub sampler: ImportanceSampler,
     /// currently active pool-local indices
@@ -120,10 +126,14 @@ impl Misa {
         } else {
             Vec::new()
         };
+        let unit_names = pool.iter().map(|&i| spec.params[i].name.clone()).collect();
+        let unit_layers = pool.iter().map(|&i| spec.params[i].layer).collect();
         Misa {
             cfg,
             hyper: AdamHyper::default(),
             pool,
+            unit_names,
+            unit_layers,
             sampler,
             active: Vec::new(),
             states: HashMap::new(),
@@ -156,6 +166,11 @@ impl Misa {
             numel,
             spec.total_params() as u64,
         );
+        me.unit_names = filtered
+            .iter()
+            .map(|&i| spec.params[i].name.clone())
+            .collect();
+        me.unit_layers = filtered.iter().map(|&i| spec.params[i].layer).collect();
         me.pool = filtered;
         me
     }
@@ -303,6 +318,37 @@ impl Optimizer for Misa {
                 .map(|(&idx, &c)| (idx, c))
                 .collect(),
         )
+    }
+
+    fn telemetry(&self) -> Option<&dyn SamplerTelemetry> {
+        Some(self)
+    }
+}
+
+impl SamplerTelemetry for Misa {
+    fn sampler_label(&self) -> &'static str {
+        "misa"
+    }
+
+    fn rounds(&self) -> u64 {
+        self.sampler.rounds()
+    }
+
+    fn units(&self) -> Vec<SamplingUnit> {
+        let probs = self.sampler.probabilities();
+        let numels = self.sampler.numels();
+        (0..self.pool.len())
+            .map(|a| SamplingUnit {
+                name: self.unit_names[a].clone(),
+                params: vec![self.pool[a]],
+                layer: self.unit_layers[a],
+                score: self.sampler.scores[a],
+                prob: probs[a],
+                count: self.sampler.counts[a],
+                numel: numels[a],
+                active: self.active.contains(&a),
+            })
+            .collect()
     }
 }
 

@@ -34,7 +34,9 @@ pub use lisa::Lisa;
 pub use lora::{Dora, Lora};
 pub use lora_misa::LoraMisa;
 pub use misa::{Misa, MisaConfig};
-pub use sampler::{ImportanceSampler, SamplerConfig, ScoreFn, Strategy};
+pub use sampler::{
+    ImportanceSampler, SamplerConfig, SamplerTelemetry, SamplingUnit, ScoreFn, Strategy,
+};
 
 use anyhow::Result;
 
@@ -68,6 +70,13 @@ pub trait Optimizer {
 
     /// Per-module sampling counts (Fig. 11), if the method samples.
     fn sampling_counts(&self) -> Option<Vec<(usize, u64)>> {
+        None
+    }
+
+    /// Telemetry read-out for sampler-backed optimizers (MISA / LISA /
+    /// BAdam); `None` for methods with nothing to sample. Strictly
+    /// observational — see [`SamplerTelemetry`].
+    fn telemetry(&self) -> Option<&dyn SamplerTelemetry> {
         None
     }
 }

@@ -193,6 +193,16 @@ impl ImportanceSampler {
         active.iter().map(|&i| self.numel[i]).sum()
     }
 
+    /// Selection rounds completed so far (one per block epoch).
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    /// Per-module parameter counts, pool order.
+    pub fn numels(&self) -> &[u64] {
+        &self.numel
+    }
+
     /// Corollary 1 lower bound: with bounded scores, every probability
     /// is ≥ 1/(B e^{η π*}).
     pub fn probability_lower_bound(&self) -> f64 {
@@ -203,6 +213,48 @@ impl ImportanceSampler {
         let max_score = self.scores.iter().cloned().fold(0.0f64, f64::max);
         1.0 / (self.n_modules() as f64 * (eta * max_score).exp())
     }
+}
+
+/// One sampling unit as seen by the telemetry layer: a module for MISA,
+/// a whole layer for LISA/BAdam. Everything here is a *read-out* of
+/// state the optimizer already tracks — building the snapshot never
+/// touches an RNG stream or the computation.
+#[derive(Clone, Debug)]
+pub struct SamplingUnit {
+    /// Human-readable unit name (param name, or `layer.{i}`).
+    pub name: String,
+    /// Registry parameter indices the unit covers.
+    pub params: Vec<usize>,
+    /// Transformer layer the unit lives in (−1 for embed/head/norm-style
+    /// layerless parameters).
+    pub layer: i32,
+    /// Current importance score (Eq. 4 EMA; 0.0 for score-free samplers).
+    pub score: f64,
+    /// Target sampling probability under the sampler's own distribution.
+    pub prob: f64,
+    /// Times this unit has been active so far.
+    pub count: u64,
+    /// Total parameters in the unit.
+    pub numel: u64,
+    /// Whether the unit is active in the current block epoch.
+    pub active: bool,
+}
+
+/// Telemetry read-out every sampler-backed optimizer exposes. The
+/// contract is strictly observational: implementations only *copy*
+/// scores, probabilities, and counters they already maintain, so
+/// snapshotting is deterministic-by-construction and can never perturb
+/// training (bit-parity with telemetry on is test-pinned).
+pub trait SamplerTelemetry {
+    /// Short stable label for metric names ("misa" / "lisa" / "badam").
+    fn sampler_label(&self) -> &'static str;
+
+    /// Selection rounds completed (block epochs / layer switches).
+    fn rounds(&self) -> u64;
+
+    /// Snapshot of every sampling unit: scores, target probabilities,
+    /// empirical counts, and the current active set.
+    fn units(&self) -> Vec<SamplingUnit>;
 }
 
 /// Numerically stable tempered softmax: p_i ∝ exp(eta * s_i).

@@ -134,6 +134,21 @@ struct LayerTrace {
     act: Vec<f32>,
 }
 
+impl LayerTrace {
+    /// Resident bytes of this layer's retained intermediates.
+    fn bytes(&self) -> u64 {
+        [
+            &self.x_in, &self.r1, &self.h1, &self.q, &self.k, &self.v, &self.att,
+            &self.concat, &self.x_mid, &self.r2, &self.h2, &self.gpre, &self.up,
+            &self.act,
+        ]
+        .iter()
+        .map(|b| b.len())
+        .sum::<usize>() as u64
+            * 4
+    }
+}
+
 /// Whole-model forward intermediates.
 struct Trace<'a> {
     layers: Vec<LayerTrace>,
@@ -151,6 +166,27 @@ struct Trace<'a> {
     sin: Cow<'a, [f32]>,
     denom: f64,
     loss: f64,
+}
+
+impl Trace<'_> {
+    /// Resident bytes of the whole forward trace — the activation
+    /// memory the backward pass keeps alive. Counts owned buffers
+    /// only; borrowed RoPE tables belong to the backend, not the step.
+    fn bytes(&self) -> u64 {
+        let layers: u64 = self.layers.iter().map(LayerTrace::bytes).sum();
+        let top = (self.x_last.len() + self.rf.len() + self.hf.len() + self.logits.len())
+            as u64
+            * 4;
+        let rope = [&self.cos, &self.sin]
+            .iter()
+            .map(|c| match c {
+                Cow::Owned(v) => v.len(),
+                Cow::Borrowed(_) => 0,
+            })
+            .sum::<usize>() as u64
+            * 4;
+        layers + top + rope
+    }
 }
 
 /// Largest stacked-row count the shared workspace keeps warm. Decode
@@ -215,6 +251,19 @@ impl DecodeWorkspace {
         cap(&mut self.up, rows * f);
         cap(&mut self.act, rows * f);
         cap(&mut self.logits, rows * v);
+    }
+
+    /// Resident bytes across the scratch buffers — capacity, not
+    /// length, because capacity is what stays allocated between calls.
+    fn bytes(&self) -> u64 {
+        [
+            &self.x, &self.h, &self.q, &self.k, &self.v, &self.concat, &self.proj,
+            &self.gpre, &self.up, &self.act, &self.scores, &self.logits,
+        ]
+        .iter()
+        .map(|b| b.capacity())
+        .sum::<usize>() as u64
+            * 4
     }
 }
 
@@ -610,6 +659,12 @@ impl HostBackend {
             gemm_nn_into(&ws.h[..bsz * d], &host[self.layout.head], bsz, d, v, &mut ws.logits);
             ws.logits[..bsz * v].chunks(v).map(|row| row.to_vec()).collect()
         };
+        // record the workspace at maximum extent, before the shrink —
+        // the byte gauge should reflect what this call actually held
+        crate::obs::memory::set_current(
+            crate::obs::memory::MemCategory::ActivationScratch,
+            ws.bytes(),
+        );
         // steady-state decode/verify runs a handful of rows per tick; a
         // one-shot long prefill must not pin prefill-sized scratch for
         // the backend's lifetime, so capacity above the retained
@@ -792,6 +847,12 @@ impl Backend for HostBackend {
     fn fwd_bwd(&self, host: &[Vec<f32>], batch: &Batch) -> Result<StepOutput> {
         let _sp = crate::span!("fwd_bwd", "backend");
         let tr = self.forward(host, batch)?;
+        // activation residency = the trace the backward pass keeps
+        // alive (a size read-out; the computation never sees it)
+        crate::obs::memory::set_current(
+            crate::obs::memory::MemCategory::ActivationScratch,
+            tr.bytes(),
+        );
         let (grads, sq_norms) = self.backward(host, batch, &tr);
         Ok(StepOutput { loss: tr.loss as f32, grads, sq_norms })
     }
@@ -1035,6 +1096,10 @@ impl Backend for HostBackend {
         rms_forward_into(&ws.x, &host[self.layout.final_norm], bsz, d, &mut ws.h);
         ws.logits.resize(bsz * v, 0.0);
         gemm_nn_into(&ws.h, &host[self.layout.head], bsz, d, v, &mut ws.logits);
+        crate::obs::memory::set_current(
+            crate::obs::memory::MemCategory::ActivationScratch,
+            ws.bytes(),
+        );
         Ok(ws.logits.chunks(v).map(|row| row.to_vec()).collect())
     }
 }

@@ -336,6 +336,28 @@ impl KvCache {
     }
 }
 
+/// Bytes actually resident across a set of live caches, COW-aware:
+/// chunks shared between forks (or between a scheduler slot and a
+/// prefix-cache store entry) are counted **once**, by deduplicating on
+/// the shared `Arc` allocation's address. This is the measured
+/// counterpart of the analytic [`KvCache::bytes`] upper bound — with
+/// heavy prefix sharing it can be far smaller than `Σ bytes()`.
+/// Order-independent and read-only.
+pub fn kv_resident_bytes<'a>(caches: impl IntoIterator<Item = &'a KvCache>) -> u64 {
+    let mut seen: std::collections::HashSet<*const Vec<f32>> = std::collections::HashSet::new();
+    let mut bytes = 0u64;
+    for c in caches {
+        for layer in c.k.iter().chain(c.v.iter()) {
+            for chunk in layer {
+                if seen.insert(Arc::as_ptr(chunk)) {
+                    bytes += (chunk.len() * std::mem::size_of::<f32>()) as u64;
+                }
+            }
+        }
+    }
+    bytes
+}
+
 /// The execution ABI between the coordinator and the compute substrate.
 ///
 /// `host` is the registry-ordered host mirror of the parameters owned by
@@ -573,6 +595,31 @@ mod tests {
         for len in 0..=6 {
             assert!(KvCache::fork_from(&flat, len).is_ok(), "len {len}");
         }
+    }
+
+    #[test]
+    fn resident_bytes_dedupes_cow_shared_chunks() {
+        // capacity a chunk multiple, so physical chunks = analytic bytes
+        let mut parent = tiny_cache(2 * CHUNK_POSITIONS);
+        fill(&mut parent, 3);
+        let solo = kv_resident_bytes([&parent]);
+        assert_eq!(solo, parent.bytes() as u64, "single unwrapped cache = analytic bytes");
+        // a fork shares every chunk: together they still occupy one cache
+        let mut child = KvCache::fork_from(&parent, 2).unwrap();
+        assert_eq!(kv_resident_bytes([&parent, &child]), solo);
+        // order never matters
+        assert_eq!(kv_resident_bytes([&child, &parent]), solo);
+        // a divergent write copies exactly one k and one v chunk in one
+        // layer — 2 chunks of divergence, everything else still shared
+        let kd = child.kv_dim();
+        child.write_kv(0, 2, &vec![9.0; kd], &vec![9.0; kd]);
+        child.advance(1);
+        let after = kv_resident_bytes([&parent, &child]);
+        assert_eq!(after, solo + 2 * (CHUNK_POSITIONS * kd * 4) as u64);
+        // independent caches simply sum
+        let other = tiny_cache(2 * CHUNK_POSITIONS);
+        assert_eq!(kv_resident_bytes([&parent, &other]), solo + other.bytes() as u64);
+        assert_eq!(kv_resident_bytes(std::iter::empty()), 0);
     }
 
     #[test]

@@ -23,7 +23,7 @@ use anyhow::Result;
 use crate::modelspec::{Manifest, ModelSpec, ModuleKind};
 use crate::util::Rng;
 
-pub use backend::{Backend, BackendKind, HostBackend, KvCache};
+pub use backend::{kv_resident_bytes, Backend, BackendKind, HostBackend, KvCache};
 #[cfg(feature = "pjrt")]
 pub use backend::pjrt::PjrtBackend;
 

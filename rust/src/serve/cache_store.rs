@@ -289,6 +289,13 @@ impl CacheStore {
         Ok(true)
     }
 
+    /// Iterator over every resident entry's cache, for COW-aware
+    /// byte accounting ([`crate::runtime::kv_resident_bytes`] dedupes
+    /// chunks these share with live request caches).
+    pub(crate) fn resident_caches(&self) -> impl Iterator<Item = &KvCache> {
+        self.entries.values().map(|e| &e.cache)
+    }
+
     fn evict_lru(&mut self) {
         let Some((&id, _)) = self.entries.iter().min_by_key(|(_, e)| e.last_used) else {
             return;

@@ -376,6 +376,27 @@ impl Scheduler {
         }
     }
 
+    /// Physical bytes currently resident across every live KV ring —
+    /// active slots, partially prefilled jobs, and prompt-store entries
+    /// — with copy-on-write chunk sharing deduplicated
+    /// ([`crate::runtime::kv_resident_bytes`]). This is *measured*
+    /// residency, not the analytic `bytes_for × peak_active` upper
+    /// bound: with prefix sharing it is typically far smaller.
+    pub fn kv_resident_bytes(&self) -> u64 {
+        let slots = self.active.iter().map(|s| &s.cache);
+        let jobs = self.prefilling.iter().filter_map(|j| j.cache.as_ref());
+        let store = self.store.iter().flat_map(|s| s.resident_caches());
+        crate::runtime::kv_resident_bytes(slots.chain(jobs).chain(store))
+    }
+
+    /// Record the current measured residency into the `serve.*` gauge
+    /// and the byte-accounting peak tracker, once per tick.
+    fn record_kv_residency(&self) {
+        let bytes = self.kv_resident_bytes();
+        obs::memory::set_current(obs::memory::MemCategory::KvCache, bytes);
+        obs::metrics::gauge_set("serve.kv_resident_bytes", bytes as f64);
+    }
+
     /// One scheduling iteration: admit queued requests, advance prompt
     /// prefill (up to `prefill_chunk` rows), advance every active slot
     /// by at least one decode step, retire finished requests. Returns
@@ -435,6 +456,9 @@ impl Scheduler {
 
         self.prefill_rounds(sess)?;
         self.decode_phase(sess, vocab)?;
+        // measure physical KV residency at the tick's high-water point
+        // (before retirement frees finishing slots)
+        self.record_kv_residency();
 
         // retire finished slots, freeing budget for the next iteration
         let mut i = 0;

@@ -1,0 +1,192 @@
+//! Training-telemetry integration tests: the headline claim is that
+//! instrumentation is read-only — per-step losses are bit-identical
+//! with the report collector on or off, across GEMM thread counts —
+//! plus a structural smoke of the emitted JSON report and the
+//! COW-aware KV residency measurement through a real scheduler run.
+
+use std::sync::Mutex;
+
+use misa::config::{MethodSpec, RunConfig};
+use misa::coordinator::Trainer;
+use misa::obs::{memory, metrics};
+use misa::optim::MisaConfig;
+use misa::runtime::{Engine, KvCache, Session};
+use misa::serve::{CacheStoreCfg, Request, SamplerCfg, Scheduler, SchedulerCfg};
+use misa::util::Rng;
+
+/// The metrics registry, the byte-accounting atomics, and the GEMM
+/// thread knob are process-global; serialize the tests that touch them.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn misa_cfg(steps: u64) -> RunConfig {
+    RunConfig {
+        model: "tiny".into(),
+        steps,
+        seed: 42,
+        log_every: 1, // train_loss lands in the sink every step
+        method: MethodSpec::Misa(MisaConfig { t_inner: 2, ..MisaConfig::default() }),
+        ..RunConfig::default()
+    }
+}
+
+/// Run `steps` training steps one at a time, returning the per-step
+/// loss sequence (exact f64s, no rounding).
+fn run_losses(rc: &RunConfig, report: bool) -> Vec<f64> {
+    let mut eng = Engine::host();
+    let mut t = Trainer::new(&mut eng, rc.clone()).unwrap();
+    if report {
+        t.enable_report();
+    }
+    let mut losses = Vec::new();
+    for _ in 0..rc.steps {
+        t.run(1).unwrap();
+        losses.push(t.metrics.last("train_loss").unwrap());
+    }
+    losses
+}
+
+/// Telemetry never perturbs computation: the per-step loss sequence is
+/// bit-identical with report collection on or off, at GEMM widths 1
+/// and 4 — the training-side twin of the decode bit-parity test.
+#[test]
+fn training_losses_bit_identical_with_report_on_and_off() {
+    let _g = lock();
+    let rc = misa_cfg(6);
+    misa::tensor::set_threads(1);
+    let base = run_losses(&rc, false);
+    assert!(base.iter().all(|l| l.is_finite()), "{base:?}");
+    for threads in [1usize, 4] {
+        misa::tensor::set_threads(threads);
+        for report in [false, true] {
+            let got = run_losses(&rc, report);
+            assert_eq!(
+                got, base,
+                "telemetry perturbed training (threads={threads}, report={report})"
+            );
+        }
+    }
+    misa::tensor::set_threads(0);
+}
+
+/// The structured report renders one valid-looking JSON object with
+/// per-step variance + memory fields and a populated sampler section
+/// (CI round-trips it through python's json.load).
+#[test]
+fn training_report_renders_per_step_and_summary_sections() {
+    let _g = lock();
+    let rc = misa_cfg(5);
+    let mut eng = Engine::host();
+    let mut t = Trainer::new(&mut eng, rc.clone()).unwrap();
+    // writing before enabling is a hard error, not an empty file
+    let path = std::env::temp_dir().join("misa_test_train_report.json");
+    assert!(t.write_report(&path).is_err());
+    t.enable_report();
+    t.run(rc.steps).unwrap();
+    t.write_report(&path).unwrap();
+    let body = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert!(body.starts_with('{') && body.trim_end().ends_with('}'), "{body}");
+    let braces =
+        body.matches('{').count() as i64 - body.matches('}').count() as i64;
+    assert_eq!(braces, 0, "unbalanced braces");
+    for key in [
+        "\"model\"",
+        "\"method\"",
+        "\"per_step\"",
+        "\"loss\"",
+        "\"var_sampled\"",
+        "\"var_layerwise\"",
+        "\"var_ratio\"",
+        "\"optim_state_bytes\"",
+        "\"activation_scratch_bytes\"",
+        "\"summary\"",
+        "\"variance\"",
+        "\"sampler\"",
+        "\"modules\"",
+        "\"memory\"",
+    ] {
+        assert!(body.contains(key), "report missing {key}: {body}");
+    }
+    assert_eq!(
+        body.matches("\"step\":").count(),
+        rc.steps as usize,
+        "one record per step: {body}"
+    );
+    assert!(!body.contains("NaN"), "non-finite values must render as null");
+}
+
+/// The scheduler's measured KV residency dedupes chunks shared
+/// copy-on-write between live request rings and prompt-store entries:
+/// with a shared system prefix, resident bytes stay strictly below the
+/// per-entry analytic sum.
+#[test]
+fn scheduler_kv_residency_is_cow_deduped() {
+    let _g = lock();
+    metrics::reset();
+    memory::reset();
+    let mut eng = Engine::host();
+    let sess = Session::create(&mut eng, "tiny", 3).unwrap();
+    let store_cap = 256;
+    let mut sched = Scheduler::new(SchedulerCfg {
+        max_slots: 2,
+        token_budget: 4096,
+        prefix_cache: Some(CacheStoreCfg {
+            capacity: store_cap,
+            max_entries: 8,
+            min_prefix: 4,
+        }),
+        prefill_chunk: 0,
+        spec: None,
+    });
+    // 4 prompts sharing a 20-token system prefix, 4 unique tail tokens
+    let mut rng = Rng::new(0xC0);
+    let shared: Vec<i32> = std::iter::once(1)
+        .chain((1..20).map(|_| rng.range(4, 200) as i32))
+        .collect();
+    for id in 0..4u64 {
+        let mut prompt = shared.clone();
+        for _ in 0..4 {
+            prompt.push(rng.range(4, 200) as i32);
+        }
+        sched
+            .submit(Request {
+                id,
+                prompt,
+                max_new: 4,
+                sampler: SamplerCfg::greedy(),
+                seed: 90 + id,
+                eos: None,
+            })
+            .unwrap();
+    }
+    let done = sched.run(&sess).unwrap();
+    assert_eq!(done.len(), 4);
+    let stats = sched.cache_stats().unwrap();
+    assert!(stats.hits > 0, "shared prefixes must hit the store: {stats:?}");
+    assert!(stats.entries >= 2);
+    // every tick measured residency into the gauge + peak tracker
+    assert!(memory::peak(memory::MemCategory::KvCache) > 0);
+    assert!(metrics::gauge("serve.kv_resident_bytes").is_some());
+    // after the run only store entries remain resident; their shared
+    // prefix chunks are counted once, so measured < entries × ring
+    let resident = sched.kv_resident_bytes();
+    let per_ring = KvCache::bytes_for(&sess.spec, store_cap) as u64;
+    assert!(resident > 0);
+    assert!(
+        resident < stats.entries as u64 * per_ring,
+        "COW sharing must dedupe: {resident} vs {} naive",
+        stats.entries as u64 * per_ring
+    );
+    // and the peak never exceeded what the rings could hold outright:
+    // every live request ring plus every store entry at full ring size
+    let bound = (4 + stats.insertions) * per_ring;
+    assert!(
+        memory::peak(memory::MemCategory::KvCache) <= bound,
+        "peak {} above worst-case bound {bound}",
+        memory::peak(memory::MemCategory::KvCache)
+    );
+}
