@@ -54,6 +54,29 @@ fn main() -> anyhow::Result<()> {
             std::hint::black_box(matmul(&ga, &gb));
         },
     );
+    // GEMM GFLOP/s sweep across the microkernel-relevant shapes: a
+    // decode-sized projection (pool wake latency dominates), the
+    // LM-head tall-skinny, and a tile-ragged shape (work stealing
+    // rebalances the uneven tail). `misa bench --gemm` is the JSON
+    // twin of this table.
+    let simd = misa::tensor::simd_label();
+    for (m, k, n, iters) in [(8usize, 256usize, 256usize, 2000), (64, 256, 1024, 200),
+                             (97, 161, 133, 500)] {
+        let sa = Mat::randn(m, k, 1.0, &mut rng);
+        let sb = Mat::randn(k, n, 1.0, &mut rng);
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let t0 = Instant::now();
+        bench(
+            &format!("tensor: gemm_nn {m}x{k}x{n} ({threads} thr, {simd})"),
+            iters,
+            || {
+                std::hint::black_box(matmul(&sa, &sb));
+            },
+        );
+        let per = t0.elapsed().as_secs_f64() / (iters + 1) as f64;
+        println!("{:<44} {:>9.2} GFLOP/s", format!("  └ gemm_nn {m}x{k}x{n} throughput"),
+                 flops / per / 1e9);
+    }
     let g = Mat::randn(344, 128, 1.0, &mut rng);
     bench("tensor: range_finder r=16 (GaLore refresh)", 50, || {
         let mut r2 = Rng::new(1);

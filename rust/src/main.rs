@@ -52,13 +52,16 @@ fn usage() -> ! {
          \x20 misa bench [--model M] [--steps N] [--seed N] [--json FILE]\n\
          \x20           [--variance-report] [--t-inner N]  (MISA-vs-layerwise\n\
          \x20           gradient-estimator variance on the same norms)\n\
+         \x20           [--gemm]  (kernel-level GEMM GFLOP/s sweep by shape)\n\
          \x20 misa exp <name|all|list> [--full] [--artifacts DIR] [--backend B]\n\
          \x20 misa info [--artifacts DIR] [--backend B]\n\n\
          Every subcommand also takes --threads N (GEMM worker-pool width;\n\
          default: MISA_THREADS, else 1), --trace-out FILE (record spans and\n\
          write a Chrome trace-event JSON on exit; also MISA_TRACE=1) and\n\
          --metrics-out FILE (Prometheus-style metrics dump on exit).\n\
-         MISA_LOG=error|warn|info|debug sets stderr log verbosity.\n"
+         MISA_LOG=error|warn|info|debug sets stderr log verbosity;\n\
+         MISA_SIMD=0 forces the scalar GEMM microkernel (bit-identical,\n\
+         AVX2 is used when detected otherwise).\n"
     );
     std::process::exit(2)
 }
@@ -76,7 +79,7 @@ const VALUED_FLAGS: &[&str] = &[
 
 /// Boolean switches.
 const SWITCHES: &[&str] =
-    &["pretrain", "full", "host", "prefix-cache", "spec", "variance-report"];
+    &["pretrain", "full", "host", "prefix-cache", "spec", "variance-report", "gemm"];
 
 struct Args {
     positional: Vec<String>,
@@ -775,12 +778,114 @@ fn cmd_bench_variance(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `misa bench --gemm` — kernel-level GFLOP/s sweep: time the three
+/// blocked GEMM cores over the standard shapes (decode-sized, LM-head
+/// tall-skinny, squares, tile-ragged) at the current `--threads` width
+/// and SIMD mode, print a table, and with `--json` write one
+/// `bench-gemm` record per (core, shape) as a JSON array — the
+/// before/after evidence a kernel PR lands in `BENCH_serve.json` /
+/// `BENCH_train.json`.
+fn cmd_bench_gemm(args: &Args) -> Result<()> {
+    use misa::tensor::{gemm_nn_into, gemm_nt_into, gemm_tn_acc};
+    let seed: u64 = match args.flags.get("seed") {
+        Some(s) => s.parse().context("--seed")?,
+        None => 0,
+    };
+    let threads = misa::tensor::threads();
+    let simd = misa::tensor::simd_label();
+    println!("bench --gemm: threads={threads} simd={simd}");
+    // iteration count is auto-calibrated per (core, shape) toward this
+    // wall budget, so tiny and large shapes get comparable noise floors
+    const BUDGET_S: f64 = 0.25;
+    fn time_iters(budget: f64, mut f: impl FnMut()) -> (usize, f64) {
+        let t0 = std::time::Instant::now();
+        f(); // warm caches, panels, and the pool
+        let once = t0.elapsed().as_secs_f64();
+        let iters = ((budget / once.max(1e-9)) as usize).clamp(1, 1000);
+        let t0 = std::time::Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        (iters, t0.elapsed().as_secs_f64() / iters as f64)
+    }
+    // decode-sized projection, LM-head tall-skinny, squares, and a
+    // shape ragged against every tile edge
+    const SHAPES: &[(usize, usize, usize)] =
+        &[(8, 256, 256), (64, 256, 1024), (256, 256, 256), (512, 512, 512), (97, 161, 133)];
+    let mut rng = Rng::new(seed);
+    let mut records = Vec::new();
+    println!(
+        "{:<8} {:>14} {:>7} {:>11} {:>9}",
+        "core", "m×k×n", "iters", "ms/iter", "GFLOP/s"
+    );
+    for &(m, k, n) in SHAPES {
+        let mut a = vec![0.0f32; m * k];
+        let mut b = vec![0.0f32; k * n];
+        let mut a_nt = vec![0.0f32; m * n];
+        let mut b_nt = vec![0.0f32; k * n];
+        let mut c_tn = vec![0.0f32; m * n];
+        rng.fill_normal(&mut a, 1.0);
+        rng.fill_normal(&mut b, 1.0);
+        rng.fill_normal(&mut a_nt, 1.0);
+        rng.fill_normal(&mut b_nt, 1.0);
+        rng.fill_normal(&mut c_tn, 1.0);
+        let mut out_nn = vec![0.0f32; m * n];
+        let mut out_nt = vec![0.0f32; m * k];
+        let mut out_tn = vec![0.0f32; k * n];
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let runs: [(&'static str, Box<dyn FnMut() + '_>); 3] = [
+            ("nn", Box::new(|| gemm_nn_into(&a, &b, m, k, n, &mut out_nn))),
+            ("nt", Box::new(|| gemm_nt_into(&a_nt, &b_nt, m, n, k, &mut out_nt))),
+            ("tn", Box::new(|| gemm_tn_acc(&a, &c_tn, m, k, n, &mut out_tn))),
+        ];
+        for (core, f) in runs {
+            let (iters, secs) = time_iters(BUDGET_S, f);
+            let gflops = flops / secs / 1e9;
+            let shape = format!("{m}x{k}x{n}");
+            println!(
+                "{core:<8} {shape:>14} {iters:>7} {:>11.3} {gflops:>9.2}",
+                secs * 1e3
+            );
+            records.push(
+                misa::util::BenchRecord::new("bench-gemm")
+                    .tag("core", core)
+                    .tag("shape", shape)
+                    .tag("simd", simd)
+                    .num("threads", threads as f64)
+                    .num("m", m as f64)
+                    .num("k", k as f64)
+                    .num("n", n as f64)
+                    .num("iters", iters as f64)
+                    .num("ms_per_iter", secs * 1e3)
+                    .num("gflops", gflops),
+            );
+        }
+    }
+    if let Some(path) = args.flags.get("json") {
+        let body = format!(
+            "[\n{}\n]\n",
+            records
+                .iter()
+                .map(|r| r.to_json().trim_end().to_string())
+                .collect::<Vec<_>>()
+                .join(",\n")
+        );
+        std::fs::write(path, body).with_context(|| format!("writing gemm bench to {path}"))?;
+        println!("gemm bench records written: {path}");
+    }
+    Ok(())
+}
+
 /// `misa bench` — training step-time: run `--steps` fwd/bwd+optimizer
 /// steps on `--model` and report/record ms per phase (the training
 /// counterpart of `bench-serve`, sharing the same JSON schema).
 /// `--variance-report` switches to the MISA-vs-layerwise estimator-
-/// variance measurement instead ([`cmd_bench_variance`]).
+/// variance measurement instead ([`cmd_bench_variance`]);
+/// `--gemm` to the kernel-level GFLOP/s sweep ([`cmd_bench_gemm`]).
 fn cmd_bench(args: &Args) -> Result<()> {
+    if args.switches.contains("gemm") {
+        return cmd_bench_gemm(args);
+    }
     if args.switches.contains("variance-report") {
         return cmd_bench_variance(args);
     }
@@ -972,6 +1077,15 @@ mod tests {
         let a = parse_args(&v(&["train", "--pretrain", "50"])).unwrap();
         assert!(a.switches.contains("pretrain"));
         assert_eq!(a.positional, vec!["train", "50"]);
+    }
+
+    #[test]
+    fn bench_gemm_switch_parses() {
+        let a = parse_args(&v(&["bench", "--gemm", "--threads", "2", "--json", "g.json"]))
+            .unwrap();
+        assert!(a.switches.contains("gemm"));
+        assert_eq!(a.flags.get("threads").unwrap(), "2");
+        assert_eq!(a.flags.get("json").unwrap(), "g.json");
     }
 
     #[test]

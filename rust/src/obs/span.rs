@@ -19,10 +19,13 @@
 //! verbatim with tracing fully enabled; `rust/tests/obs.rs` re-runs
 //! those suites under tracing to pin it.
 //!
-//! Worker threads spawned via `std::thread::scope` do not inherit the
-//! parent's thread-local stack, so the GEMM pool captures
-//! [`current`] on the calling thread and opens worker spans with
-//! [`span_child`], keeping the tree connected across the fan-out.
+//! The persistent worker pool's threads do not share the submitter's
+//! thread-local stack — and, being long-lived, one worker serves many
+//! differently-parented jobs over its lifetime — so the pool captures
+//! [`current`] on the submitting thread **per job** and opens one
+//! `pool_task` span per task with [`span_child`], keeping the tree
+//! connected across the fan-out no matter which participant (worker
+//! or the caller itself) ends up executing a given task.
 //!
 //! The buffer is bounded at [`MAX_EVENTS`]; once full, further events
 //! increment a visible drop counter instead of growing without bound

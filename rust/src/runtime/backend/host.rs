@@ -27,7 +27,7 @@ use crate::modelspec::ModelSpec;
 use crate::optim::adam::{AdamHyper, AdamState};
 use crate::runtime::backend::{Backend, KvCache};
 use crate::runtime::{EvalOutput, StepOutput};
-use crate::tensor::{gemm_nn, gemm_nn_into, gemm_nt, gemm_tn_acc};
+use crate::tensor::{gemm_nn, gemm_nn_into, gemm_nt, gemm_tn_acc, par, simd};
 
 /// RoPE base frequency (python/compile/configs.py default).
 const ROPE_THETA: f32 = 10_000.0;
@@ -222,8 +222,6 @@ struct DecodeWorkspace {
     up: Vec<f32>,
     /// silu(gpre) * up `[bsz, f]`
     act: Vec<f32>,
-    /// per-head attention scores over one slot's resident window
-    scores: Vec<f32>,
     /// LM-head output `[bsz, v]` — the largest per-token buffer; per-slot
     /// rows are copied out of it (the ABI returns owned rows) but the
     /// flat matrix itself is never reallocated
@@ -231,10 +229,10 @@ struct DecodeWorkspace {
 }
 
 impl DecodeWorkspace {
-    /// Release capacity above a `rows`-row envelope (`scores` is
-    /// window-sized, not row-sized, and is left alone). `shrink_to`
-    /// only trims capacity, so the next call's `resize` still finds
-    /// the retained envelope warm.
+    /// Release capacity above a `rows`-row envelope. `shrink_to` only
+    /// trims capacity, so the next call's `resize` still finds the
+    /// retained envelope warm. (Attention-score scratch is per-thread
+    /// — see `SCORES` — not part of this workspace.)
     fn shrink_to_rows(&mut self, rows: usize, d: usize, kd: usize, f: usize, v: usize) {
         fn cap(b: &mut Vec<f32>, n: usize) {
             b.truncate(n);
@@ -258,7 +256,7 @@ impl DecodeWorkspace {
     fn bytes(&self) -> u64 {
         [
             &self.x, &self.h, &self.q, &self.k, &self.v, &self.concat, &self.proj,
-            &self.gpre, &self.up, &self.act, &self.scores, &self.logits,
+            &self.gpre, &self.up, &self.act, &self.logits,
         ]
         .iter()
         .map(|b| b.capacity())
@@ -580,7 +578,11 @@ impl HostBackend {
                     self.rope_row(&mut ws.k[r * kd..(r + 1) * kd], nkv, starts[i] + j);
                 }
             }
-            // causal attention over each slot's resident window. Each
+            // causal attention over each slot's resident window,
+            // fanned out one pool task per slot — slots touch disjoint
+            // caches and disjoint `concat` rows, and each slot's
+            // in-order walk is untouched, so any fan-out width is
+            // bit-identical to the serial loop. Within a slot, each
             // position's K/V is written into its ring right before its
             // own query attends: writing one position at a time means a
             // wrapping chunk never clobbers a slot an earlier in-chunk
@@ -588,28 +590,51 @@ impl HostBackend {
             // when position `p - capacity` has left every remaining
             // window.
             ws.concat.fill(0.0);
-            for i in 0..bsz {
-                let cache = &mut *caches[i];
-                for j in 0..chunks[i].len() {
-                    let r = offs[i] + j;
-                    let p = starts[i] + j;
-                    cache.write_kv(
-                        li,
-                        p,
-                        &ws.k[r * kd..(r + 1) * kd],
-                        &ws.v[r * kd..(r + 1) * kd],
-                    );
-                    attend_position(
-                        &ws.q[r * d..(r + 1) * d],
-                        p,
-                        cache,
-                        li,
-                        &mut ws.scores,
-                        &mut ws.concat[r * d..(r + 1) * d],
-                        (nh, rep, hd, kd),
-                        scale,
-                    );
-                }
+            {
+                let attn_macs: usize = (0..bsz)
+                    .map(|i| {
+                        (0..chunks[i].len())
+                            .map(|j| {
+                                let win = (starts[i] + j + 1).min(caches[i].capacity());
+                                2 * win * nh * hd
+                            })
+                            .sum::<usize>()
+                    })
+                    .sum();
+                let workers = par::plan_workers(bsz, attn_macs);
+                let concat = par::SendPtr(ws.concat.as_mut_ptr());
+                let cache_ptrs =
+                    par::SendPtrs(caches.iter_mut().map(|c| &mut **c as *mut KvCache).collect());
+                let (q, kk, vv) = (&ws.q, &ws.k, &ws.v);
+                let (offs, starts) = (&offs, &starts);
+                par::run_tasks(workers, bsz, |i| {
+                    // SAFETY: task `i` is the only one touching cache
+                    // `i` and `concat` rows `offs[i]..offs[i+1]`, and
+                    // both outlive the dispatch (the submitter blocks
+                    // until every task completes).
+                    let cache = unsafe { &mut *cache_ptrs.0[i] };
+                    for j in 0..chunks[i].len() {
+                        let r = offs[i] + j;
+                        let p = starts[i] + j;
+                        cache.write_kv(
+                            li,
+                            p,
+                            &kk[r * kd..(r + 1) * kd],
+                            &vv[r * kd..(r + 1) * kd],
+                        );
+                        let orow =
+                            unsafe { std::slice::from_raw_parts_mut(concat.0.add(r * d), d) };
+                        attend_position(
+                            &q[r * d..(r + 1) * d],
+                            p,
+                            cache,
+                            li,
+                            orow,
+                            (nh, rep, hd, kd),
+                            scale,
+                        );
+                    }
+                });
             }
             gemm_nn_into(&ws.concat, &host[lp.wo], rows, d, d, &mut ws.proj);
             for (x, &p) in ws.x.iter_mut().zip(&ws.proj) {
@@ -726,10 +751,7 @@ impl HostBackend {
                     dhfrow[jd] = acc;
                     let hv = hfrow[jd];
                     if hv != 0.0 {
-                        let grow = &mut ghead[jd * v..(jd + 1) * v];
-                        for (g, &dl) in grow.iter_mut().zip(dlrow.iter()) {
-                            *g += hv * dl;
-                        }
+                        simd::axpy(hv, &dlrow, &mut ghead[jd * v..(jd + 1) * v]);
                     }
                 }
             }
@@ -1053,25 +1075,43 @@ impl Backend for HostBackend {
                 self.rope_row(&mut ws.q[i * d..(i + 1) * d], nh, positions[i]);
                 self.rope_row(&mut ws.k[i * kd..(i + 1) * kd], nkv, positions[i]);
             }
+            // per-slot attention, one pool task per slot: disjoint
+            // caches, disjoint `concat` rows, same per-slot kernel as
+            // the serial loop — bit-identical at any fan-out width
             ws.concat.fill(0.0);
-            for i in 0..bsz {
-                let cache = &mut *caches[i];
-                cache.write_kv(
-                    li,
-                    positions[i],
-                    &ws.k[i * kd..(i + 1) * kd],
-                    &ws.v[i * kd..(i + 1) * kd],
-                );
-                attend_position(
-                    &ws.q[i * d..(i + 1) * d],
-                    positions[i],
-                    cache,
-                    li,
-                    &mut ws.scores,
-                    &mut ws.concat[i * d..(i + 1) * d],
-                    (nh, rep, hd, kd),
-                    scale,
-                );
+            {
+                let attn_macs: usize = (0..bsz)
+                    .map(|i| {
+                        let win = (positions[i] + 1).min(caches[i].capacity());
+                        2 * win * nh * hd
+                    })
+                    .sum();
+                let workers = par::plan_workers(bsz, attn_macs);
+                let concat = par::SendPtr(ws.concat.as_mut_ptr());
+                let cache_ptrs =
+                    par::SendPtrs(caches.iter_mut().map(|c| &mut **c as *mut KvCache).collect());
+                let (q, kk, vv) = (&ws.q, &ws.k, &ws.v);
+                par::run_tasks(workers, bsz, |i| {
+                    // SAFETY: task `i` exclusively owns cache `i` and
+                    // `concat` row `i`; both outlive the dispatch.
+                    let cache = unsafe { &mut *cache_ptrs.0[i] };
+                    cache.write_kv(
+                        li,
+                        positions[i],
+                        &kk[i * kd..(i + 1) * kd],
+                        &vv[i * kd..(i + 1) * kd],
+                    );
+                    let orow = unsafe { std::slice::from_raw_parts_mut(concat.0.add(i * d), d) };
+                    attend_position(
+                        &q[i * d..(i + 1) * d],
+                        positions[i],
+                        cache,
+                        li,
+                        orow,
+                        (nh, rep, hd, kd),
+                        scale,
+                    );
+                });
             }
             gemm_nn_into(&ws.concat, &host[lp.wo], bsz, d, d, &mut ws.proj);
             for (x, &p) in ws.x.iter_mut().zip(&ws.proj) {
@@ -1144,19 +1184,23 @@ fn rms_forward(x: &[f32], w: &[f32], n: usize, d: usize) -> (Vec<f32>, Vec<f32>)
 
 /// [`rms_forward`] into a caller-owned buffer, rsqrt factors discarded
 /// (the serving paths keep no backward trace). Same accumulation order
-/// as the training kernel, row by row.
+/// as the training kernel, row by row; rows are independent, so
+/// prefill-sized calls fan out over the pool (decode-sized ones stay
+/// under the work floor and run serial) without changing a bit.
 fn rms_forward_into(x: &[f32], w: &[f32], n: usize, d: usize, out: &mut [f32]) {
     debug_assert_eq!(x.len(), n * d);
     debug_assert_eq!(out.len(), n * d);
-    for i in 0..n {
-        let row = &x[i * d..(i + 1) * d];
-        let ms: f64 = row.iter().map(|&a| (a as f64) * (a as f64)).sum::<f64>() / d as f64;
-        let ri = 1.0 / ((ms as f32) + NORM_EPS).sqrt();
-        let orow = &mut out[i * d..(i + 1) * d];
-        for j in 0..d {
-            orow[j] = row[j] * ri * w[j];
+    let workers = par::plan_workers(n, 2 * n * d);
+    par::par_out_rows(out, n, d, workers, |row0, ochunk| {
+        for (i, orow) in ochunk.chunks_mut(d).enumerate() {
+            let row = &x[(row0 + i) * d..(row0 + i + 1) * d];
+            let ms: f64 = row.iter().map(|&a| (a as f64) * (a as f64)).sum::<f64>() / d as f64;
+            let ri = 1.0 / ((ms as f32) + NORM_EPS).sqrt();
+            for j in 0..d {
+                orow[j] = row[j] * ri * w[j];
+            }
         }
-    }
+    });
 }
 
 /// Attend position `p`'s query over the cache's resident window into
@@ -1170,57 +1214,66 @@ fn rms_forward_into(x: &[f32], w: &[f32], n: usize, d: usize, out: &mut [f32]) {
 /// and a forked cache bit-identical to a cold one, since reads go
 /// through the same ring rows whether a chunk is owned or shared.
 /// `dims` is `(n_heads, rep, head_dim, kv_dim)`.
-#[allow(clippy::too_many_arguments)]
 fn attend_position(
     qrow_all: &[f32],
     p: usize,
     cache: &KvCache,
     layer: usize,
-    scores: &mut Vec<f32>,
     orow_all: &mut [f32],
     dims: (usize, usize, usize, usize),
     scale: f32,
 ) {
+    thread_local! {
+        /// Per-thread attention-score scratch (window-sized). It was
+        /// workspace-owned before the per-slot fan-out; now every pool
+        /// participant needs its own, and persistent workers keep
+        /// theirs warm across jobs for free.
+        static SCORES: std::cell::RefCell<Vec<f32>> =
+            const { std::cell::RefCell::new(Vec::new()) };
+    }
     let (nh, rep, hd, _kd) = dims;
     let capacity = cache.capacity();
     let lo = (p + 1).saturating_sub(capacity);
     let w = p + 1 - lo;
-    scores.resize(w, 0.0);
-    for h in 0..nh {
-        let kvh = h / rep;
-        let qrow = &qrow_all[h * hd..][..hd];
-        let mut mx = f32::NEG_INFINITY;
-        for (jj, sc_out) in scores.iter_mut().enumerate() {
-            let slot = (lo + jj) % capacity;
-            let kr = &cache.k_row(layer, slot)[kvh * hd..][..hd];
-            let mut sc = 0.0f32;
-            for tt in 0..hd {
-                sc += qrow[tt] * kr[tt];
+    SCORES.with(|cell| {
+        let mut scores = cell.borrow_mut();
+        scores.resize(w, 0.0);
+        for h in 0..nh {
+            let kvh = h / rep;
+            let qrow = &qrow_all[h * hd..][..hd];
+            let mut mx = f32::NEG_INFINITY;
+            for (jj, sc_out) in scores.iter_mut().enumerate() {
+                let slot = (lo + jj) % capacity;
+                let kr = &cache.k_row(layer, slot)[kvh * hd..][..hd];
+                // the q·k reduction stays scalar: vectorizing it would
+                // need lane partial sums, which reorders the additions
+                let mut sc = 0.0f32;
+                for tt in 0..hd {
+                    sc += qrow[tt] * kr[tt];
+                }
+                let sc = sc * scale;
+                *sc_out = sc;
+                mx = mx.max(sc);
             }
-            let sc = sc * scale;
-            *sc_out = sc;
-            mx = mx.max(sc);
-        }
-        let mut denom = 0.0f32;
-        for sc in scores.iter_mut() {
-            let e = (*sc - mx).exp();
-            *sc = e;
-            denom += e;
-        }
-        let inv = 1.0 / denom;
-        let orow = &mut orow_all[h * hd..][..hd];
-        for (jj, &pr) in scores.iter().enumerate() {
-            let pr = pr * inv;
-            if pr == 0.0 {
-                continue;
+            let mut denom = 0.0f32;
+            for sc in scores.iter_mut() {
+                let e = (*sc - mx).exp();
+                *sc = e;
+                denom += e;
             }
-            let slot = (lo + jj) % capacity;
-            let vr = &cache.v_row(layer, slot)[kvh * hd..][..hd];
-            for tt in 0..hd {
-                orow[tt] += pr * vr[tt];
+            let inv = 1.0 / denom;
+            let orow = &mut orow_all[h * hd..][..hd];
+            for (jj, &pr) in scores.iter().enumerate() {
+                let pr = pr * inv;
+                if pr == 0.0 {
+                    continue;
+                }
+                let slot = (lo + jj) % capacity;
+                let vr = &cache.v_row(layer, slot)[kvh * hd..][..hd];
+                simd::axpy(pr, vr, orow);
             }
         }
-    }
+    });
 }
 
 /// Backward of `rms_forward`: accumulates `dw` and returns `dx`.

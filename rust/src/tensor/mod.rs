@@ -16,8 +16,10 @@
 //! shapes around.
 
 pub mod par;
+pub mod simd;
 
 pub use par::{set_threads, threads};
+pub use simd::{set_simd, simd_enabled, simd_label};
 
 use crate::util::Rng;
 
@@ -33,11 +35,20 @@ use crate::util::Rng;
 //
 // Two invariants the rest of the repo leans on:
 // - The zero-skip in the accumulation loops is load-bearing for sparse
-//   gradients (masked positions produce all-zero rows).
+//   gradients (masked positions produce all-zero rows). Skipping a
+//   zero multiplier is itself bit-exact: `out` buffers start at +0.0
+//   and an accumulator can never become -0.0 (x + -x rounds to +0.0,
+//   and +0.0 + -0.0 = +0.0 in round-to-nearest), so adding the ±0.0
+//   product would never change a single bit.
 // - Every output element accumulates over its reduction dimension in
 //   strictly ascending index order, and each output row belongs to one
-//   worker: results are bit-identical at every thread count, and
+//   task: results are bit-identical at every thread count, and
 //   bit-identical to the pre-blocking naive kernels.
+//
+// All three inner loops are the same axpy shape — `orow += aik *
+// panel_row` — dispatched through `simd::axpy`, which vectorizes
+// across independent output columns with separate mul-then-add so the
+// SIMD path is also bit-identical to scalar (see `simd` module docs).
 // ---------------------------------------------------------------------------
 
 /// Reduction-dimension tile: rows of the packed B panel in
@@ -70,9 +81,9 @@ thread_local! {
     /// Per-thread B-panel scratch for [`gemm_nn_rows`]. Thread-local
     /// (not per-call) so the serial decode hot path — 8 GEMMs per
     /// layer per token, all on the caller thread — packs into one warm
-    /// 32 KiB buffer instead of reallocating it every call. Scoped
-    /// workers are short-lived and only run kernels big enough that
-    /// one panel allocation is noise.
+    /// 32 KiB buffer instead of reallocating it every call. Pool
+    /// workers are persistent now, so each keeps its own warm panel
+    /// across jobs for free.
     static NN_PANEL: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
 }
 
@@ -107,10 +118,7 @@ fn gemm_nn_rows_packed(a: &[f32], b: &[f32], rows: usize, k: usize, n: usize,
                     if aik == 0.0 {
                         continue;
                     }
-                    let prow = &panel[kk * nb..(kk + 1) * nb];
-                    for (o, &bv) in orow.iter_mut().zip(prow) {
-                        *o += aik * bv;
-                    }
+                    simd::axpy(aik, &panel[kk * nb..(kk + 1) * nb], orow);
                 }
             }
             pc += kb;
@@ -152,10 +160,7 @@ pub fn gemm_tn_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut
                     if av == 0.0 {
                         continue;
                     }
-                    let orow = &mut ochunk[kk * n + jc..kk * n + jc + nb];
-                    for (o, &bv) in orow.iter_mut().zip(brow) {
-                        *o += av * bv;
-                    }
+                    simd::axpy(av, brow, &mut ochunk[kk * n + jc..kk * n + jc + nb]);
                 }
             }
             jc += nb;
@@ -163,13 +168,23 @@ pub fn gemm_tn_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut
     });
 }
 
+thread_local! {
+    /// Per-thread transposed-B-panel scratch for [`gemm_nt_into`]
+    /// (`KC x JC` = 16 KiB), same warm-reuse rationale as `NN_PANEL`.
+    static NT_PANEL: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
+}
+
 /// `out[m, k] = a[m, n] @ b[k, n]^T` into a caller-owned buffer —
 /// input gradients through a weight, without materializing the
 /// transpose. Parallel over blocks of the `m` output rows; within a
-/// block, tiled over the B rows and the `n` reduction so a `JC x KC`
-/// patch of B is reused across the whole row block. Partial dot
-/// products flush through `out` between reduction tiles, which keeps
-/// per-element addition order ascending in `n`.
+/// block, tiled over the B rows and the `n` reduction with the `nb x
+/// jb` B patch packed *transposed*, which turns the inner loop from a
+/// strided dot product into the same contiguous axpy the other cores
+/// use (`orow += a[i, pc+t] * panel_row_t`). Per output element the
+/// operation sequence is unchanged: one mul and one add per reduction
+/// index, ascending in `n`, flushed through `out` between tiles — so
+/// this restructure (and its new zero-skip, see the invariants above)
+/// is bit-identical to the previous dot-product form.
 pub fn gemm_nt_into(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
     debug_assert_eq!(a.len(), m * n);
     debug_assert_eq!(b.len(), k * n);
@@ -183,29 +198,38 @@ pub fn gemm_nt_into(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mu
     const JC: usize = 64;
     let workers = par::plan_workers(m, m * k * n);
     par::par_out_rows(out, m, k, workers, |row0, ochunk| {
-        let rows = ochunk.len() / k;
-        let mut jc = 0;
-        while jc < k {
-            let jb = JC.min(k - jc);
-            let mut pc = 0;
-            while pc < n {
-                let nb = KC.min(n - pc);
-                for i in 0..rows {
-                    let arow = &a[(row0 + i) * n + pc..(row0 + i) * n + pc + nb];
-                    let orow = &mut ochunk[i * k + jc..i * k + jc + jb];
-                    for (j, o) in orow.iter_mut().enumerate() {
+        NT_PANEL.with(|cell| {
+            let mut panel = cell.borrow_mut();
+            panel.resize(KC * JC, 0.0);
+            let rows = ochunk.len() / k;
+            let mut jc = 0;
+            while jc < k {
+                let jb = JC.min(k - jc);
+                let mut pc = 0;
+                while pc < n {
+                    let nb = KC.min(n - pc);
+                    // pack the patch transposed: panel[t][j] = b[jc+j][pc+t]
+                    for j in 0..jb {
                         let brow = &b[(jc + j) * n + pc..(jc + j) * n + pc + nb];
-                        let mut acc = *o;
-                        for (x, y) in arow.iter().zip(brow) {
-                            acc += x * y;
+                        for (t, &bv) in brow.iter().enumerate() {
+                            panel[t * jb + j] = bv;
                         }
-                        *o = acc;
                     }
+                    for i in 0..rows {
+                        let arow = &a[(row0 + i) * n + pc..(row0 + i) * n + pc + nb];
+                        let orow = &mut ochunk[i * k + jc..i * k + jc + jb];
+                        for (t, &av) in arow.iter().enumerate() {
+                            if av == 0.0 {
+                                continue;
+                            }
+                            simd::axpy(av, &panel[t * jb..(t + 1) * jb], orow);
+                        }
+                    }
+                    pc += nb;
                 }
-                pc += nb;
+                jc += jb;
             }
-            jc += jb;
-        }
+        });
     });
 }
 

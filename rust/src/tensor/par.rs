@@ -1,21 +1,54 @@
-//! Worker-pool parallelism for the GEMM slice cores.
+//! Persistent work-stealing worker pool for the GEMM slice cores and
+//! the `HostBackend` fan-outs.
 //!
 //! rayon is not vendorable offline (same constraint that hand-rolled
-//! the PRNG and the TOML parser), so the pool is built on
-//! `std::thread::scope`: each sufficiently large kernel invocation
-//! partitions its *output rows* into contiguous blocks, spawns one
-//! scoped worker per extra block, and runs the first block on the
-//! calling thread. Scoped threads make the borrow story trivially safe
-//! — no lifetime erasure, no channels, no unsafe.
+//! the PRNG and the TOML parser), so the pool is built directly on
+//! `std::thread` + condvars. Earlier revisions rebuilt a scoped pool
+//! with `std::thread::scope` on **every** kernel invocation; spawn +
+//! join cost put a 128 Ki-MAC floor under parallelism and decode-sized
+//! kernels always ran serial. The pool is now **persistent**: workers
+//! are spawned lazily at the first large kernel, park on a condvar
+//! between jobs, are resized when `set_threads` / `MISA_THREADS`
+//! changes the knob, and retire cleanly on [`Pool::shutdown`] (which
+//! [`Pool`]'s `Drop` runs too).
+//!
+//! ## Work stealing
+//!
+//! A job is an index range of independent tasks (row blocks, slots).
+//! The range is split into one contiguous sub-range per participant,
+//! each packed into a single `AtomicU64` (`lo << 32 | hi`) that acts
+//! as a deque: the owner pops from the front with a CAS, idle
+//! participants steal the back half of the richest victim with a CAS.
+//! Ragged shapes therefore load-balance instead of waiting on the
+//! slowest static chunk. The submitting thread is always participant
+//! 0 — correctness never depends on a worker waking up.
+//!
+//! ABA on the packed ranges is structurally impossible: a task index
+//! is claimed by exactly one successful CAS transition, ranges only
+//! shrink (pop/steal) or move to the thief's own empty slot, so a
+//! previously observed `(lo, hi)` packing can never reappear with any
+//! of its tasks still unclaimed.
 //!
 //! ## The reduction order we commit to
 //!
 //! Every core accumulates each output element over its reduction
 //! dimension in strictly ascending index order, and each output row is
-//! owned by exactly one worker. Partitioning therefore never reorders
-//! a single floating-point addition: results are **bit-identical at
-//! every thread count**, including `threads = 1` versus the pre-blocking
-//! naive kernels. `tensor::tests` pins this invariant.
+//! owned by exactly one task. Task partitioning and stealing move
+//! *which thread* computes a row, never the order of a single
+//! floating-point addition: results are **bit-identical at every
+//! thread count** — including `threads = 1` versus the pre-blocking
+//! naive kernels — and identical whichever participant steals what.
+//! `tensor::tests` and `tests/pool.rs` pin this invariant.
+//!
+//! ## Observability
+//!
+//! Each parallel run publishes to the global [`crate::obs::metrics`]
+//! registry once (batched — the registry mutex is never touched from
+//! the task hot loop): `pool.tasks`, `pool.steals`, `pool.busy_us`,
+//! `pool.parks`, `pool.unparks` counters and the `pool.workers` gauge.
+//! Every task opens a `pool_task` span parented to the span that was
+//! open on the submitting thread, so Perfetto traces stay connected
+//! across the fan-out even though the workers are long-lived.
 //!
 //! ## The knob
 //!
@@ -25,8 +58,10 @@
 //! default. Small kernels stay serial regardless — see
 //! `plan_workers` — so the knob never pessimizes tiny shapes.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::OnceLock;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
 
 /// 0 = "unset, use the environment default".
 static THREADS: AtomicUsize = AtomicUsize::new(0);
@@ -52,15 +87,18 @@ pub fn threads() -> usize {
 }
 
 /// Override the worker-pool width (the `--threads` flag). `0` resets
-/// to the `MISA_THREADS` environment default.
+/// to the `MISA_THREADS` environment default. The global pool
+/// reconciles its resident worker count at the next parallel dispatch.
 pub fn set_threads(n: usize) {
     THREADS.store(n, Ordering::Relaxed);
 }
 
 /// Minimum multiply-accumulates each *extra* worker must bring; below
-/// this, thread spawn + join overhead outweighs the parallel win and
-/// the kernel stays serial (decode-sized GEMMs take this path).
-const MIN_MACS_PER_WORKER: usize = 128 * 1024;
+/// this the kernel stays serial. The persistent pool dropped the
+/// per-call spawn/join cost that used to set this floor at 128 Ki —
+/// waking a parked worker is ~µs, so kernels a quarter that size now
+/// profit (decode-sized projections at batch >= 4 cross this line).
+const MIN_MACS_PER_WORKER: usize = 32 * 1024;
 
 /// How many workers a kernel with `rows` independent output rows and
 /// `macs` total multiply-accumulates should use.
@@ -77,10 +115,455 @@ fn plan_workers_at(t: usize, rows: usize, macs: usize) -> usize {
     t.min(rows).min((macs / MIN_MACS_PER_WORKER).max(1))
 }
 
-/// Run `body(row0, out_chunk)` over `out` split into `workers`
-/// contiguous row blocks (`out.len() == rows * stride`). Blocks after
-/// the first run on scoped worker threads; the first runs on the
-/// caller so a `workers`-wide plan occupies exactly `workers` cores.
+// ---------------------------------------------------------------------------
+// Packed task ranges: one AtomicU64 per participant, (lo << 32) | hi.
+// ---------------------------------------------------------------------------
+
+#[inline]
+fn pack(lo: u32, hi: u32) -> u64 {
+    ((lo as u64) << 32) | hi as u64
+}
+
+#[inline]
+fn unpack(v: u64) -> (u32, u32) {
+    ((v >> 32) as u32, v as u32)
+}
+
+/// Pop the front task of a range (owner side of the deque).
+fn pop_front(range: &AtomicU64) -> Option<usize> {
+    let mut cur = range.load(Ordering::Acquire);
+    loop {
+        let (lo, hi) = unpack(cur);
+        if lo >= hi {
+            return None;
+        }
+        match range.compare_exchange_weak(
+            cur,
+            pack(lo + 1, hi),
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        ) {
+            Ok(_) => return Some(lo as usize),
+            Err(v) => cur = v,
+        }
+    }
+}
+
+/// Steal the back half (rounded up) of the richest victim range.
+/// Returns the stolen `[lo, hi)` interval, or `None` once every range
+/// is empty.
+fn steal_half(ranges: &[AtomicU64], me: usize) -> Option<(u32, u32)> {
+    loop {
+        let mut best: Option<(usize, u64, u32)> = None;
+        for (i, r) in ranges.iter().enumerate() {
+            if i == me {
+                continue;
+            }
+            let cur = r.load(Ordering::Acquire);
+            let (lo, hi) = unpack(cur);
+            let len = hi.saturating_sub(lo);
+            if len > 0 && best.map_or(true, |(_, _, blen)| len > blen) {
+                best = Some((i, cur, len));
+            }
+        }
+        let (i, cur, len) = best?;
+        let (lo, hi) = unpack(cur);
+        let take = len.div_ceil(2);
+        let new_hi = hi - take;
+        if ranges[i]
+            .compare_exchange(cur, pack(lo, new_hi), Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            return Some((new_hi, hi));
+        }
+        // lost the race — rescan; ranges only shrink, so this terminates
+    }
+}
+
+/// Split `0..n_tasks` into `participants` contiguous packed ranges.
+fn build_ranges(participants: usize, n_tasks: usize) -> Vec<AtomicU64> {
+    debug_assert!(n_tasks < u32::MAX as usize);
+    let base = n_tasks / participants;
+    let rem = n_tasks % participants;
+    let mut lo = 0u32;
+    (0..participants)
+        .map(|p| {
+            let len = (base + usize::from(p < rem)) as u32;
+            let r = AtomicU64::new(pack(lo, lo + len));
+            lo += len;
+            r
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// The pool.
+// ---------------------------------------------------------------------------
+
+/// One in-flight job. `data`/`call` are a type-erased borrow of the
+/// submitter's closure — valid for the whole job because the submitter
+/// blocks until `remaining == 0` before returning (and tasks are only
+/// ever claimed while `remaining > 0`).
+struct Job {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+    /// per-participant task deques, packed `(lo << 32) | hi`
+    ranges: Vec<AtomicU64>,
+    /// participant slots claimed in wake order; slot 0 is the caller
+    next_slot: AtomicUsize,
+    /// tasks not yet finished executing
+    remaining: AtomicUsize,
+    steals: AtomicU64,
+    busy_ns: AtomicU64,
+    /// span open on the submitting thread, re-parented onto every task
+    parent: Option<&'static str>,
+    /// first panic payload out of any task; re-raised on the submitter
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+// SAFETY: `data` is dereferenced only through `call` (which requires
+// the closure to be `Sync`, enforced by `Pool::run`'s bound) and only
+// while the submitting frame is alive (see the `Job` doc comment).
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+struct State {
+    /// bumped once per submitted job; tells a parked worker "new job"
+    epoch: u64,
+    /// the in-flight job, if any
+    job: Option<Arc<Job>>,
+    /// desired resident worker count
+    target: usize,
+    /// live worker threads
+    alive: usize,
+}
+
+struct Inner {
+    state: Mutex<State>,
+    /// workers park here between jobs
+    work_cv: Condvar,
+    /// submitters wait here for `remaining == 0`; `shutdown` for
+    /// `alive == 0`
+    done_cv: Condvar,
+    /// park/unpark transitions, drained into the metrics registry once
+    /// per run (never from the task hot loop)
+    parks: AtomicU64,
+    unparks: AtomicU64,
+}
+
+thread_local! {
+    /// True while this thread is executing pool tasks: nested `run`
+    /// calls from inside a task execute inline, so a task body may
+    /// freely call back into parallel kernels without self-deadlock.
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// A persistent worker pool. The process-global instance behind
+/// [`run_tasks`] serves every kernel; tests build private instances to
+/// exercise resize/shutdown/drop without touching global state.
+pub struct Pool {
+    inner: Arc<Inner>,
+    /// every worker ever spawned; drained + joined on shutdown
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// serializes submissions: one job in flight per pool
+    submit: Mutex<()>,
+}
+
+impl Default for Pool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Pool {
+    /// An empty pool: no threads until [`Pool::resize`] (the global
+    /// pool resizes lazily at the first large kernel).
+    pub fn new() -> Self {
+        Pool {
+            inner: Arc::new(Inner {
+                state: Mutex::new(State { epoch: 0, job: None, target: 0, alive: 0 }),
+                work_cv: Condvar::new(),
+                done_cv: Condvar::new(),
+                parks: AtomicU64::new(0),
+                unparks: AtomicU64::new(0),
+            }),
+            handles: Mutex::new(Vec::new()),
+            submit: Mutex::new(()),
+        }
+    }
+
+    /// Live resident workers (diagnostics/tests; the caller thread is
+    /// not counted).
+    pub fn workers(&self) -> usize {
+        self.inner.state.lock().unwrap_or_else(|e| e.into_inner()).alive
+    }
+
+    /// Set the resident worker count. Growing spawns immediately;
+    /// shrinking wakes the parked excess so it retires (workers mid-job
+    /// retire at their next park). Concurrent `resize` calls race on
+    /// last-writer-wins; the global pool only resizes under its submit
+    /// serialization.
+    pub fn resize(&self, workers: usize) {
+        let mut st = self.inner.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.target = workers;
+        if st.alive < workers {
+            let spawn = workers - st.alive;
+            st.alive = workers;
+            drop(st);
+            let mut handles = self.handles.lock().unwrap_or_else(|e| e.into_inner());
+            for _ in 0..spawn {
+                let inner = Arc::clone(&self.inner);
+                handles.push(
+                    std::thread::Builder::new()
+                        .name("misa-pool".to_string())
+                        .spawn(move || worker_loop(inner))
+                        .expect("spawning pool worker"),
+                );
+            }
+        } else if st.alive > workers {
+            drop(st);
+            self.inner.work_cv.notify_all();
+        }
+    }
+
+    /// Retire every worker and join it. Reusable afterwards — the next
+    /// [`Pool::resize`] respawns; a `run` on a shut-down pool executes
+    /// entirely on the caller.
+    pub fn shutdown(&self) {
+        let _g = self.submit.lock().unwrap_or_else(|e| e.into_inner());
+        self.resize(0);
+        {
+            let mut st = self.inner.state.lock().unwrap_or_else(|e| e.into_inner());
+            while st.alive > 0 {
+                st = self.inner.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+        let handles: Vec<_> = {
+            let mut h = self.handles.lock().unwrap_or_else(|e| e.into_inner());
+            h.drain(..).collect()
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+
+    /// Execute `f(i)` for every `i in 0..n_tasks` across up to
+    /// `participants` threads (the caller plus claimed workers). Tasks
+    /// must be independent — any two may run concurrently. Blocks until
+    /// every task has finished; a panicking task is captured and
+    /// re-raised here after the job drains, so the pool survives.
+    /// Nested calls from inside a task run inline.
+    pub fn run<F: Fn(usize) + Sync>(&self, participants: usize, n_tasks: usize, f: F) {
+        if n_tasks == 0 {
+            return;
+        }
+        let participants = participants.clamp(1, n_tasks);
+        if participants <= 1 || IN_POOL.with(|c| c.get()) {
+            for i in 0..n_tasks {
+                f(i);
+            }
+            return;
+        }
+        unsafe fn call_thunk<F: Fn(usize)>(data: *const (), i: usize) {
+            unsafe { (*(data as *const F))(i) }
+        }
+        let job = Arc::new(Job {
+            data: &f as *const F as *const (),
+            call: call_thunk::<F>,
+            ranges: build_ranges(participants, n_tasks),
+            next_slot: AtomicUsize::new(1),
+            remaining: AtomicUsize::new(n_tasks),
+            steals: AtomicU64::new(0),
+            busy_ns: AtomicU64::new(0),
+            parent: crate::obs::span::current(),
+            panic: Mutex::new(None),
+        });
+        let submit = self.submit.lock().unwrap_or_else(|e| e.into_inner());
+        {
+            let mut st = self.inner.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.epoch = st.epoch.wrapping_add(1);
+            st.job = Some(Arc::clone(&job));
+            let wake = (participants - 1).min(st.alive);
+            drop(st);
+            // busy workers that miss these wakeups still catch the new
+            // epoch when they next re-check; the caller drains whatever
+            // nobody claims
+            for _ in 0..wake {
+                self.inner.work_cv.notify_one();
+            }
+        }
+        participate(&self.inner, &job, 0);
+        {
+            let mut st = self.inner.state.lock().unwrap_or_else(|e| e.into_inner());
+            while job.remaining.load(Ordering::Acquire) != 0 {
+                st = self.inner.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            st.job = None;
+        }
+        drop(submit);
+        self.publish_metrics(&job, n_tasks);
+        if let Some(p) = job.panic.lock().unwrap_or_else(|e| e.into_inner()).take() {
+            std::panic::resume_unwind(p);
+        }
+    }
+
+    /// One batched registry update per parallel run — the counters the
+    /// pool exposes (`pool.*`) without ever locking the registry from
+    /// the task hot loop.
+    fn publish_metrics(&self, job: &Job, n_tasks: usize) {
+        use crate::obs::metrics;
+        metrics::counter_add("pool.tasks", n_tasks as u64);
+        let steals = job.steals.load(Ordering::Relaxed);
+        if steals > 0 {
+            metrics::counter_add("pool.steals", steals);
+        }
+        metrics::counter_add("pool.busy_us", job.busy_ns.load(Ordering::Relaxed) / 1_000);
+        let parks = self.inner.parks.swap(0, Ordering::Relaxed);
+        if parks > 0 {
+            metrics::counter_add("pool.parks", parks);
+        }
+        let unparks = self.inner.unparks.swap(0, Ordering::Relaxed);
+        if unparks > 0 {
+            metrics::counter_add("pool.unparks", unparks);
+        }
+        metrics::gauge_set("pool.workers", self.workers() as f64);
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One participant's share of a job: drain the own deque from the
+/// front, then steal back halves from the richest victim until every
+/// range is empty. Accumulates busy time; panics are captured so
+/// `remaining` always reaches zero.
+fn participate(inner: &Inner, job: &Job, slot: usize) {
+    let t0 = Instant::now();
+    let was_in_pool = IN_POOL.with(|c| c.replace(true));
+    loop {
+        let task = pop_front(&job.ranges[slot]).or_else(|| {
+            let (lo, hi) = steal_half(&job.ranges, slot)?;
+            job.steals.fetch_add(1, Ordering::Relaxed);
+            // republish the tail under our own (empty) deque so other
+            // idle participants can steal it back; nobody else ever
+            // writes another participant's slot, so a plain store races
+            // only with thieves, which the CAS pops tolerate
+            job.ranges[slot].store(pack(lo + 1, hi), Ordering::Release);
+            Some(lo as usize)
+        });
+        let Some(i) = task else { break };
+        run_task(inner, job, i);
+    }
+    IN_POOL.with(|c| c.set(was_in_pool));
+    job.busy_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+}
+
+fn run_task(inner: &Inner, job: &Job, i: usize) {
+    {
+        // per-task span, parented to the submitter's span: persistent
+        // workers have no inherited stack, and one worker serves many
+        // differently-parented jobs over its lifetime — spawn-time
+        // capture (the scoped-pool scheme) can no longer work
+        let _sp = crate::obs::span::span_child("pool_task", "pool", job.parent);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+            (job.call)(job.data, i)
+        }));
+        if let Err(p) = r {
+            let mut first = job.panic.lock().unwrap_or_else(|e| e.into_inner());
+            if first.is_none() {
+                *first = Some(p);
+            }
+        }
+    }
+    if job.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+        // last task: wake the submitter. Taking the state lock before
+        // notifying means the wakeup cannot slip between the
+        // submitter's predicate check and its wait.
+        let _st = inner.state.lock().unwrap_or_else(|e| e.into_inner());
+        inner.done_cv.notify_all();
+    }
+}
+
+fn worker_loop(inner: Arc<Inner>) {
+    let mut seen = u64::MAX; // sentinel: any installed job is new to us
+    loop {
+        let job = {
+            let mut st = inner.state.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                if st.alive > st.target {
+                    st.alive -= 1;
+                    drop(st);
+                    inner.done_cv.notify_all();
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    if let Some(job) = &st.job {
+                        break Arc::clone(job);
+                    }
+                    continue;
+                }
+                inner.parks.fetch_add(1, Ordering::Relaxed);
+                st = inner.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+                inner.unparks.fetch_add(1, Ordering::Relaxed);
+            }
+        };
+        // claim a participant slot; late wakers past the last slot sit
+        // this job out (the plan capped its parallelism deliberately)
+        let slot = job.next_slot.fetch_add(1, Ordering::Relaxed);
+        if slot < job.ranges.len() {
+            participate(&inner, &job, slot);
+        }
+    }
+}
+
+fn global() -> &'static Pool {
+    static GLOBAL: OnceLock<Pool> = OnceLock::new();
+    GLOBAL.get_or_init(Pool::new)
+}
+
+/// Fan `f(0..n_tasks)` out over the process-global pool with up to
+/// `width` participants (the caller plus `width - 1` workers). The
+/// pool reconciles its resident worker count to `threads() - 1` here —
+/// lazily, at the first large kernel — so `set_threads` /
+/// `MISA_THREADS` changes take effect at the next dispatch.
+pub(crate) fn run_tasks<F: Fn(usize) + Sync>(width: usize, n_tasks: usize, f: F) {
+    let pool = global();
+    let resident = threads().saturating_sub(1);
+    if pool.workers() != resident {
+        pool.resize(resident);
+    }
+    pool.run(width, n_tasks, f);
+}
+
+/// Raw-pointer wrapper asserting that cross-thread use is externally
+/// synchronized: pool tasks dereference disjoint regions only.
+pub(crate) struct SendPtr<T>(pub *mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// A table of raw pointers (one per task) with the same contract as
+/// [`SendPtr`]: task `i` dereferences entry `i` only.
+pub(crate) struct SendPtrs<T>(pub Vec<*mut T>);
+unsafe impl<T> Send for SendPtrs<T> {}
+unsafe impl<T> Sync for SendPtrs<T> {}
+
+/// Aim for this many tasks per participant so stolen work rebalances
+/// ragged shapes instead of waiting on the slowest static chunk.
+const TASKS_PER_WORKER: usize = 4;
+
+/// ...but keep row-block tasks at least this tall: each GEMM task
+/// repacks its B panel stream, a `k*n` cost amortized over the block's
+/// rows, so blocks below ~16 rows start paying measurable pack tax.
+const MIN_TASK_ROWS: usize = 16;
+
+/// Run `body(row0, out_chunk)` over `out` split into contiguous
+/// row-block tasks (`out.len() == rows * stride`), executed across up
+/// to `workers` pool participants with stealing. Each row belongs to
+/// exactly one task, so the split never reorders an accumulation.
 pub(crate) fn par_out_rows<F>(out: &mut [f32], rows: usize, stride: usize, workers: usize, body: F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
@@ -90,35 +573,22 @@ where
         body(0, out);
         return;
     }
-    let chunk_rows = rows.div_ceil(workers);
-    // Scoped threads don't inherit the caller's span stack: capture
-    // the enclosing span here, hand it to each worker span explicitly
-    // so the trace tree stays connected across the fan-out.
-    let parent = crate::obs::span::current();
-    std::thread::scope(|s| {
-        let body = &body;
-        let mut rest = out;
-        let mut row0 = 0usize;
-        let mut first: Option<(usize, &mut [f32])> = None;
-        while row0 < rows {
-            let take = chunk_rows.min(rows - row0);
-            let tail = std::mem::take(&mut rest);
-            let (chunk, remainder) = tail.split_at_mut(take * stride);
-            rest = remainder;
-            if first.is_none() {
-                // deferred: the caller's own share, run after spawning
-                first = Some((row0, chunk));
-            } else {
-                s.spawn(move || {
-                    let _sp = crate::obs::span::span_child("gemm_worker", "tensor", parent);
-                    body(row0, chunk)
-                });
-            }
-            row0 += take;
-        }
-        if let Some((r0, chunk)) = first {
-            body(r0, chunk);
-        }
+    let chunk = rows
+        .div_ceil(workers * TASKS_PER_WORKER)
+        .max(MIN_TASK_ROWS)
+        .min(rows);
+    let n_tasks = rows.div_ceil(chunk);
+    let base = SendPtr(out.as_mut_ptr());
+    run_tasks(workers.min(n_tasks), n_tasks, |t| {
+        let row0 = t * chunk;
+        let take = chunk.min(rows - row0);
+        // SAFETY: task `t` owns rows [row0, row0 + take) — the blocks
+        // are disjoint and cover `out` exactly — and `out` outlives
+        // the dispatch because the submitter blocks until every task
+        // completes.
+        let chunk_out =
+            unsafe { std::slice::from_raw_parts_mut(base.0.add(row0 * stride), take * stride) };
+        body(row0, chunk_out);
     });
 }
 
@@ -136,14 +606,57 @@ mod tests {
         assert_eq!(plan_workers_at(4, 1024, MIN_MACS_PER_WORKER / 2), 1);
         // width 1 always serial
         assert_eq!(plan_workers_at(1, 1024, 64 * MIN_MACS_PER_WORKER), 1);
+        // the retuned floor: a 4x256x128 projection (131 Ki MACs) was
+        // serial under the scoped pool's 128 Ki-per-worker floor and
+        // fans out at full width now that spawn cost is gone
+        assert_eq!(MIN_MACS_PER_WORKER, 32 * 1024);
+        assert_eq!(plan_workers_at(4, 4, 4 * 256 * 128), 4);
         // the resolved global knob is always at least 1
         assert!(threads() >= 1);
     }
 
     #[test]
+    fn ranges_pack_and_partition_exactly() {
+        assert_eq!(unpack(pack(3, 17)), (3, 17));
+        for (p, n) in [(1usize, 5usize), (3, 10), (4, 3), (7, 7), (2, 1)] {
+            let ranges = build_ranges(p, n);
+            assert_eq!(ranges.len(), p);
+            let mut seen = vec![false; n];
+            let mut prev_hi = 0u32;
+            for r in &ranges {
+                let (lo, hi) = unpack(r.load(Ordering::Relaxed));
+                assert_eq!(lo, prev_hi, "ranges must be contiguous");
+                for i in lo..hi {
+                    assert!(!seen[i as usize]);
+                    seen[i as usize] = true;
+                }
+                prev_hi = hi;
+            }
+            assert_eq!(prev_hi as usize, n);
+            assert!(seen.iter().all(|&s| s));
+        }
+    }
+
+    #[test]
+    fn pop_and_steal_claim_each_task_once() {
+        let ranges = build_ranges(2, 10);
+        // owner pops the front of its own deque
+        assert_eq!(pop_front(&ranges[0]), Some(0));
+        assert_eq!(pop_front(&ranges[0]), Some(1));
+        // thief takes the back half (rounded up) of the richest victim
+        let (lo, hi) = steal_half(&ranges, 1).unwrap();
+        assert_eq!((lo, hi), (3, 5), "victim kept [2,3), thief got [3,5)");
+        assert_eq!(pop_front(&ranges[0]), Some(2));
+        assert_eq!(pop_front(&ranges[0]), None);
+        // draining everything leaves nothing to steal
+        while pop_front(&ranges[1]).is_some() {}
+        assert!(steal_half(&ranges, 0).is_none());
+    }
+
+    #[test]
     fn partition_covers_every_row_once() {
         use std::sync::atomic::{AtomicUsize, Ordering};
-        let rows = 37;
+        let rows = 67;
         let stride = 3;
         let mut out = vec![0.0f32; rows * stride];
         let calls = AtomicUsize::new(0);
@@ -155,9 +668,41 @@ mod tests {
                 }
             }
         });
-        assert_eq!(calls.load(Ordering::Relaxed), 4);
+        // row-block granularity: ceil(67 / max(ceil(67/16), 16)) tasks
+        assert_eq!(calls.load(Ordering::Relaxed), rows.div_ceil(MIN_TASK_ROWS));
         for (r, row) in out.chunks(stride).enumerate() {
             assert!(row.iter().all(|&x| x == r as f32), "row {r} misassigned: {row:?}");
         }
+    }
+
+    #[test]
+    fn private_pool_runs_resizes_and_shuts_down() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let pool = Pool::new();
+        // no workers yet: the caller drains everything
+        let hits = AtomicUsize::new(0);
+        pool.run(4, 10, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
+        assert_eq!(pool.workers(), 0);
+        pool.resize(3);
+        assert_eq!(pool.workers(), 3);
+        let counts: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(4, 100, |i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+        pool.shutdown();
+        assert_eq!(pool.workers(), 0);
+        // still usable after shutdown (inline on the caller)
+        let hits = AtomicUsize::new(0);
+        pool.run(4, 7, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 7);
+        pool.resize(2);
+        pool.run(2, 5, |_| {});
+        // Drop joins the respawned workers
     }
 }

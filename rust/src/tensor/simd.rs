@@ -1,0 +1,199 @@
+//! Explicit-SIMD inner microkernel for the blocked GEMM cores.
+//!
+//! One primitive does all the work: [`axpy`] — `o[j] += a * b[j]` over
+//! a packed panel row. Every core's inner loop is axpy-shaped (the NT
+//! core packs a transposed panel to get there), so vectorizing this
+//! single kernel covers the whole tensor layer.
+//!
+//! ## Why SIMD here is bit-exact
+//!
+//! The determinism contract says each output element accumulates over
+//! its reduction dimension in strictly ascending index order. [`axpy`]
+//! vectorizes across **independent output columns** `j` — lanes never
+//! share an accumulator, so no reduction is reordered. Each lane
+//! performs exactly the scalar operation sequence: one IEEE-754
+//! rounding for the multiply (`_mm256_mul_ps`), one for the add
+//! (`_mm256_add_ps`). FMA is deliberately **not** used — a fused
+//! multiply-add rounds once instead of twice and would diverge from
+//! the scalar path in the last bit — and Rust never auto-contracts
+//! `a * b + c` into FMA, so the scalar reference is stable too. SSE/AVX
+//! have no flush-to-zero or denormals-are-zero behavior unless MXCSR is
+//! reconfigured, which this codebase never does. Hence
+//! `SIMD ≡ scalar ≡ naive` **bitwise**, at every thread width —
+//! `tests/pool.rs` pins it.
+//!
+//! ## Dispatch
+//!
+//! AVX2 is selected at runtime via `is_x86_feature_detected!` (so
+//! the binary still runs on pre-AVX2 hardware) and can be forced off
+//! with `MISA_SIMD=0` or [`set_simd`]`(Some(false))` — CI runs the
+//! full suite forced-scalar to keep the fallback honest. Non-x86_64
+//! builds compile to the scalar path only.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// 0 = auto (env + CPU detection), 1 = forced scalar, 2 = allow SIMD
+/// (still subject to CPU detection).
+static MODE: AtomicU8 = AtomicU8::new(0);
+
+/// `MISA_SIMD`, read once: anything except `"0"` (or unset) allows SIMD.
+fn env_allows() -> bool {
+    static ENV: OnceLock<bool> = OnceLock::new();
+    *ENV.get_or_init(|| std::env::var("MISA_SIMD").map_or(true, |v| v.trim() != "0"))
+}
+
+#[cfg(target_arch = "x86_64")]
+fn cpu_has_avx2() -> bool {
+    static CPU: OnceLock<bool> = OnceLock::new();
+    *CPU.get_or_init(|| std::arch::is_x86_feature_detected!("avx2"))
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn cpu_has_avx2() -> bool {
+    false
+}
+
+/// Whether the vector microkernel is active (mode, env, and CPU all
+/// permitting). Purely informational — results are bit-identical
+/// either way.
+pub fn simd_enabled() -> bool {
+    let allowed = match MODE.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => env_allows(),
+    };
+    allowed && cpu_has_avx2()
+}
+
+/// Override the SIMD policy: `Some(false)` forces the scalar
+/// microkernel, `Some(true)` allows SIMD (still subject to CPU
+/// feature detection), `None` restores the `MISA_SIMD` environment
+/// default.
+pub fn set_simd(allow: Option<bool>) {
+    let mode = match allow {
+        Some(false) => 1,
+        Some(true) => 2,
+        None => 0,
+    };
+    MODE.store(mode, Ordering::Relaxed);
+}
+
+/// `"avx2"` or `"scalar"` — the active microkernel, for bench records
+/// and log lines.
+pub fn simd_label() -> &'static str {
+    if simd_enabled() {
+        "avx2"
+    } else {
+        "scalar"
+    }
+}
+
+/// `o[j] += a * b[j]` for all `j` (separate mul then add — see the
+/// module docs for why this is bitwise-stable). Panics if lengths
+/// differ only in debug; the scalar path's `zip` truncates, so callers
+/// must pass equal lengths.
+#[inline]
+pub fn axpy(a: f32, b: &[f32], o: &mut [f32]) {
+    debug_assert_eq!(b.len(), o.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd_enabled() {
+        // SAFETY: simd_enabled() returns true only after
+        // is_x86_feature_detected!("avx2") confirmed support.
+        unsafe { axpy_avx2(a, b, o) };
+        return;
+    }
+    axpy_scalar(a, b, o);
+}
+
+#[inline]
+fn axpy_scalar(a: f32, b: &[f32], o: &mut [f32]) {
+    for (ov, &bv) in o.iter_mut().zip(b) {
+        *ov += a * bv;
+    }
+}
+
+/// AVX2 axpy: 8 independent output columns per step, `mul_ps` then
+/// `add_ps` (never FMA), scalar remainder. Unaligned loads/stores —
+/// panel rows have arbitrary alignment.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(a: f32, b: &[f32], o: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = b.len().min(o.len());
+    let bp = b.as_ptr();
+    let op = o.as_mut_ptr();
+    // SAFETY (all blocks): j + 8 <= n, so every 8-lane load/store is
+    // in bounds for both slices; overlap is impossible (&/&mut).
+    let av = unsafe { _mm256_set1_ps(a) };
+    let mut j = 0usize;
+    while j + 8 <= n {
+        unsafe {
+            let bv = _mm256_loadu_ps(bp.add(j));
+            let ov = _mm256_loadu_ps(op.add(j));
+            let prod = _mm256_mul_ps(av, bv); // one rounding, like scalar
+            let sum = _mm256_add_ps(ov, prod); // one rounding, like scalar
+            _mm256_storeu_ps(op.add(j), sum);
+        }
+        j += 8;
+    }
+    while j < n {
+        unsafe {
+            *op.add(j) += a * *bp.add(j);
+        }
+        j += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny deterministic PRNG (xorshift) so the parity check sweeps
+    /// awkward values without a rand dependency.
+    fn fill(seed: &mut u64, v: &mut [f32]) {
+        for x in v.iter_mut() {
+            *seed ^= *seed << 13;
+            *seed ^= *seed >> 7;
+            *seed ^= *seed << 17;
+            // mix in zeros and subnormal-adjacent magnitudes
+            let u = (*seed >> 40) as u32;
+            *x = if u % 11 == 0 {
+                0.0
+            } else {
+                (u as f32 / 65536.0 - 128.0) * 1.0e-3
+            };
+        }
+    }
+
+    #[test]
+    fn avx2_axpy_matches_scalar_bitwise_at_every_length() {
+        if !cpu_has_avx2() {
+            return; // nothing to compare on this host
+        }
+        let mut seed = 0x9e3779b97f4a7c15u64;
+        for len in 0..40 {
+            let mut b = vec![0.0f32; len];
+            let mut o1 = vec![0.0f32; len];
+            fill(&mut seed, &mut b);
+            fill(&mut seed, &mut o1);
+            let mut o2 = o1.clone();
+            let a = 1.7182818f32;
+            axpy_scalar(a, &b, &mut o1);
+            unsafe { axpy_avx2(a, &b, &mut o2) };
+            for (x, y) in o1.iter().zip(&o2) {
+                assert_eq!(x.to_bits(), y.to_bits(), "len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn set_simd_overrides_and_restores() {
+        set_simd(Some(false));
+        assert!(!simd_enabled());
+        assert_eq!(simd_label(), "scalar");
+        set_simd(Some(true));
+        assert_eq!(simd_enabled(), cpu_has_avx2());
+        set_simd(None); // back to the env default for other tests
+    }
+}

@@ -1,8 +1,8 @@
 //! Observability integration tests: the histogram against a sorted-vec
-//! oracle, span nesting across the scoped GEMM worker pool, timeline
-//! ordering invariants through a real scheduler run, exporter output,
-//! and — the headline claim — bit-parity of every decode path with
-//! tracing fully enabled.
+//! oracle, span nesting across the persistent GEMM worker pool,
+//! timeline ordering invariants through a real scheduler run, exporter
+//! output, and — the headline claim — bit-parity of every decode path
+//! with tracing fully enabled.
 
 use std::sync::Mutex;
 
@@ -67,16 +67,21 @@ fn histogram_percentiles_track_a_sorted_vec_oracle() {
     assert!((h.max() - xs[xs.len() - 1]).abs() < 1e-12);
 }
 
-/// A 4-way GEMM dispatch records one `gemm_nn` root plus three
-/// `gemm_worker` children whose parent pointer survives the scoped
-/// thread hop (thread-locals do not cross `thread::scope`).
+/// A 4-way GEMM dispatch records one `gemm_nn` root plus one
+/// `pool_task` child per row-block task, every one re-parented onto
+/// the dispatch span — persistent pool workers have no inherited
+/// thread-local stack, and which participant (a worker or the caller
+/// itself, via stealing) executes a given task is scheduling-dependent,
+/// so the per-task parent capture is what keeps the tree connected.
 #[test]
-fn gemm_worker_spans_attach_to_the_dispatch_span() {
+fn pool_task_spans_attach_to_the_dispatch_span() {
     let _g = lock();
     span::enable_tracing();
     let _ = span::take_events(); // flush whatever ran before
+    metrics::reset();
     misa::tensor::set_threads(4);
-    // 256×64×64: 1M MACs clears the 128k-per-worker floor at width 4
+    // 256×64×64: 1M MACs clears the 32k-per-worker floor at width 4;
+    // 256 rows at the 16-row task granularity → 16 row-block tasks
     let (m, k, n) = (256usize, 64usize, 64usize);
     let a = vec![0.5f32; m * k];
     let b = vec![0.25f32; k * n];
@@ -90,19 +95,21 @@ fn gemm_worker_spans_attach_to_the_dispatch_span() {
     assert_eq!(roots.len(), 1, "one dispatch span: {evs:?}");
     assert_eq!(roots[0].depth, 0);
     assert_eq!(roots[0].cat, "tensor");
-    let workers: Vec<_> = evs.iter().filter(|e| e.name == "gemm_worker").collect();
-    assert_eq!(workers.len(), 3, "width 4 spawns 3 extra workers: {evs:?}");
-    for w in &workers {
-        assert_eq!(w.parent, Some("gemm_nn"), "worker lost its parent");
-        assert_eq!(w.depth, 1);
-        assert_ne!(w.tid, roots[0].tid, "workers run off the caller thread");
-        assert!(w.start_us >= roots[0].start_us);
-        assert!(w.start_us + w.dur_us <= roots[0].start_us + roots[0].dur_us + 1);
+    let tasks: Vec<_> = evs.iter().filter(|e| e.name == "pool_task").collect();
+    assert_eq!(tasks.len(), 16, "256 rows / 16-row blocks: {evs:?}");
+    for t in &tasks {
+        assert_eq!(t.parent, Some("gemm_nn"), "task lost its parent");
+        assert_eq!(t.depth, 1);
+        assert_eq!(t.cat, "pool");
+        assert!(t.start_us >= roots[0].start_us);
+        assert!(t.start_us + t.dur_us <= roots[0].start_us + roots[0].dur_us + 1);
     }
+    // the pool's batched metrics saw the dispatch too
+    assert_eq!(metrics::counter("pool.tasks"), 16);
     // structural sanity of the Chrome render (CI validates via python)
     let json = span::render_chrome_trace(&evs, 0);
     assert!(json.contains("\"traceEvents\""), "{json}");
-    assert!(json.contains("\"gemm_worker\""), "{json}");
+    assert!(json.contains("\"pool_task\""), "{json}");
     assert!(json.contains("\"ph\":\"X\""), "{json}");
 }
 

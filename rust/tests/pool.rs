@@ -1,0 +1,279 @@
+//! Worker-pool and SIMD-microkernel integration tests: bitwise parity
+//! of the blocked cores against naive ascending-order oracles across
+//! SIMD on/off × thread widths 1/2/8 × ragged shapes, persistent-pool
+//! lifecycle stress (resize/shutdown/re-entrancy/panic), pool metrics,
+//! and end-to-end decode parity with the microkernel forced scalar.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use misa::obs::metrics;
+use misa::runtime::{Engine, Session};
+use misa::serve::{generate, GenerateCfg, SamplerCfg};
+use misa::tensor::par::Pool;
+use misa::tensor::{gemm_nn, gemm_nt, gemm_tn_acc, set_simd, set_threads, Mat};
+use misa::util::Rng;
+
+/// The thread knob, SIMD mode, and metrics registry are process-global;
+/// serialize every test so cargo's parallel harness cannot interleave
+/// their state.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------------------
+// Naive oracles in the committed accumulation order: each output
+// element reduces in strictly ascending reduction index, one f32
+// rounding per mul and per add. The blocked + packed + SIMD cores
+// promise to be bit-identical to exactly this.
+// ---------------------------------------------------------------------------
+
+fn naive_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += a[i * k + kk] * b[kk * n + j];
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+fn naive_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * k];
+    for i in 0..m {
+        for j in 0..k {
+            let mut acc = 0.0f32;
+            for t in 0..n {
+                acc += a[i * n + t] * b[j * n + t];
+            }
+            out[i * k + j] = acc;
+        }
+    }
+    out
+}
+
+fn naive_tn_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    for kk in 0..k {
+        for j in 0..n {
+            let mut acc = out[kk * n + j];
+            for i in 0..m {
+                acc += a[i * k + kk] * b[i * n + j];
+            }
+            out[kk * n + j] = acc;
+        }
+    }
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (x, y)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: element {i} differs ({x} vs {y})"
+        );
+    }
+}
+
+/// The headline determinism claim of the SIMD microkernel: every core
+/// is bit-identical to the naive ascending-order oracle with SIMD on
+/// and off, at thread widths 1, 2, and 8 (8 oversubscribes every CI
+/// runner — stealing and task order shuffle, results must not),
+/// across shapes ragged against the KC/NC tiles and the 16-row task
+/// granularity.
+#[test]
+fn cores_match_naive_bitwise_across_simd_and_thread_widths() {
+    let _g = lock();
+    let mut rng = Rng::new(83);
+    for &(m, k, n) in
+        &[(65, 63, 129), (1, 130, 7), (67, 1, 131), (3, 5, 1), (70, 129, 65), (97, 161, 133)]
+    {
+        let a = Mat::randn(m, k, 1.0, &mut rng);
+        let b = Mat::randn(k, n, 1.0, &mut rng);
+        let bt = b.transpose(); // [n, k]
+        let c = Mat::randn(m, n, 1.0, &mut rng);
+        let want_nn = naive_nn(&a.data, &b.data, m, k, n);
+        let want_nt = naive_nt(&a.data, &bt.data, m, k, n);
+        let mut want_tn = vec![0.25f32; k * n];
+        naive_tn_acc(&a.data, &c.data, m, k, n, &mut want_tn);
+        for threads in [1usize, 2, 8] {
+            for simd in [false, true] {
+                set_threads(threads);
+                set_simd(Some(simd));
+                let label = format!("{m}x{k}x{n} t={threads} simd={simd}");
+                let nn = gemm_nn(&a.data, &b.data, m, k, n);
+                assert_bits_eq(&nn, &want_nn, &format!("gemm_nn {label}"));
+                let nt = gemm_nt(&a.data, &bt.data, m, k, n);
+                assert_bits_eq(&nt, &want_nt, &format!("gemm_nt {label}"));
+                let mut tn = vec![0.25f32; k * n];
+                gemm_tn_acc(&a.data, &c.data, m, k, n, &mut tn);
+                assert_bits_eq(&tn, &want_tn, &format!("gemm_tn_acc {label}"));
+            }
+        }
+        set_threads(0);
+        set_simd(None);
+    }
+}
+
+/// Pool lifecycle stress on a private instance: grow, shrink, shutdown,
+/// reuse after shutdown, and a race loop of dispatches — every task
+/// executes exactly once no matter how the participants interleave.
+#[test]
+fn pool_stress_resize_shutdown_and_exactly_once_execution() {
+    let _g = lock();
+    let pool = Pool::new();
+    for round in 0..200usize {
+        // cycle the resident width so grow/shrink races with dispatch
+        match round % 10 {
+            0 => pool.resize(3),
+            3 => pool.resize(1),
+            6 => pool.resize(4),
+            9 => pool.resize(0),
+            _ => {}
+        }
+        let n_tasks = 1 + round % 37;
+        let counts: Vec<AtomicUsize> = (0..n_tasks).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(4, n_tasks, |i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, c) in counts.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "round {round}: task {i}");
+        }
+    }
+    pool.shutdown();
+    assert_eq!(pool.workers(), 0);
+    // reusable after shutdown: inline on the caller…
+    let hits = AtomicUsize::new(0);
+    pool.run(4, 9, |_| {
+        hits.fetch_add(1, Ordering::Relaxed);
+    });
+    assert_eq!(hits.load(Ordering::Relaxed), 9);
+    // …and with workers again after a respawn
+    pool.resize(2);
+    assert_eq!(pool.workers(), 2);
+    let hits = AtomicUsize::new(0);
+    pool.run(3, 50, |_| {
+        hits.fetch_add(1, Ordering::Relaxed);
+    });
+    assert_eq!(hits.load(Ordering::Relaxed), 50);
+    pool.shutdown();
+}
+
+/// Re-entrancy: a task may call back into `Pool::run` (directly, or
+/// transitively through a parallel GEMM, which shares the process
+/// global pool) — nested dispatches execute inline on the task's
+/// thread instead of deadlocking on the single in-flight job slot.
+#[test]
+fn nested_dispatch_from_inside_a_task_runs_inline() {
+    let _g = lock();
+    let pool = Pool::new();
+    pool.resize(2);
+    let inner_hits = AtomicUsize::new(0);
+    pool.run(3, 6, |_| {
+        pool.run(3, 5, |_| {
+            inner_hits.fetch_add(1, Ordering::Relaxed);
+        });
+    });
+    assert_eq!(inner_hits.load(Ordering::Relaxed), 30);
+    // a parallel-sized GEMM inside a pool task must also complete (it
+    // re-enters through the global pool's dispatch path)
+    set_threads(4);
+    let (m, k, n) = (97, 64, 64);
+    let a = vec![0.5f32; m * k];
+    let b = vec![0.25f32; k * n];
+    let want = gemm_nn(&a, &b, m, k, n); // computed on the caller
+    let done = AtomicUsize::new(0);
+    pool.run(2, 3, |_| {
+        let got = gemm_nn(&a, &b, m, k, n);
+        assert_bits_eq(&got, &want, "gemm inside pool task");
+        done.fetch_add(1, Ordering::Relaxed);
+    });
+    set_threads(0);
+    assert_eq!(done.load(Ordering::Relaxed), 3);
+    pool.shutdown();
+}
+
+/// A panicking task must not hang the dispatch or poison the pool: the
+/// panic resurfaces on the submitting thread after the job drains, and
+/// the pool keeps working afterwards.
+#[test]
+fn task_panic_propagates_to_the_submitter_and_pool_survives() {
+    let _g = lock();
+    let pool = Pool::new();
+    pool.resize(2);
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pool.run(3, 8, |i| {
+            if i == 5 {
+                panic!("task 5 exploded");
+            }
+        });
+    }));
+    assert!(r.is_err(), "task panic must propagate out of run()");
+    let hits = AtomicUsize::new(0);
+    pool.run(3, 12, |_| {
+        hits.fetch_add(1, Ordering::Relaxed);
+    });
+    assert_eq!(hits.load(Ordering::Relaxed), 12, "pool unusable after a task panic");
+    pool.shutdown();
+}
+
+/// The pool's batched observability: task and busy-time counters
+/// accumulate in the global registry, and the worker gauge tracks the
+/// resident count.
+#[test]
+fn pool_metrics_land_in_the_registry() {
+    let _g = lock();
+    metrics::reset();
+    let pool = Pool::new();
+    pool.resize(2);
+    pool.run(3, 64, |i| {
+        std::hint::black_box(i);
+    });
+    assert_eq!(metrics::counter("pool.tasks"), 64);
+    assert_eq!(metrics::gauge("pool.workers"), Some(2.0));
+    pool.run(3, 36, |i| {
+        std::hint::black_box(i);
+    });
+    assert_eq!(metrics::counter("pool.tasks"), 100, "counters accumulate across runs");
+    pool.shutdown();
+}
+
+/// End-to-end: decode is bit-identical with the SIMD microkernel on
+/// and off, serial and fanned out — the serving stack may not observe
+/// which inner kernel or how many threads did the math.
+#[test]
+fn generation_is_bit_identical_with_simd_on_and_off() {
+    let _g = lock();
+    let mut eng = Engine::host();
+    let sess = Session::create(&mut eng, "tiny", 3).unwrap();
+    let prompt = vec![1i32, 30, 31, 32, 30, 31, 32, 30, 31];
+    let cfg = GenerateCfg {
+        max_new: 12,
+        sampler: SamplerCfg { temperature: 0.8, top_k: 16, top_p: 0.9 },
+        seed: 13,
+        eos: None,
+        spec: None,
+    };
+    set_simd(Some(false));
+    set_threads(1);
+    let base = generate(&sess, &prompt, &cfg).unwrap();
+    for threads in [1usize, 4] {
+        for simd in [false, true] {
+            set_threads(threads);
+            set_simd(Some(simd));
+            let got = generate(&sess, &prompt, &cfg).unwrap();
+            assert_eq!(
+                got.tokens, base.tokens,
+                "decode diverged at threads={threads} simd={simd}"
+            );
+        }
+    }
+    set_threads(0);
+    set_simd(None);
+}
