@@ -1,0 +1,347 @@
+//! Differential fuzzing of [`KvCache`] against a dense reference model.
+//!
+//! The reference ([`RefKv`]) stores every appended K/V row by absolute
+//! position in plain `Vec`s — no rings, no chunks, no sharing — and
+//! mirrors the real cache's legality rules as predicates. The fuzzer
+//! drives a pool of (real, reference) pairs through random append /
+//! fork / truncate / copy / reset / drop streams and checks after
+//! **every** op:
+//!
+//! - `Result` parity: an op the reference deems illegal must fail on
+//!   the real cache, and vice versa (no silent clamping either way);
+//! - `len` / `capacity` agreement on every live pair;
+//! - bitwise row equality (`f32::to_bits`) over the live attention
+//!   window — the positions the ring contract guarantees resident:
+//!   `(len + 1).saturating_sub(capacity) .. len`, what the *next*
+//!   query would attend over;
+//! - COW residency: [`kv_resident_bytes`] over the whole pool never
+//!   exceeds the sum of per-cache physical ring bytes, never
+//!   undercounts a single cache, and collapses to exactly one ring's
+//!   physical bytes when the pool is dropped to one cache.
+
+use anyhow::{ensure, Result};
+
+use crate::modelspec::{builtin_configs, spec_for, ModelSpec};
+use crate::runtime::backend::CHUNK_POSITIONS;
+use crate::runtime::{kv_resident_bytes, KvCache};
+use crate::util::Rng;
+
+use super::{FuzzCfg, FuzzStats};
+
+/// Upper bound on live (real, reference) pairs; ops that would grow the
+/// pool past this mutate an existing pair instead.
+const MAX_POOL: usize = 8;
+
+/// Dense mirror of one cache: rows by absolute position, per layer.
+struct RefKv {
+    capacity: usize,
+    len: usize,
+    /// `rows[layer][pos] = (k_row, v_row)`; `rows[layer].len()` can
+    /// exceed `len` after a truncate (stale tail rows are simply
+    /// overwritten on re-append, like ring slots are).
+    rows: Vec<Vec<(Vec<f32>, Vec<f32>)>>,
+}
+
+impl RefKv {
+    fn new(n_layers: usize, capacity: usize) -> RefKv {
+        RefKv { capacity, len: 0, rows: vec![Vec::new(); n_layers] }
+    }
+
+    fn set_row(&mut self, layer: usize, pos: usize, krow: Vec<f32>, vrow: Vec<f32>) {
+        let rows = &mut self.rows[layer];
+        if pos < rows.len() {
+            rows[pos] = (krow, vrow);
+        } else {
+            assert_eq!(pos, rows.len(), "reference rows must stay dense");
+            rows.push((krow, vrow));
+        }
+    }
+
+    /// Mirror of [`KvCache::fork_from`]'s legality.
+    fn fork_legal(&self, len: usize) -> bool {
+        len <= self.len && self.len <= (len + 1).saturating_sub(self.capacity) + self.capacity
+    }
+
+    /// Mirror of [`KvCache::truncate`]'s legality.
+    fn truncate_legal(&self, len: usize) -> bool {
+        len <= self.len && (self.len <= self.capacity || self.len <= len + 1)
+    }
+
+    /// Mirror of [`KvCache::copy_prefix`]'s legality (positive target
+    /// capacity is guaranteed by the op generator).
+    fn copy_legal(&self, len: usize, capacity: usize) -> bool {
+        len <= self.len && len <= capacity && self.len <= self.capacity
+    }
+
+    fn fork(&self, len: usize) -> RefKv {
+        RefKv {
+            capacity: self.capacity,
+            len,
+            rows: self.rows.clone(),
+        }
+    }
+
+    fn copy(&self, len: usize, capacity: usize) -> RefKv {
+        RefKv {
+            capacity,
+            len,
+            rows: self.rows.iter().map(|layer| layer[..len].to_vec()).collect(),
+        }
+    }
+}
+
+/// Physical ring bytes of one cache: chunk-granular, both K and V,
+/// all layers — what its chunks occupy when it shares nothing.
+fn physical_bytes(spec: &ModelSpec, capacity: usize) -> u64 {
+    let mc = &spec.config;
+    let chunk_floats = CHUNK_POSITIONS * mc.kv_dim();
+    (2 * mc.n_layers * capacity.div_ceil(CHUNK_POSITIONS) * chunk_floats
+        * std::mem::size_of::<f32>()) as u64
+}
+
+/// Check one (real, reference) pair: shape agreement plus bitwise row
+/// equality over the live attention window. Returns the number of
+/// checks performed.
+fn check_pair(real: &KvCache, model: &RefKv) -> Result<u64> {
+    ensure!(
+        real.len() == model.len && real.capacity() == model.capacity,
+        "shape drift: real (len {}, cap {}) vs reference (len {}, cap {})",
+        real.len(),
+        real.capacity(),
+        model.len,
+        model.capacity
+    );
+    let mut checks = 1u64;
+    let lo = (model.len + 1).saturating_sub(model.capacity).min(model.len);
+    for layer in 0..model.rows.len() {
+        for pos in lo..model.len {
+            let slot = pos % model.capacity;
+            let (ref_k, ref_v) = &model.rows[layer][pos];
+            let (real_k, real_v) = (real.k_row(layer, slot), real.v_row(layer, slot));
+            let k_eq = real_k.iter().zip(ref_k).all(|(a, b)| a.to_bits() == b.to_bits());
+            let v_eq = real_v.iter().zip(ref_v).all(|(a, b)| a.to_bits() == b.to_bits());
+            ensure!(
+                k_eq && v_eq,
+                "row mismatch at layer {layer} pos {pos} (slot {slot}, len {}, cap {})",
+                model.len,
+                model.capacity
+            );
+            checks += 1;
+        }
+    }
+    Ok(checks)
+}
+
+/// Run the KvCache differential fuzz target. Clean runs return stats;
+/// callers wanting the replay-command contract wrap this in
+/// [`super::run_target`].
+pub fn fuzz_kvcache(cfg: FuzzCfg) -> Result<FuzzStats> {
+    let spec = spec_for(builtin_configs().remove(0)); // tiny: 2 layers, kv_dim 32
+    let n_layers = spec.config.n_layers;
+    let kv_dim = spec.config.kv_dim();
+    // domain-separate per target so `--target all` never replays the
+    // same stream three times
+    let mut rng = Rng::new(cfg.seed).fork(0x6B76); // "kv"
+    let mut stats = FuzzStats::default();
+
+    let cap0 = rng.range(4, 40);
+    let mut pool: Vec<(KvCache, RefKv)> =
+        vec![(KvCache::new(&spec, cap0)?, RefKv::new(n_layers, cap0))];
+
+    for _ in 0..cfg.ops {
+        stats.ops += 1;
+        let i = rng.below(pool.len());
+        match rng.below(100) {
+            // append 1..=5 positions of fresh random rows
+            0..=39 => {
+                let t = rng.range(1, 6);
+                let (real, model) = &mut pool[i];
+                for _ in 0..t {
+                    let pos = model.len;
+                    for layer in 0..n_layers {
+                        let mut krow = vec![0.0f32; kv_dim];
+                        let mut vrow = vec![0.0f32; kv_dim];
+                        rng.fill_normal(&mut krow, 1.0);
+                        rng.fill_normal(&mut vrow, 1.0);
+                        real.write_kv(layer, pos, &krow, &vrow);
+                        model.set_row(layer, pos, krow, vrow);
+                    }
+                    real.advance(1);
+                    model.len += 1;
+                }
+                stats.note("append", 1);
+            }
+            // fork at a random length, legal or not
+            40..=54 => {
+                let child = {
+                    let (real, model) = &pool[i];
+                    let len = rng.below(model.len + 3);
+                    let got = KvCache::fork_from(real, len);
+                    let legal = model.fork_legal(len);
+                    ensure!(
+                        got.is_ok() == legal,
+                        "fork_from({len}) on (len {}, cap {}): real says {:?}, \
+                         reference says {legal}",
+                        model.len,
+                        model.capacity,
+                        got.is_ok()
+                    );
+                    got.ok().map(|c| (c, model.fork(len)))
+                };
+                if let Some(pair) = child {
+                    if pool.len() < MAX_POOL {
+                        pool.push(pair);
+                    } else {
+                        pool[i] = pair;
+                    }
+                    stats.note("fork", 1);
+                } else {
+                    stats.note("fork_rejected", 1);
+                }
+            }
+            // truncate to a random length, legal or not
+            55..=69 => {
+                let (real, model) = &mut pool[i];
+                let len = rng.below(model.len + 3);
+                let got = real.truncate(len);
+                let legal = model.truncate_legal(len);
+                ensure!(
+                    got.is_ok() == legal,
+                    "truncate({len}) on (len {}, cap {}): real says {:?}, reference says {legal}",
+                    model.len,
+                    model.capacity,
+                    got.is_ok()
+                );
+                if got.is_ok() {
+                    model.len = len;
+                    stats.note("truncate", 1);
+                } else {
+                    stats.note("truncate_rejected", 1);
+                }
+            }
+            // copy_prefix into a fresh ring of a random capacity
+            70..=79 => {
+                let child = {
+                    let (real, model) = &pool[i];
+                    let len = rng.below(model.len + 2);
+                    let new_cap = rng.range(1, 48);
+                    let got = KvCache::copy_prefix(real, len, new_cap);
+                    let legal = model.copy_legal(len, new_cap);
+                    ensure!(
+                        got.is_ok() == legal,
+                        "copy_prefix({len}, {new_cap}) on (len {}, cap {}): real says {:?}, \
+                         reference says {legal}",
+                        model.len,
+                        model.capacity,
+                        got.is_ok()
+                    );
+                    got.ok().map(|c| (c, model.copy(len, new_cap)))
+                };
+                if let Some(pair) = child {
+                    if pool.len() < MAX_POOL {
+                        pool.push(pair);
+                    } else {
+                        pool[i] = pair;
+                    }
+                    stats.note("copy", 1);
+                } else {
+                    stats.note("copy_rejected", 1);
+                }
+            }
+            // reset in place
+            80..=84 => {
+                let (real, model) = &mut pool[i];
+                real.reset();
+                model.len = 0;
+                model.rows.iter_mut().for_each(Vec::clear);
+                stats.note("reset", 1);
+            }
+            // drop a pool member (the last COW sharer releasing chunks)
+            85..=91 => {
+                if pool.len() > 1 {
+                    pool.swap_remove(i);
+                    stats.note("drop", 1);
+                }
+            }
+            // fresh cache at a fresh capacity
+            _ => {
+                let cap = rng.range(4, 40);
+                let pair = (KvCache::new(&spec, cap)?, RefKv::new(n_layers, cap));
+                if pool.len() < MAX_POOL {
+                    pool.push(pair);
+                } else {
+                    pool[i] = pair;
+                }
+                stats.note("fresh", 1);
+            }
+        }
+
+        // invariants after every op
+        for (real, model) in &pool {
+            stats.checks += check_pair(real, model)?;
+        }
+        let resident = kv_resident_bytes(pool.iter().map(|(c, _)| c));
+        let sum_physical: u64 =
+            pool.iter().map(|(c, _)| physical_bytes(&spec, c.capacity())).sum();
+        let max_physical =
+            pool.iter().map(|(c, _)| physical_bytes(&spec, c.capacity())).max().unwrap_or(0);
+        ensure!(
+            resident <= sum_physical,
+            "residency {resident} exceeds the no-sharing bound {sum_physical}"
+        );
+        ensure!(
+            resident >= max_physical,
+            "residency {resident} undercounts the largest single ring {max_physical}"
+        );
+        stats.checks += 2;
+    }
+
+    // endgame: a single survivor owns exactly its own physical ring
+    pool.truncate(1);
+    let survivor = &pool[0].0;
+    let resident = kv_resident_bytes(pool.iter().map(|(c, _)| c));
+    ensure!(
+        resident == physical_bytes(&spec, survivor.capacity()),
+        "sole survivor resident {resident} != physical {}",
+        physical_bytes(&spec, survivor.capacity())
+    );
+    stats.checks += 1;
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn short_run_is_clean_and_covers_every_op() {
+        let stats = fuzz_kvcache(FuzzCfg { seed: 0xFEED, ops: 1500 }).unwrap();
+        assert_eq!(stats.ops, 1500);
+        for kind in ["append", "fork", "truncate", "copy", "reset", "drop", "fresh"] {
+            assert!(stats.count(kind) > 0, "op kind {kind:?} never fired");
+        }
+        // illegal transitions were actually attempted, not just avoided
+        assert!(stats.count("fork_rejected") + stats.count("truncate_rejected") > 0);
+    }
+
+    #[test]
+    fn runs_are_deterministic_in_the_seed() {
+        let a = fuzz_kvcache(FuzzCfg { seed: 3, ops: 400 }).unwrap();
+        let b = fuzz_kvcache(FuzzCfg { seed: 3, ops: 400 }).unwrap();
+        assert_eq!(a.checks, b.checks);
+        assert_eq!(a.notes, b.notes);
+    }
+
+    #[test]
+    fn physical_bytes_matches_a_real_ring() {
+        let spec = spec_for(builtin_configs().remove(0));
+        for cap in [1, 15, 16, 17, 33] {
+            let c = KvCache::new(&spec, cap).unwrap();
+            assert_eq!(
+                physical_bytes(&spec, cap),
+                kv_resident_bytes([&c]),
+                "capacity {cap}"
+            );
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! Adversarial serving fuzzer: seed-replayable differential testing.
+//!
+//! Grown from the [`crate::util::prop`] mini-harness, this module
+//! drives long randomized op streams against the serving stack's three
+//! stateful cores and checks machine-checkable invariants after every
+//! single op:
+//!
+//! - [`kvcache`] — [`crate::runtime::KvCache`] (append / fork /
+//!   truncate / copy / reset / drop) against a dense reference model:
+//!   bitwise-equal rows over the live attention window, COW-deduped
+//!   residency bounded by physical ring bytes.
+//! - [`trie`] — [`crate::serve::CacheStore`] (insert / lookup / peek
+//!   under LRU eviction) against a flat longest-common-prefix scan over
+//!   the insertion log: identical hits, reuse lengths, stats counters
+//!   and eviction order.
+//! - [`sched`] — [`crate::serve::Scheduler`] (admit / tick / cancel /
+//!   thread-resize, speculative decoding and the prefix cache on or
+//!   off) against solo [`fn@crate::serve::generate`] replays: budget never
+//!   exceeded, residency bounded, survivors bit-identical, cancelled
+//!   streams a prefix of their solo run.
+//!
+//! Every run is a pure function of one `u64` seed. A violation aborts
+//! with a one-line replay command (CLI and `cargo test` forms), the
+//! same contract `MISA_PROP_SEED` gives the property tests. The
+//! `MISA_FUZZ_SEED` / `MISA_FUZZ_OPS` environment knobs override the
+//! built-in defaults everywhere a fuzz target runs (tests, CI smoke,
+//! `misa fuzz`).
+
+pub mod kvcache;
+pub mod sched;
+pub mod trie;
+
+pub use kvcache::fuzz_kvcache;
+pub use sched::{fuzz_scheduler, SchedFuzzCfg};
+pub use trie::fuzz_trie;
+
+use anyhow::{anyhow, Result};
+
+/// Default op count per target — sized so the three CI smoke targets
+/// together clear 10k ops in seconds on the `tiny` config.
+pub const DEFAULT_OPS: usize = 4096;
+
+/// Default master seed (any value works; fixed so CI failures are
+/// reproducible without copying a log line).
+pub const DEFAULT_SEED: u64 = 0x5EED_F022;
+
+/// One fuzz run's identity: every op drawn, every checked value, is a
+/// pure function of `seed` and `ops`.
+#[derive(Clone, Copy, Debug)]
+pub struct FuzzCfg {
+    /// Master seed for the op stream.
+    pub seed: u64,
+    /// Number of ops to drive before declaring the run clean.
+    pub ops: usize,
+}
+
+impl FuzzCfg {
+    /// Build from defaults, honoring the `MISA_FUZZ_SEED` /
+    /// `MISA_FUZZ_OPS` environment overrides (decimal or `0x…` hex,
+    /// same grammar as `MISA_PROP_SEED`).
+    pub fn from_env(seed: u64, ops: usize) -> FuzzCfg {
+        FuzzCfg {
+            seed: crate::util::prop::env_u64("MISA_FUZZ_SEED").unwrap_or(seed),
+            ops: crate::util::prop::env_u64("MISA_FUZZ_OPS").map(|n| n as usize).unwrap_or(ops),
+        }
+    }
+}
+
+impl Default for FuzzCfg {
+    fn default() -> Self {
+        FuzzCfg { seed: DEFAULT_SEED, ops: DEFAULT_OPS }
+    }
+}
+
+/// What a clean run did — op and check counts plus per-op-kind tallies,
+/// so a smoke run can assert the stream actually exercised every
+/// transition (a fuzzer that never forks proves nothing about forks).
+#[derive(Clone, Debug, Default)]
+pub struct FuzzStats {
+    /// Ops executed.
+    pub ops: usize,
+    /// Individual invariant checks that passed.
+    pub checks: u64,
+    /// Per-op-kind counters, in first-seen order.
+    pub notes: Vec<(&'static str, u64)>,
+}
+
+impl FuzzStats {
+    /// Bump the named counter by `delta` (creating it at first use).
+    pub fn note(&mut self, key: &'static str, delta: u64) {
+        match self.notes.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, v)) => *v += delta,
+            None => self.notes.push((key, delta)),
+        }
+    }
+
+    /// The named counter's value (0 when never bumped).
+    pub fn count(&self, key: &str) -> u64 {
+        self.notes.iter().find(|(k, _)| *k == key).map(|(_, v)| *v).unwrap_or(0)
+    }
+}
+
+/// The one-line replay command printed on any violation: the CLI form
+/// first (works without a checkout of the test tree), then the
+/// `cargo test` form driven by the environment knobs.
+pub fn replay_cmd(target: &str, cfg: FuzzCfg) -> String {
+    format!(
+        "replay: misa fuzz --target {target} --seed {seed:#x} --ops {ops} \
+         (or: MISA_FUZZ_SEED={seed:#x} MISA_FUZZ_OPS={ops} cargo test --test fuzz_serve {target})",
+        seed = cfg.seed,
+        ops = cfg.ops,
+    )
+}
+
+/// Run a fuzz body, converting both `Err` returns and panics (a
+/// debug-assert or index bug inside the target counts as a violation,
+/// not a crash) into an error whose message carries the replay
+/// command for exactly this `(target, seed, ops)`.
+pub fn run_target<F>(target: &str, cfg: FuzzCfg, body: F) -> Result<FuzzStats>
+where
+    F: FnOnce() -> Result<FuzzStats>,
+{
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(body));
+    match outcome {
+        Ok(Ok(stats)) => Ok(stats),
+        Ok(Err(e)) => Err(anyhow!("fuzz target {target:?}: {e:#}\n  {}", replay_cmd(target, cfg))),
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            Err(anyhow!(
+                "fuzz target {target:?} panicked: {msg}\n  {}",
+                replay_cmd(target, cfg)
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_env_prefers_overrides() {
+        // the shared env knobs are read by name; use the real names but
+        // restore them, serialized by a local lock against sibling tests
+        static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+        let _guard = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        std::env::remove_var("MISA_FUZZ_SEED");
+        std::env::remove_var("MISA_FUZZ_OPS");
+        let cfg = FuzzCfg::from_env(7, 11);
+        assert_eq!((cfg.seed, cfg.ops), (7, 11));
+        std::env::set_var("MISA_FUZZ_SEED", "0x10");
+        std::env::set_var("MISA_FUZZ_OPS", "3");
+        let cfg = FuzzCfg::from_env(7, 11);
+        assert_eq!((cfg.seed, cfg.ops), (16, 3));
+        std::env::remove_var("MISA_FUZZ_SEED");
+        std::env::remove_var("MISA_FUZZ_OPS");
+    }
+
+    #[test]
+    fn stats_notes_accumulate() {
+        let mut s = FuzzStats::default();
+        s.note("fork", 1);
+        s.note("fork", 2);
+        s.note("drop", 1);
+        assert_eq!(s.count("fork"), 3);
+        assert_eq!(s.count("drop"), 1);
+        assert_eq!(s.count("never"), 0);
+    }
+
+    #[test]
+    fn violations_carry_a_replay_command() {
+        let cfg = FuzzCfg { seed: 0xAB, ops: 9 };
+        let err = run_target("kvcache", cfg, || Err(anyhow!("len mismatch"))).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("len mismatch"), "{msg}");
+        assert!(msg.contains("misa fuzz --target kvcache --seed 0xab --ops 9"), "{msg}");
+        assert!(msg.contains("MISA_FUZZ_SEED=0xab MISA_FUZZ_OPS=9"), "{msg}");
+
+        let err = run_target("trie", cfg, || panic!("index out of bounds")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("panicked"), "{msg}");
+        assert!(msg.contains("index out of bounds"), "{msg}");
+        assert!(msg.contains("--target trie"), "{msg}");
+    }
+
+    #[test]
+    fn clean_runs_pass_stats_through() {
+        let cfg = FuzzCfg::default();
+        let stats = run_target("kvcache", cfg, || {
+            let mut s = FuzzStats { ops: 5, checks: 10, ..FuzzStats::default() };
+            s.note("append", 5);
+            Ok(s)
+        })
+        .unwrap();
+        assert_eq!(stats.ops, 5);
+        assert_eq!(stats.count("append"), 5);
+    }
+}

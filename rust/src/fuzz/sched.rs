@@ -1,0 +1,329 @@
+//! Adversarial fuzzing of the continuous-batching [`Scheduler`].
+//!
+//! Drives a real `tiny`-model [`Session`] through random interleavings
+//! of submit / tick / cancel / thread-resize — with speculative
+//! decoding and the prefix cache independently on or off — and checks:
+//!
+//! - **budget**: `in_flight_tokens() <= token_budget` after every op,
+//!   and `0` once drained;
+//! - **accounting**: every accepted request is eventually answered by
+//!   exactly one completion (tick output or [`Scheduler::cancel`]'s
+//!   return), so `accepted == completions + pending()` at all times;
+//! - **residency**: COW-deduped [`Scheduler::kv_resident_bytes`] never
+//!   exceeds the analytic bound `row_bytes × (token_budget +
+//!   max_slots × (store_capacity + chunk) + max_entries ×
+//!   store_capacity)` — a leak (a retired ring still referenced, a
+//!   store entry never evicted) trips this within a few ops;
+//! - **parity**: after draining, every surviving completion's tokens
+//!   are **bit-identical** to a solo [`generate`] replay of the same
+//!   request with speculation off — so spec-on scheduling, prefix
+//!   reuse, chunked prefill, cancellations of neighbors, and thread
+//!   resizes all provably never change any output token. Cancelled
+//!   completions must be a strict prefix of their solo replay;
+//!   rejected ones must contain an out-of-vocab token and no output.
+
+use anyhow::{ensure, Result};
+
+use crate::runtime::backend::CHUNK_POSITIONS;
+use crate::runtime::{Engine, Session};
+use crate::serve::{generate, CacheStoreCfg, FinishReason, GenerateCfg, Request};
+use crate::serve::{SamplerCfg, Scheduler, SchedulerCfg, SpecCfg};
+use crate::util::Rng;
+
+use super::{FuzzCfg, FuzzStats};
+
+/// One scheduler fuzz run's shape: the base seed/op budget plus which
+/// serving features the run exercises.
+#[derive(Clone, Copy, Debug)]
+pub struct SchedFuzzCfg {
+    /// Seed and op count.
+    pub fuzz: FuzzCfg,
+    /// Speculative decoding on (`draft_len` 4, `ngram` 3).
+    pub spec: bool,
+    /// Prefix-sharing prompt cache on.
+    pub prefix_cache: bool,
+    /// Per-tick prefill row cap (`0` = unlimited) — small values force
+    /// multi-tick prompts, so cancels land mid-prefill.
+    pub prefill_chunk: usize,
+    /// Allow the stream to resize the global worker pool mid-run
+    /// (leave off inside multi-threaded test binaries unless the
+    /// caller serializes access to the pool).
+    pub resize_threads: bool,
+}
+
+impl Default for SchedFuzzCfg {
+    fn default() -> Self {
+        SchedFuzzCfg {
+            fuzz: FuzzCfg::default(),
+            spec: true,
+            prefix_cache: true,
+            prefill_chunk: 3,
+            resize_threads: false,
+        }
+    }
+}
+
+/// Prompt-cache shape used by every fuzz run with the cache on; small
+/// enough that eviction happens constantly.
+const STORE: CacheStoreCfg = CacheStoreCfg { capacity: 32, max_entries: 4, min_prefix: 2 };
+
+/// Run the scheduler fuzz target.
+pub fn fuzz_scheduler(cfg: SchedFuzzCfg) -> Result<FuzzStats> {
+    let mut rng = Rng::new(cfg.fuzz.seed).fork(0x5C); // "sched"
+    let mut stats = FuzzStats::default();
+
+    let mut eng = Engine::host();
+    let sess = Session::create(&mut eng, "tiny", rng.next_u64())?;
+    let vocab = sess.spec.config.vocab;
+    let row_bytes =
+        (2 * sess.spec.config.n_layers * sess.spec.config.kv_dim() * std::mem::size_of::<f32>())
+            as u64;
+
+    let max_slots = rng.range(2, 5);
+    let token_budget = rng.range(64, 129);
+    let mut sched = Scheduler::new(SchedulerCfg {
+        max_slots,
+        token_budget,
+        prefix_cache: cfg.prefix_cache.then_some(STORE),
+        prefill_chunk: cfg.prefill_chunk,
+        spec: cfg.spec.then_some(SpecCfg { draft_len: 4, ngram: 3 }),
+    });
+    // the analytic no-leak residency ceiling (see the module docs);
+    // store entries and live rings are all bounded in ring positions
+    let (store_cap, store_entries) =
+        if cfg.prefix_cache { (STORE.capacity, STORE.max_entries) } else { (0, 0) };
+    let bound_positions = token_budget
+        + max_slots * (store_cap + CHUNK_POSITIONS)
+        + store_entries * (store_cap + CHUNK_POSITIONS);
+    let residency_bound = row_bytes * bound_positions as u64;
+
+    // shared prefix pool so the store actually hits
+    let prefix_pool: Vec<Vec<i32>> = (0..3)
+        .map(|_| {
+            let len = rng.range(2, 6);
+            (0..len).map(|_| rng.range(4, vocab) as i32).collect()
+        })
+        .collect();
+
+    let mut next_id = 0u64;
+    let mut accepted: Vec<Request> = Vec::new();
+    let mut completions = Vec::new();
+
+    let draw_request = |rng: &mut Rng, next_id: &mut u64| -> Request {
+        let mut prompt: Vec<i32> = if rng.below(2) == 0 {
+            rng.choose(&prefix_pool).clone()
+        } else {
+            Vec::new()
+        };
+        let extra = rng.range(if prompt.is_empty() { 2 } else { 0 }, 8);
+        for _ in 0..extra {
+            prompt.push(rng.range(4, vocab) as i32);
+        }
+        if rng.below(12) == 0 {
+            // adversarial: out of vocab → must become a Rejected
+            // completion, not a crash
+            let i = rng.below(prompt.len());
+            prompt[i] = vocab as i32 + 5;
+        }
+        let sampler = if rng.below(2) == 0 {
+            SamplerCfg { temperature: 0.0, ..SamplerCfg::default() }
+        } else {
+            SamplerCfg { temperature: 0.7, top_k: 16, top_p: 0.9 }
+        };
+        let id = *next_id;
+        *next_id += 1;
+        Request {
+            id,
+            prompt,
+            max_new: rng.range(1, 7),
+            sampler,
+            seed: 1000 + id,
+            eos: (rng.below(4) == 0).then_some(rng.range(4, vocab) as i32),
+        }
+    };
+
+    for _ in 0..cfg.fuzz.ops {
+        stats.ops += 1;
+        match rng.below(100) {
+            // submit a request (occasionally one that must be refused)
+            0..=34 => {
+                if rng.below(16) == 0 {
+                    // cost above the whole budget: submit must refuse
+                    // (deadlock guard), and nothing is charged
+                    let mut req = draw_request(&mut rng, &mut next_id);
+                    req.prompt = (0..token_budget + 1).map(|_| 4i32).collect();
+                    ensure!(sched.submit(req).is_err(), "oversize submit was accepted");
+                    stats.note("submit_refused", 1);
+                } else {
+                    let req = draw_request(&mut rng, &mut next_id);
+                    sched.submit(req.clone())?;
+                    accepted.push(req);
+                    stats.note("submit", 1);
+                }
+            }
+            // advance the machine
+            35..=74 => {
+                completions.extend(sched.tick(&sess)?);
+                stats.note("tick", 1);
+            }
+            // cancel: a live id must yield a completion, a dead or
+            // unknown id must yield None
+            75..=84 => {
+                let live: Vec<u64> = accepted
+                    .iter()
+                    .map(|r| r.id)
+                    .filter(|id| !completions.iter().any(|c: &crate::serve::Completion| c.id == *id))
+                    .collect();
+                if !live.is_empty() && rng.below(4) != 0 {
+                    let id = *rng.choose(&live);
+                    let c = sched.cancel(id);
+                    ensure!(c.is_some(), "cancel({id}) of a live request returned None");
+                    completions.extend(c);
+                    stats.note("cancel", 1);
+                } else {
+                    ensure!(
+                        sched.cancel(u64::MAX).is_none(),
+                        "cancel of an unknown id returned a completion"
+                    );
+                    stats.note("cancel_unknown", 1);
+                }
+            }
+            // resize the worker pool mid-stream (decode must stay
+            // bit-identical at any width)
+            85..=89 => {
+                if cfg.resize_threads {
+                    crate::tensor::set_threads(1 + rng.below(4));
+                    stats.note("resize", 1);
+                }
+            }
+            // burst of ticks (drains toward idle, exercises retirement)
+            _ => {
+                for _ in 0..rng.range(2, 5) {
+                    completions.extend(sched.tick(&sess)?);
+                }
+                stats.note("tick_burst", 1);
+            }
+        }
+
+        // invariants after every op
+        ensure!(
+            sched.in_flight_tokens() <= token_budget,
+            "in-flight {} exceeds the token budget {token_budget}",
+            sched.in_flight_tokens()
+        );
+        ensure!(
+            accepted.len() == completions.len() + sched.pending(),
+            "accounting drift: {} accepted vs {} completed + {} pending",
+            accepted.len(),
+            completions.len(),
+            sched.pending()
+        );
+        let resident = sched.kv_resident_bytes();
+        ensure!(
+            resident <= residency_bound,
+            "resident {resident} B exceeds the no-leak bound {residency_bound} B \
+             (budget {token_budget}, slots {max_slots})"
+        );
+        stats.checks += 3;
+    }
+
+    // drain, then verify the terminal state and replay every stream
+    while sched.pending() > 0 {
+        completions.extend(sched.tick(&sess)?);
+    }
+    if cfg.resize_threads {
+        crate::tensor::set_threads(0); // restore the default pool
+    }
+    ensure!(sched.in_flight_tokens() == 0, "drained scheduler still charges budget");
+    ensure!(accepted.len() == completions.len(), "drained scheduler lost completions");
+    stats.checks += 2;
+
+    for c in &completions {
+        let req = accepted
+            .iter()
+            .find(|r| r.id == c.id)
+            .expect("completion for an unsubmitted id");
+        let oov = req.prompt.iter().any(|&t| t < 0 || t as usize >= vocab);
+        if matches!(c.finish, FinishReason::Rejected) {
+            ensure!(oov, "request {} rejected without an out-of-vocab token", c.id);
+            ensure!(c.tokens.is_empty(), "rejected request {} produced tokens", c.id);
+            stats.note("verified_rejected", 1);
+            stats.checks += 2;
+            continue;
+        }
+        if oov {
+            // the only non-Rejected exit for a bad prompt: cancelled
+            // while still queued, before admission could reject it
+            ensure!(
+                matches!(c.finish, FinishReason::Cancelled) && c.tokens.is_empty(),
+                "request {} with an out-of-vocab token finished {:?} with tokens",
+                c.id,
+                c.finish
+            );
+            stats.note("verified_cancelled", 1);
+            stats.checks += 1;
+            continue;
+        }
+        let solo = generate(
+            &sess,
+            &req.prompt,
+            &GenerateCfg {
+                max_new: req.max_new,
+                sampler: req.sampler,
+                seed: req.seed,
+                eos: req.eos,
+                spec: None, // plain decode: the parity baseline
+            },
+        )?;
+        if matches!(c.finish, FinishReason::Cancelled) {
+            ensure!(
+                c.tokens.len() <= solo.tokens.len() && solo.tokens[..c.tokens.len()] == c.tokens[..],
+                "request {}: cancelled tokens are not a prefix of the solo replay",
+                c.id
+            );
+            stats.note("verified_cancelled", 1);
+        } else {
+            ensure!(
+                c.tokens == solo.tokens,
+                "request {}: scheduled tokens {:?} != solo replay {:?}",
+                c.id,
+                c.tokens,
+                solo.tokens
+            );
+            stats.note("verified_exact", 1);
+        }
+        stats.checks += 1;
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn short_run_is_clean_with_everything_on() {
+        let stats = fuzz_scheduler(SchedFuzzCfg {
+            fuzz: FuzzCfg { seed: 0xD1CE, ops: 160 },
+            ..SchedFuzzCfg::default()
+        })
+        .unwrap();
+        assert_eq!(stats.ops, 160);
+        for kind in ["submit", "tick", "cancel", "verified_exact"] {
+            assert!(stats.count(kind) > 0, "op kind {kind:?} never fired");
+        }
+    }
+
+    #[test]
+    fn plain_decode_and_no_cache_also_hold() {
+        let stats = fuzz_scheduler(SchedFuzzCfg {
+            fuzz: FuzzCfg { seed: 0xBEEF, ops: 120 },
+            spec: false,
+            prefix_cache: false,
+            prefill_chunk: 0,
+            resize_threads: false,
+        })
+        .unwrap();
+        assert!(stats.count("verified_exact") > 0);
+    }
+}

@@ -1,0 +1,318 @@
+//! Differential fuzzing of [`CacheStore`] against a flat scan model.
+//!
+//! The reference ([`RefStore`]) keeps stored prompts in a plain `Vec`
+//! and answers every query by brute force: longest-common-prefix by
+//! linear scan, LRU eviction by minimum stamp, the deterministic
+//! candidate rule as an explicit "lexicographically smallest stored
+//! prompt extending the match". The fuzzer drives random insert /
+//! lookup / peek streams — duplicate prompts, shared prefixes,
+//! degenerate donors, forced evictions — and checks after **every**
+//! op:
+//!
+//! - hit/miss parity, matched-prefix-length parity, and that a hit's
+//!   forked cache has exactly `m` positions at store capacity;
+//! - `Result`/`bool` parity on insert (dedup refreshes, oversize and
+//!   empty prompts decline, short donors error);
+//! - full [`CacheStats`] equality (lookups, hits, reused tokens,
+//!   insertions, evictions, entry count) — the LRU clock is part of
+//!   the contract, not an implementation detail;
+//! - [`CacheStore::peek_match`] equality against the scan over every
+//!   prompt in a bounded insertion log.
+
+use anyhow::{ensure, Result};
+
+use crate::modelspec::{builtin_configs, spec_for};
+use crate::runtime::KvCache;
+use crate::serve::{CacheStore, CacheStoreCfg};
+use crate::util::Rng;
+
+use super::{FuzzCfg, FuzzStats};
+
+/// Token alphabet (small, to force prefix collisions).
+const ALPHABET: i32 = 6;
+
+/// One stored prompt in the reference: its tokens and LRU stamp.
+struct RefEntry {
+    tokens: Vec<i32>,
+    stamp: u64,
+}
+
+/// Flat mirror of the trie store: entries in a `Vec`, counters by hand.
+struct RefStore {
+    capacity: usize,
+    max_entries: usize,
+    min_prefix: usize,
+    entries: Vec<RefEntry>,
+    clock: u64,
+    lookups: u64,
+    hits: u64,
+    reused: u64,
+    insertions: u64,
+    evictions: u64,
+}
+
+impl RefStore {
+    fn new(cfg: CacheStoreCfg) -> RefStore {
+        RefStore {
+            // mirror CacheStore::new's degenerate-limit clamping
+            capacity: cfg.capacity.max(1),
+            max_entries: cfg.max_entries.max(1),
+            min_prefix: cfg.min_prefix.max(1),
+            entries: Vec::new(),
+            clock: 0,
+            lookups: 0,
+            hits: 0,
+            reused: 0,
+            insertions: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Longest common prefix of `prompt` with any stored prompt — the
+    /// brute-force [`CacheStore::peek_match`].
+    fn peek(&self, prompt: &[i32]) -> usize {
+        self.entries
+            .iter()
+            .map(|e| e.tokens.iter().zip(prompt).take_while(|(a, b)| a == b).count())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Mirror of [`CacheStore::lookup`]: returns the matched length on
+    /// a hit, refreshing the chosen entry's LRU stamp.
+    fn lookup(&mut self, prompt: &[i32]) -> Option<usize> {
+        self.lookups += 1;
+        let m = self.peek(prompt).min(prompt.len().saturating_sub(1));
+        if m < self.min_prefix {
+            return None;
+        }
+        // the deterministic candidate: the lexicographically smallest
+        // stored prompt extending the matched prefix (a stored prompt
+        // equal to the prefix sorts before every extension)
+        let idx = self
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.tokens.len() >= m && e.tokens[..m] == prompt[..m])
+            .min_by(|(_, a), (_, b)| a.tokens.cmp(&b.tokens))
+            .map(|(i, _)| i)?;
+        self.clock += 1;
+        self.entries[idx].stamp = self.clock;
+        self.hits += 1;
+        self.reused += m as u64;
+        Some(m)
+    }
+
+    /// Mirror of [`CacheStore::insert`]: `Ok(stored)` / `Err` parity
+    /// including the exact ordering of the decline, dedup, donor-check
+    /// and clock-bump steps.
+    fn insert(&mut self, prompt: &[i32], donor_len: usize, donor_cap: usize) -> Result<bool> {
+        if prompt.is_empty() || prompt.len() > self.capacity {
+            return Ok(false);
+        }
+        ensure!(donor_len >= prompt.len(), "donor holds {donor_len} < {}", prompt.len());
+        self.clock += 1;
+        if let Some(e) = self.entries.iter_mut().find(|e| e.tokens == prompt) {
+            e.stamp = self.clock;
+            return Ok(false);
+        }
+        // snapshot legality, mirroring the fork_from / copy_prefix split
+        let plen = prompt.len();
+        if donor_cap == self.capacity {
+            ensure!(
+                donor_len <= (plen + 1).saturating_sub(donor_cap) + donor_cap,
+                "snapshot fork from a wrapped donor"
+            );
+        } else {
+            ensure!(donor_len <= donor_cap, "snapshot copy from a wrapped donor");
+        }
+        self.entries.push(RefEntry { tokens: prompt.to_vec(), stamp: self.clock });
+        self.insertions += 1;
+        while self.entries.len() > self.max_entries {
+            let idx = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(i, _)| i)
+                .expect("non-empty by the loop condition");
+            self.entries.remove(idx);
+            self.evictions += 1;
+        }
+        Ok(true)
+    }
+
+    fn stats_tuple(&self) -> (u64, u64, u64, u64, u64, usize) {
+        (self.lookups, self.hits, self.reused, self.insertions, self.evictions, self.entries.len())
+    }
+}
+
+/// Draw a prompt: fresh, a mutation of a logged prompt (shared
+/// prefixes), or a logged prompt verbatim (dedup pressure).
+fn draw_prompt(rng: &mut Rng, log: &[Vec<i32>], capacity: usize) -> Vec<i32> {
+    let fresh = |rng: &mut Rng| -> Vec<i32> {
+        let len = rng.range(1, capacity + 3);
+        (0..len).map(|_| 1 + rng.below(ALPHABET as usize) as i32).collect()
+    };
+    if log.is_empty() {
+        return fresh(rng);
+    }
+    match rng.below(4) {
+        0 => fresh(rng),
+        1 => rng.choose(log).clone(),
+        _ => {
+            // keep a prefix of a logged prompt, extend with fresh tokens
+            let base = rng.choose(log);
+            let keep = rng.below(base.len() + 1);
+            let extra = rng.below(4);
+            let mut p: Vec<i32> = base[..keep].to_vec();
+            for _ in 0..extra {
+                p.push(1 + rng.below(ALPHABET as usize) as i32);
+            }
+            if p.is_empty() {
+                p.push(1 + rng.below(ALPHABET as usize) as i32);
+            }
+            p
+        }
+    }
+}
+
+/// Run the trie differential fuzz target.
+pub fn fuzz_trie(cfg: FuzzCfg) -> Result<FuzzStats> {
+    let spec = spec_for(builtin_configs().remove(0));
+    let mut rng = Rng::new(cfg.seed).fork(0x7472); // "tr"
+    let mut stats = FuzzStats::default();
+
+    let store_cfg = CacheStoreCfg {
+        capacity: rng.range(8, 17),
+        max_entries: rng.range(2, 6),
+        min_prefix: rng.range(1, 4),
+    };
+    let mut real = CacheStore::new(store_cfg);
+    let mut model = RefStore::new(store_cfg);
+    // every prompt ever offered (insertion log for the peek sweep)
+    let mut log: Vec<Vec<i32>> = Vec::new();
+
+    for _ in 0..cfg.ops {
+        stats.ops += 1;
+        match rng.below(100) {
+            // insert with a randomized donor shape
+            0..=44 => {
+                let prompt = draw_prompt(&mut rng, &log, model.capacity);
+                // donor variants: right-sized unwrapped (the miss
+                // path), store-layout (the fork path), too short
+                // (must error), wrapped (must error when snapshotted)
+                let (donor_len, donor_cap) = match rng.below(8) {
+                    0..=2 => (prompt.len(), prompt.len().max(1)),
+                    3..=4 => (prompt.len().min(model.capacity), model.capacity),
+                    5 => (prompt.len().saturating_sub(rng.range(1, 3)).max(1), model.capacity),
+                    6 => (prompt.len() + 2, prompt.len().max(1)),
+                    _ => (prompt.len(), model.capacity),
+                };
+                let donor_cap = donor_cap.max(1);
+                let mut donor = KvCache::new(&spec, donor_cap)?;
+                donor.advance(donor_len);
+                let got = real.insert(&prompt, &donor);
+                let want = model.insert(&prompt, donor_len, donor_cap);
+                match (&got, &want) {
+                    (Ok(a), Ok(b)) => {
+                        ensure!(a == b, "insert stored={a} but the reference says {b}");
+                        stats.note(if *a { "insert_stored" } else { "insert_declined" }, 1);
+                    }
+                    (Err(_), Err(_)) => stats.note("insert_rejected", 1),
+                    _ => anyhow::bail!(
+                        "insert parity: real {:?} vs reference {:?} for prompt {:?} \
+                         (donor len {donor_len}, cap {donor_cap})",
+                        got.as_ref().map(|_| ()),
+                        want.as_ref().map(|_| ()),
+                        prompt
+                    ),
+                }
+                log.push(prompt);
+            }
+            // lookup: hit/miss, match length, forked-cache shape parity
+            45..=79 => {
+                let prompt = draw_prompt(&mut rng, &log, model.capacity);
+                let got = real.lookup(&prompt);
+                let want = model.lookup(&prompt);
+                match (&got, want) {
+                    (Some((cache, m)), Some(wm)) => {
+                        ensure!(
+                            *m == wm,
+                            "lookup matched {m} positions, reference says {wm}, for {prompt:?}"
+                        );
+                        ensure!(
+                            cache.len() == wm && cache.capacity() == model.capacity,
+                            "hit fork shape (len {}, cap {}) != ({wm}, {})",
+                            cache.len(),
+                            cache.capacity(),
+                            model.capacity
+                        );
+                        stats.note("lookup_hit", 1);
+                        stats.checks += 2;
+                    }
+                    (None, None) => stats.note("lookup_miss", 1),
+                    _ => anyhow::bail!(
+                        "lookup parity: real {:?} vs reference {want:?} for {prompt:?}",
+                        got.as_ref().map(|(_, m)| *m)
+                    ),
+                }
+            }
+            // pure peek probe (no side effects on either side)
+            _ => {
+                let prompt = draw_prompt(&mut rng, &log, model.capacity);
+                ensure!(
+                    real.peek_match(&prompt) == model.peek(&prompt),
+                    "peek_match disagrees on {prompt:?}"
+                );
+                stats.note("peek", 1);
+                stats.checks += 1;
+            }
+        }
+
+        // invariants after every op: full stats equality and a peek
+        // sweep over a bounded window of the insertion log
+        let s = real.stats();
+        ensure!(
+            (s.lookups, s.hits, s.reused_tokens, s.insertions, s.evictions, s.entries)
+                == model.stats_tuple(),
+            "stats drift: real {s:?} vs reference {:?}",
+            model.stats_tuple()
+        );
+        ensure!(real.len() == model.entries.len(), "entry-count drift");
+        stats.checks += 2;
+        let window = log.len().saturating_sub(48);
+        for p in &log[window..] {
+            ensure!(
+                real.peek_match(p) == model.peek(p),
+                "peek sweep disagrees on logged prompt {p:?}"
+            );
+            stats.checks += 1;
+        }
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn short_run_is_clean_and_covers_every_op() {
+        let stats = fuzz_trie(FuzzCfg { seed: 0xFACE, ops: 1200 }).unwrap();
+        assert_eq!(stats.ops, 1200);
+        for kind in
+            ["insert_stored", "insert_declined", "insert_rejected", "lookup_hit", "lookup_miss", "peek"]
+        {
+            assert!(stats.count(kind) > 0, "op kind {kind:?} never fired");
+        }
+    }
+
+    #[test]
+    fn runs_are_deterministic_in_the_seed() {
+        let a = fuzz_trie(FuzzCfg { seed: 11, ops: 500 }).unwrap();
+        let b = fuzz_trie(FuzzCfg { seed: 11, ops: 500 }).unwrap();
+        assert_eq!(a.checks, b.checks);
+        assert_eq!(a.notes, b.notes);
+    }
+}

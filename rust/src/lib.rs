@@ -38,11 +38,15 @@
 //! - [`serve`] — inference serving: KV-cache incremental decode, token
 //!   samplers, single-stream generation, prefix-sharing prompt cache,
 //!   continuous-batching scheduler with batched prefill admission.
+//! - [`fuzz`] — seed-replayable differential fuzzer over the serving
+//!   cores (KV cache, prompt trie, scheduler), each checked against a
+//!   naive reference model after every op.
 //! - [`config`] — TOML-subset run configuration.
 
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod fuzz;
 pub mod memory;
 pub mod modelspec;
 pub mod obs;

@@ -53,6 +53,15 @@ fn usage() -> ! {
          \x20           [--variance-report] [--t-inner N]  (MISA-vs-layerwise\n\
          \x20           gradient-estimator variance on the same norms)\n\
          \x20           [--gemm]  (kernel-level GEMM GFLOP/s sweep by shape)\n\
+         \x20 misa fuzz [--target kvcache|trie|scheduler|all] [--ops N] [--seed N]\n\
+         \x20           [--spec] [--prefix-cache] [--prefill-chunk N]\n\
+         \x20           (seed-replayable differential fuzzer; MISA_FUZZ_SEED /\n\
+         \x20           MISA_FUZZ_OPS override; violations print a replay command)\n\
+         \x20 misa capacity [--model M] [--slots-list 1,2,4] [--budget-list 4096]\n\
+         \x20           [--threads-list 1] [--requests N] [--prompt-len N]\n\
+         \x20           [--max-new N] [--holdout] [--seed N] [--json FILE]\n\
+         \x20 misa capacity --predict --fit FILE --slots N --token-budget N\n\
+         \x20           [--threads N]  (answer sizing queries from a saved fit)\n\
          \x20 misa exp <name|all|list> [--full] [--artifacts DIR] [--backend B]\n\
          \x20 misa info [--artifacts DIR] [--backend B]\n\n\
          Every subcommand also takes --threads N (GEMM worker-pool width;\n\
@@ -74,12 +83,14 @@ const VALUED_FLAGS: &[&str] = &[
     "max-new", "temp", "top-k", "top-p", "eos", "requests", "prompt-len", "shared-prefix",
     "slots", "token-budget", "prefix-cache-cap", "prefix-cache-entries", "prefill-chunk",
     "draft-len", "spec-ngram", "threads", "json", "trace-out", "metrics-out",
-    "report-out",
+    "report-out", "target", "ops", "slots-list", "budget-list", "threads-list", "fit",
 ];
 
 /// Boolean switches.
-const SWITCHES: &[&str] =
-    &["pretrain", "full", "host", "prefix-cache", "spec", "variance-report", "gemm"];
+const SWITCHES: &[&str] = &[
+    "pretrain", "full", "host", "prefix-cache", "spec", "variance-report", "gemm", "predict",
+    "holdout",
+];
 
 struct Args {
     positional: Vec<String>,
@@ -1000,6 +1011,192 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse a `u64` accepting decimal or `0x…` hex — fuzz replay commands
+/// print seeds in hex, and pasting one back must just work.
+fn parse_u64_flex(name: &str, s: &str) -> Result<u64> {
+    match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        Some(h) => u64::from_str_radix(h, 16).with_context(|| format!("--{name}")),
+        None => s.parse().with_context(|| format!("--{name}")),
+    }
+}
+
+/// Parse a comma-separated `usize` list flag (`--slots-list 1,2,4`).
+fn parse_list(args: &Args, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+    match args.flags.get(name) {
+        None => Ok(default.to_vec()),
+        Some(raw) => {
+            let out = raw
+                .split(',')
+                .map(|p| p.trim().parse::<usize>().with_context(|| format!("--{name}: {p:?}")))
+                .collect::<Result<Vec<_>>>()?;
+            anyhow::ensure!(!out.is_empty(), "--{name} must not be empty");
+            Ok(out)
+        }
+    }
+}
+
+fn cmd_fuzz(args: &Args) -> Result<()> {
+    use misa::fuzz::{self, FuzzCfg, SchedFuzzCfg};
+    let defaults = FuzzCfg::from_env(fuzz::DEFAULT_SEED, fuzz::DEFAULT_OPS);
+    let cfg = FuzzCfg {
+        seed: match args.flags.get("seed") {
+            Some(s) => parse_u64_flex("seed", s)?,
+            None => defaults.seed,
+        },
+        ops: match args.flags.get("ops") {
+            Some(n) => n.parse().context("--ops")?,
+            None => defaults.ops,
+        },
+    };
+    let target = args.flags.get("target").map(String::as_str).unwrap_or("all");
+    let targets: Vec<&str> = match target {
+        "all" => vec!["kvcache", "trie", "scheduler"],
+        t => vec![t],
+    };
+    for t in targets {
+        let stats = match t {
+            "kvcache" => fuzz::run_target(t, cfg, || fuzz::fuzz_kvcache(cfg))?,
+            "trie" => fuzz::run_target(t, cfg, || fuzz::fuzz_trie(cfg))?,
+            "scheduler" => {
+                let scfg = SchedFuzzCfg {
+                    fuzz: cfg,
+                    spec: args.switches.contains("spec"),
+                    prefix_cache: args.switches.contains("prefix-cache"),
+                    prefill_chunk: match args.flags.get("prefill-chunk") {
+                        Some(n) => n.parse().context("--prefill-chunk")?,
+                        None => 3,
+                    },
+                    // the CLI owns the process, so the stream may
+                    // resize the worker pool mid-run
+                    resize_threads: true,
+                };
+                fuzz::run_target(t, cfg, || fuzz::fuzz_scheduler(scfg))?
+            }
+            other => bail!("unknown fuzz target {other:?} (kvcache|trie|scheduler|all)"),
+        };
+        let notes = stats
+            .notes
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        println!(
+            "fuzz {t}: clean · seed {:#x} · {} ops · {} checks · {notes}",
+            cfg.seed, stats.ops, stats.checks,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_capacity(args: &Args) -> Result<()> {
+    use misa::serve::capacity::{self, CapacityModel, SweepCfg};
+    if args.switches.contains("predict") {
+        let fit_path = args
+            .flags
+            .get("fit")
+            .ok_or_else(|| anyhow!("--predict requires --fit FILE (a saved capacity fit)"))?;
+        let text = std::fs::read_to_string(fit_path)
+            .with_context(|| format!("reading capacity fit {fit_path}"))?;
+        let model = CapacityModel::from_json(&text)?;
+        let slots: usize = args
+            .flags
+            .get("slots")
+            .ok_or_else(|| anyhow!("--predict requires --slots N"))?
+            .parse()
+            .context("--slots")?;
+        let budget: usize = args
+            .flags
+            .get("token-budget")
+            .ok_or_else(|| anyhow!("--predict requires --token-budget N"))?
+            .parse()
+            .context("--token-budget")?;
+        let threads: usize = match args.flags.get("threads") {
+            Some(t) => t.parse().context("--threads")?,
+            None => 1,
+        };
+        println!(
+            "capacity predict: slots={slots} token_budget={budget} threads={threads} → \
+             peak_kv {:.3} MiB · {:.1} tok/s \
+             (fit over {} points, workload {}+{} × {} requests)",
+            model.predict_kv_mib(slots, budget, threads),
+            model.predict_tok_s(slots, budget, threads),
+            model.points.len(),
+            model.prompt_len,
+            model.max_new,
+            model.requests,
+        );
+        return Ok(());
+    }
+
+    let mut engine = make_engine(args)?;
+    let seed: u64 = match args.flags.get("seed") {
+        Some(s) => parse_u64_flex("seed", s)?,
+        None => 0,
+    };
+    let model = args.flags.get("model").map(String::as_str).unwrap_or("tiny");
+    let sess = Session::create(&mut engine, model, seed)?;
+    let cfg = SweepCfg {
+        slots_list: parse_list(args, "slots-list", &[1, 2, 4])?,
+        budget_list: parse_list(args, "budget-list", &[4096])?,
+        threads_list: parse_list(args, "threads-list", &[1])?,
+        requests: match args.flags.get("requests") {
+            Some(n) => n.parse().context("--requests")?,
+            None => 8,
+        },
+        prompt_len: match args.flags.get("prompt-len") {
+            Some(n) => n.parse().context("--prompt-len")?,
+            None => 8,
+        },
+        max_new: match args.flags.get("max-new") {
+            Some(n) => n.parse().context("--max-new")?,
+            None => 8,
+        },
+        seed,
+    };
+    println!(
+        "capacity sweep: model={model} slots={:?} budgets={:?} threads={:?} \
+         workload {}+{} × {} requests",
+        cfg.slots_list, cfg.budget_list, cfg.threads_list, cfg.prompt_len, cfg.max_new,
+        cfg.requests,
+    );
+    let points = capacity::run_sweep(&sess, &cfg)?;
+    for p in &points {
+        println!(
+            "  slots={:<3} budget={:<6} threads={:<2} peak_kv {:.3} MiB · {:.1} tok/s",
+            p.slots, p.token_budget, p.threads, p.peak_kv_mib, p.tok_s,
+        );
+    }
+    let holdout = if args.switches.contains("holdout") {
+        let (kv, tps) =
+            capacity::holdout_rel_err(&points, cfg.requests, cfg.prompt_len, cfg.max_new)?;
+        println!(
+            "holdout (last point): peak_kv rel err {:.1}% · tok/s rel err {:.1}%",
+            kv * 100.0,
+            tps * 100.0,
+        );
+        Some((kv, tps))
+    } else {
+        None
+    };
+    let fit = CapacityModel::fit(points, cfg.requests, cfg.prompt_len, cfg.max_new)?;
+    println!(
+        "fit: peak_kv_mib ≈ {:.4} + {:.6}·eff_pos (max rel err {:.1}%) · \
+         tok_s ≈ {:.2} + {:.2}·conc + {:.2}·threads",
+        fit.kv_coef[0],
+        fit.kv_coef[1],
+        fit.kv_fit_rel_err() * 100.0,
+        fit.tps_coef[0],
+        fit.tps_coef[1],
+        fit.tps_coef[2],
+    );
+    if let Some(path) = args.flags.get("json") {
+        std::fs::write(path, fit.to_json_with(holdout))
+            .with_context(|| format!("writing capacity fit {path}"))?;
+        println!("capacity fit written: {path}");
+    }
+    Ok(())
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
@@ -1021,6 +1218,8 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("generate") => cmd_generate(&args),
         Some("bench-serve") => cmd_bench_serve(&args),
+        Some("fuzz") => cmd_fuzz(&args),
+        Some("capacity") => cmd_capacity(&args),
         Some("bench") => cmd_bench(&args),
         Some("exp") => cmd_exp(&args),
         Some("info") => cmd_info(&args),
@@ -1112,6 +1311,49 @@ mod tests {
         // invalid sampler configs are rejected at parse time
         let a = parse_args(&v(&["generate", "--top-p", "0"])).unwrap();
         assert!(sampler_from(&a).is_err());
+    }
+
+    #[test]
+    fn fuzz_and_capacity_flags_parse() {
+        let a = parse_args(&v(&[
+            "fuzz", "--target", "scheduler", "--ops", "2000", "--seed", "0xab",
+            "--spec", "--prefix-cache", "--prefill-chunk", "3",
+        ]))
+        .unwrap();
+        assert_eq!(a.positional, vec!["fuzz"]);
+        assert_eq!(a.flags.get("target").unwrap(), "scheduler");
+        assert!(a.switches.contains("spec") && a.switches.contains("prefix-cache"));
+        assert_eq!(parse_u64_flex("seed", a.flags.get("seed").unwrap()).unwrap(), 0xAB);
+
+        let a = parse_args(&v(&[
+            "capacity", "--slots-list", "1, 2,4", "--budget-list", "4096",
+            "--threads-list", "1,2", "--holdout", "--json", "cap.json",
+        ]))
+        .unwrap();
+        assert!(a.switches.contains("holdout"));
+        assert_eq!(parse_list(&a, "slots-list", &[9]).unwrap(), vec![1, 2, 4]);
+        assert_eq!(parse_list(&a, "threads-list", &[9]).unwrap(), vec![1, 2]);
+        // absent list flags fall back to the default
+        assert_eq!(parse_list(&a, "requests", &[7]).unwrap(), vec![7]);
+        // malformed entries are hard errors
+        let a = parse_args(&v(&["capacity", "--slots-list", "1,x"])).unwrap();
+        assert!(parse_list(&a, "slots-list", &[1]).is_err());
+        // predict-side flags share the existing valued set
+        let a = parse_args(&v(&[
+            "capacity", "--predict", "--fit", "cap.json", "--slots", "8",
+            "--token-budget", "4096",
+        ]))
+        .unwrap();
+        assert!(a.switches.contains("predict"));
+        assert_eq!(a.flags.get("fit").unwrap(), "cap.json");
+    }
+
+    #[test]
+    fn flex_u64_accepts_decimal_and_hex() {
+        assert_eq!(parse_u64_flex("seed", "42").unwrap(), 42);
+        assert_eq!(parse_u64_flex("seed", "0xC0FFEE").unwrap(), 0xC0FFEE);
+        assert!(parse_u64_flex("seed", "0xZZ").is_err());
+        assert!(parse_u64_flex("seed", "nope").is_err());
     }
 
     #[test]

@@ -69,7 +69,7 @@ impl BackendKind {
 /// chunk (`Arc::make_mut`), so the COW granularity — and the marginal
 /// memory cost of a diverging fork — is `CHUNK_POSITIONS * kv_dim`
 /// floats per layer, not the whole ring.
-const CHUNK_POSITIONS: usize = 16;
+pub(crate) const CHUNK_POSITIONS: usize = 16;
 
 /// Per-layer key/value ring buffers for incremental decode.
 ///

@@ -199,10 +199,17 @@ impl CacheStore {
         if m < self.cfg.min_prefix {
             return None;
         }
-        // walk to the matched node, then descend to any entry below it:
+        // walk to the matched node, then descend to an entry below it:
         // every retained path terminates in an entry, and every entry
         // below holds bit-identical K/V rows for the first `m` positions
-        // (same tokens, same absolute positions, same kernels)
+        // (same tokens, same absolute positions, same kernels). The
+        // descent is deterministic — a node's own entry first, else the
+        // smallest child token — i.e. the lexicographically smallest
+        // stored prompt extending the match. Any entry would serve the
+        // fork equally; pinning *which* one pins the LRU refresh, so
+        // eviction order (and with it the whole serving state machine)
+        // stays a pure function of the request stream rather than of
+        // `HashMap` iteration order.
         let mut node = &self.root;
         for &t in &prompt[..m] {
             node = node.children.get(&t)?;
@@ -211,7 +218,7 @@ impl CacheStore {
             if let Some(id) = node.entry {
                 break id;
             }
-            node = node.children.values().next()?;
+            node = node.children.iter().min_by_key(|(&t, _)| t).map(|(_, c)| c)?;
         };
         let entry = self.entries.get_mut(&id)?;
         let cache = KvCache::fork_from(&entry.cache, m).ok()?;

@@ -1,0 +1,486 @@
+//! Capacity planning: measure a serving sweep, fit a closed-form
+//! model, answer sizing queries.
+//!
+//! `misa capacity` runs the continuous-batching scheduler over a
+//! (`slots` × `token_budget` × `threads`) grid with a fixed workload,
+//! measuring each point's **peak COW-deduped KV residency** and
+//! **aggregate decode throughput**. A least-squares fit then turns the
+//! sweep into two small closed forms:
+//!
+//! - `peak_kv_mib ≈ a + b · eff_pos`, where `eff_pos` is the
+//!   analytically effective resident positions
+//!   `min(slots, requests, token_budget / cost) · cost` with
+//!   `cost = prompt_len + max_new` — the budget-clamped concurrency
+//!   times each stream's ring size (chunk rounding and allocator slack
+//!   land in `a`/`b`);
+//! - `tok_s ≈ a + b · eff_conc + c · threads`, the same clamped
+//!   concurrency plus the worker-pool width.
+//!
+//! The fit (coefficients, per-point residuals, held-out error when
+//! requested) is emitted as JSON; `misa capacity --predict` reloads
+//! such a file (via [`crate::util::Json`]) and answers "what would
+//! this configuration cost" without rerunning anything. Fit quality is
+//! test-pinned: held-out `peak_kv_mib` predictions must land within
+//! 15% of measurement (CI asserts this on a real 4-point sweep).
+
+use anyhow::{ensure, Context, Result};
+
+use crate::runtime::Session;
+use crate::serve::{Request, SamplerCfg, Scheduler, SchedulerCfg};
+use crate::util::json::escape;
+use crate::util::{Json, Rng};
+
+/// One measured sweep point.
+#[derive(Clone, Debug)]
+pub struct CapacityPoint {
+    /// Scheduler slots (decode batch width).
+    pub slots: usize,
+    /// Scheduler token budget (KV positions).
+    pub token_budget: usize,
+    /// GEMM worker-pool width the point ran with.
+    pub threads: usize,
+    /// Peak COW-deduped KV residency, MiB (measured, not analytic).
+    pub peak_kv_mib: f64,
+    /// Aggregate decode throughput, new tokens per wall-clock second.
+    pub tok_s: f64,
+}
+
+/// Sweep shape: the grid plus the fixed per-point workload.
+#[derive(Clone, Debug)]
+pub struct SweepCfg {
+    /// Slot counts to visit.
+    pub slots_list: Vec<usize>,
+    /// Token budgets to visit.
+    pub budget_list: Vec<usize>,
+    /// Worker-pool widths to visit.
+    pub threads_list: Vec<usize>,
+    /// Requests per point.
+    pub requests: usize,
+    /// Prompt length per request.
+    pub prompt_len: usize,
+    /// New tokens per request.
+    pub max_new: usize,
+    /// Seed for the synthetic prompts.
+    pub seed: u64,
+}
+
+impl Default for SweepCfg {
+    fn default() -> Self {
+        SweepCfg {
+            slots_list: vec![1, 2, 4],
+            budget_list: vec![4096],
+            threads_list: vec![1],
+            requests: 8,
+            prompt_len: 8,
+            max_new: 8,
+            seed: 0,
+        }
+    }
+}
+
+/// The fitted capacity model: coefficients plus the workload constants
+/// the features are built from.
+#[derive(Clone, Debug)]
+pub struct CapacityModel {
+    /// `[intercept, per-eff_pos]` for `peak_kv_mib`.
+    pub kv_coef: Vec<f64>,
+    /// `[intercept, per-eff_conc, per-thread]` for `tok_s`.
+    pub tps_coef: Vec<f64>,
+    /// Requests per point (clamps effective concurrency).
+    pub requests: usize,
+    /// Prompt length the sweep used.
+    pub prompt_len: usize,
+    /// New tokens per request the sweep used.
+    pub max_new: usize,
+    /// The points the fit was computed from.
+    pub points: Vec<CapacityPoint>,
+}
+
+/// Effective concurrency of a configuration: slots, clamped by how
+/// many requests exist and how many streams the budget can charge.
+fn eff_conc(slots: usize, budget: usize, requests: usize, cost: usize) -> f64 {
+    slots.min(requests).min(budget / cost.max(1)).max(1) as f64
+}
+
+/// Solve `min_x ‖A x − y‖²` by ridge-damped normal equations
+/// (`AᵀA + λI`) and Gaussian elimination with partial pivoting. The
+/// tiny `λ` only guards rank-deficient sweeps (e.g. a single-column
+/// grid); it does not visibly bias a well-posed fit.
+pub fn lstsq(rows: &[Vec<f64>], y: &[f64], ridge: f64) -> Result<Vec<f64>> {
+    ensure!(!rows.is_empty(), "lstsq: no rows");
+    let k = rows[0].len();
+    ensure!(rows.iter().all(|r| r.len() == k), "lstsq: ragged rows");
+    ensure!(rows.len() == y.len(), "lstsq: {} rows vs {} targets", rows.len(), y.len());
+    // normal equations
+    let mut ata = vec![vec![0.0f64; k]; k];
+    let mut aty = vec![0.0f64; k];
+    for (r, &t) in rows.iter().zip(y) {
+        for i in 0..k {
+            aty[i] += r[i] * t;
+            for j in 0..k {
+                ata[i][j] += r[i] * r[j];
+            }
+        }
+    }
+    for (i, row) in ata.iter_mut().enumerate() {
+        row[i] += ridge;
+    }
+    // Gaussian elimination with partial pivoting on [ata | aty]
+    for col in 0..k {
+        let pivot = (col..k)
+            .max_by(|&a, &b| {
+                ata[a][col].abs().partial_cmp(&ata[b][col].abs()).expect("finite pivots")
+            })
+            .expect("non-empty range");
+        ata.swap(col, pivot);
+        aty.swap(col, pivot);
+        let diag = ata[col][col];
+        ensure!(diag.abs() > 1e-12, "lstsq: singular system at column {col}");
+        for row in col + 1..k {
+            let f = ata[row][col] / diag;
+            for j in col..k {
+                ata[row][j] -= f * ata[col][j];
+            }
+            aty[row] -= f * aty[col];
+        }
+    }
+    let mut x = vec![0.0f64; k];
+    for col in (0..k).rev() {
+        let mut acc = aty[col];
+        for j in col + 1..k {
+            acc -= ata[col][j] * x[j];
+        }
+        x[col] = acc / ata[col][col];
+    }
+    Ok(x)
+}
+
+impl CapacityModel {
+    /// Fit the two closed forms to a sweep.
+    pub fn fit(
+        points: Vec<CapacityPoint>,
+        requests: usize,
+        prompt_len: usize,
+        max_new: usize,
+    ) -> Result<CapacityModel> {
+        ensure!(points.len() >= 2, "capacity fit needs at least 2 sweep points");
+        let cost = prompt_len + max_new;
+        let kv_rows: Vec<Vec<f64>> = points
+            .iter()
+            .map(|p| {
+                let c = eff_conc(p.slots, p.token_budget, requests, cost);
+                vec![1.0, c * cost as f64]
+            })
+            .collect();
+        let kv_y: Vec<f64> = points.iter().map(|p| p.peak_kv_mib).collect();
+        let tps_rows: Vec<Vec<f64>> = points
+            .iter()
+            .map(|p| {
+                let c = eff_conc(p.slots, p.token_budget, requests, cost);
+                vec![1.0, c, p.threads as f64]
+            })
+            .collect();
+        let tps_y: Vec<f64> = points.iter().map(|p| p.tok_s).collect();
+        Ok(CapacityModel {
+            kv_coef: lstsq(&kv_rows, &kv_y, 1e-9)?,
+            tps_coef: lstsq(&tps_rows, &tps_y, 1e-9)?,
+            requests,
+            prompt_len,
+            max_new,
+            points,
+        })
+    }
+
+    /// Predicted peak KV residency (MiB) for a configuration.
+    pub fn predict_kv_mib(&self, slots: usize, budget: usize, _threads: usize) -> f64 {
+        let cost = self.prompt_len + self.max_new;
+        let c = eff_conc(slots, budget, self.requests, cost);
+        self.kv_coef[0] + self.kv_coef[1] * c * cost as f64
+    }
+
+    /// Predicted aggregate throughput (tok/s) for a configuration.
+    pub fn predict_tok_s(&self, slots: usize, budget: usize, threads: usize) -> f64 {
+        let cost = self.prompt_len + self.max_new;
+        let c = eff_conc(slots, budget, self.requests, cost);
+        self.tps_coef[0] + self.tps_coef[1] * c + self.tps_coef[2] * threads as f64
+    }
+
+    /// Largest relative error of the kv fit over its own points.
+    pub fn kv_fit_rel_err(&self) -> f64 {
+        self.points
+            .iter()
+            .map(|p| {
+                let pred = self.predict_kv_mib(p.slots, p.token_budget, p.threads);
+                (pred - p.peak_kv_mib).abs() / p.peak_kv_mib.abs().max(1e-9)
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Serialize the whole fit (coefficients, workload constants,
+    /// per-point residuals) as one JSON document.
+    pub fn to_json(&self) -> String {
+        self.to_json_with(None)
+    }
+
+    /// [`CapacityModel::to_json`], optionally embedding a held-out
+    /// check's `(kv, tps)` relative errors — what the CI capacity
+    /// smoke asserts against. Unknown keys are ignored on reload.
+    pub fn to_json_with(&self, holdout: Option<(f64, f64)>) -> String {
+        let coef = |cs: &[f64]| {
+            cs.iter().map(|c| format!("{c}")).collect::<Vec<_>>().join(", ")
+        };
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"bin\": \"{}\",\n", escape("capacity")));
+        if let Some((kv, tps)) = holdout {
+            out.push_str(&format!("  \"holdout_kv_rel_err\": {kv},\n"));
+            out.push_str(&format!("  \"holdout_tok_s_rel_err\": {tps},\n"));
+        }
+        out.push_str(&format!("  \"requests\": {},\n", self.requests));
+        out.push_str(&format!("  \"prompt_len\": {},\n", self.prompt_len));
+        out.push_str(&format!("  \"max_new\": {},\n", self.max_new));
+        out.push_str(&format!("  \"kv_coef\": [{}],\n", coef(&self.kv_coef)));
+        out.push_str(&format!("  \"tps_coef\": [{}],\n", coef(&self.tps_coef)));
+        out.push_str(&format!("  \"kv_fit_rel_err\": {},\n", self.kv_fit_rel_err()));
+        out.push_str("  \"points\": [\n");
+        for (i, p) in self.points.iter().enumerate() {
+            let kv_pred = self.predict_kv_mib(p.slots, p.token_budget, p.threads);
+            let tps_pred = self.predict_tok_s(p.slots, p.token_budget, p.threads);
+            out.push_str(&format!(
+                "    {{\"slots\": {}, \"token_budget\": {}, \"threads\": {}, \
+                 \"peak_kv_mib\": {}, \"tok_s\": {}, \"kv_pred_mib\": {kv_pred}, \
+                 \"tok_s_pred\": {tps_pred}}}{}\n",
+                p.slots,
+                p.token_budget,
+                p.threads,
+                p.peak_kv_mib,
+                p.tok_s,
+                if i + 1 < self.points.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Reload a fit emitted by [`CapacityModel::to_json`].
+    pub fn from_json(text: &str) -> Result<CapacityModel> {
+        let j = Json::parse(text).context("parsing capacity fit")?;
+        let coef = |key: &str| -> Result<Vec<f64>> {
+            j.arr_field(key)?
+                .iter()
+                .map(|v| v.as_f64().context("non-numeric coefficient"))
+                .collect()
+        };
+        let points = j
+            .arr_field("points")?
+            .iter()
+            .map(|p| {
+                Ok(CapacityPoint {
+                    slots: p.f64_field("slots")? as usize,
+                    token_budget: p.f64_field("token_budget")? as usize,
+                    threads: p.f64_field("threads")? as usize,
+                    peak_kv_mib: p.f64_field("peak_kv_mib")?,
+                    tok_s: p.f64_field("tok_s")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let m = CapacityModel {
+            kv_coef: coef("kv_coef")?,
+            tps_coef: coef("tps_coef")?,
+            requests: j.f64_field("requests")? as usize,
+            prompt_len: j.f64_field("prompt_len")? as usize,
+            max_new: j.f64_field("max_new")? as usize,
+            points,
+        };
+        ensure!(m.kv_coef.len() == 2, "kv_coef must have 2 entries");
+        ensure!(m.tps_coef.len() == 3, "tps_coef must have 3 entries");
+        Ok(m)
+    }
+}
+
+/// Measure one sweep point: run the workload through a fresh scheduler
+/// at the given shape, tracking peak residency by sampling
+/// [`Scheduler::kv_resident_bytes`] around every tick (self-contained —
+/// no global gauges, so concurrent measurements cannot bleed into each
+/// other).
+pub fn measure_point(
+    sess: &Session,
+    cfg: &SweepCfg,
+    slots: usize,
+    budget: usize,
+    threads: usize,
+) -> Result<CapacityPoint> {
+    crate::tensor::set_threads(threads.max(1));
+    let mut sched = Scheduler::new(SchedulerCfg {
+        max_slots: slots,
+        token_budget: budget,
+        prefix_cache: None,
+        prefill_chunk: 0,
+        spec: None,
+    });
+    let vocab = sess.spec.config.vocab;
+    let mut rng = Rng::new(cfg.seed ^ 0xCAFE);
+    for id in 0..cfg.requests as u64 {
+        let prompt: Vec<i32> =
+            (0..cfg.prompt_len.max(1)).map(|_| rng.range(4, vocab) as i32).collect();
+        sched.submit(Request {
+            id,
+            prompt,
+            max_new: cfg.max_new.max(1),
+            sampler: SamplerCfg { temperature: 0.0, ..SamplerCfg::default() },
+            seed: cfg.seed ^ id,
+            eos: None,
+        })?;
+    }
+    let t0 = std::time::Instant::now();
+    let mut peak = 0u64;
+    let mut new_tokens = 0usize;
+    while sched.pending() > 0 {
+        let done = sched.tick(sess)?;
+        new_tokens += done.iter().map(|c| c.tokens.len()).sum::<usize>();
+        peak = peak.max(sched.kv_resident_bytes());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    Ok(CapacityPoint {
+        slots,
+        token_budget: budget,
+        threads,
+        peak_kv_mib: peak as f64 / (1024.0 * 1024.0),
+        tok_s: new_tokens as f64 / wall.max(1e-9),
+    })
+}
+
+/// Run the full grid. Points are visited in (slots, budget, threads)
+/// lexicographic order; the worker pool is restored to the process
+/// default afterwards.
+pub fn run_sweep(sess: &Session, cfg: &SweepCfg) -> Result<Vec<CapacityPoint>> {
+    let mut points = Vec::new();
+    for &slots in &cfg.slots_list {
+        for &budget in &cfg.budget_list {
+            for &threads in &cfg.threads_list {
+                points.push(measure_point(sess, cfg, slots, budget, threads)?);
+            }
+        }
+    }
+    crate::tensor::set_threads(0); // restore the default pool width
+    Ok(points)
+}
+
+/// Leave-one-out check: fit on all points but the last, report the
+/// held-out point's relative errors as `(kv_rel_err, tps_rel_err)`.
+pub fn holdout_rel_err(
+    points: &[CapacityPoint],
+    requests: usize,
+    prompt_len: usize,
+    max_new: usize,
+) -> Result<(f64, f64)> {
+    ensure!(points.len() >= 3, "holdout needs at least 3 sweep points");
+    let (held, train) = points.split_last().expect("non-empty by the ensure");
+    let m = CapacityModel::fit(train.to_vec(), requests, prompt_len, max_new)?;
+    let kv_pred = m.predict_kv_mib(held.slots, held.token_budget, held.threads);
+    let tps_pred = m.predict_tok_s(held.slots, held.token_budget, held.threads);
+    Ok((
+        (kv_pred - held.peak_kv_mib).abs() / held.peak_kv_mib.abs().max(1e-9),
+        (tps_pred - held.tok_s).abs() / held.tok_s.abs().max(1e-9),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Engine;
+
+    #[test]
+    fn lstsq_recovers_exact_coefficients() {
+        // y = 2 + 3a - 0.5b over a small grid
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for a in 0..4 {
+            for b in 0..3 {
+                rows.push(vec![1.0, a as f64, b as f64]);
+                y.push(2.0 + 3.0 * a as f64 - 0.5 * b as f64);
+            }
+        }
+        let x = lstsq(&rows, &y, 1e-9).unwrap();
+        assert!((x[0] - 2.0).abs() < 1e-6, "{x:?}");
+        assert!((x[1] - 3.0).abs() < 1e-6, "{x:?}");
+        assert!((x[2] + 0.5).abs() < 1e-6, "{x:?}");
+    }
+
+    #[test]
+    fn lstsq_rejects_degenerate_inputs() {
+        assert!(lstsq(&[], &[], 0.0).is_err());
+        assert!(lstsq(&[vec![1.0]], &[1.0, 2.0], 0.0).is_err());
+        assert!(lstsq(&[vec![1.0], vec![1.0, 2.0]], &[1.0, 2.0], 0.0).is_err());
+    }
+
+    #[test]
+    fn synthetic_fit_predicts_a_held_out_point() {
+        // fabricate points obeying the model's own feature map exactly
+        let (requests, prompt_len, max_new) = (8, 8, 8);
+        let cost = prompt_len + max_new;
+        let mk = |slots: usize, budget: usize, threads: usize| {
+            let c = super::eff_conc(slots, budget, requests, cost);
+            CapacityPoint {
+                slots,
+                token_budget: budget,
+                threads,
+                peak_kv_mib: 0.01 + 0.002 * c * cost as f64,
+                tok_s: 50.0 + 40.0 * c + 5.0 * threads as f64,
+            }
+        };
+        let points =
+            vec![mk(1, 4096, 1), mk(2, 4096, 1), mk(4, 4096, 2), mk(6, 4096, 4), mk(8, 64, 1)];
+        let (kv_err, tps_err) =
+            holdout_rel_err(&points, requests, prompt_len, max_new).unwrap();
+        assert!(kv_err < 1e-6, "kv holdout err {kv_err}");
+        assert!(tps_err < 1e-6, "tps holdout err {tps_err}");
+    }
+
+    #[test]
+    fn json_round_trips_the_fit() {
+        let points = vec![
+            CapacityPoint { slots: 1, token_budget: 64, threads: 1, peak_kv_mib: 0.5, tok_s: 10.0 },
+            CapacityPoint { slots: 2, token_budget: 64, threads: 1, peak_kv_mib: 1.0, tok_s: 19.0 },
+            CapacityPoint { slots: 4, token_budget: 64, threads: 2, peak_kv_mib: 2.0, tok_s: 40.0 },
+        ];
+        let m = CapacityModel::fit(points, 8, 8, 8).unwrap();
+        let re = CapacityModel::from_json(&m.to_json()).unwrap();
+        for (a, b) in m.kv_coef.iter().zip(&re.kv_coef) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        for (a, b) in m.tps_coef.iter().zip(&re.tps_coef) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        assert_eq!(re.points.len(), m.points.len());
+        assert_eq!(
+            (re.requests, re.prompt_len, re.max_new),
+            (m.requests, m.prompt_len, m.max_new)
+        );
+        // a prediction computed from the reloaded fit matches
+        let a = m.predict_kv_mib(3, 64, 1);
+        let b = re.predict_kv_mib(3, 64, 1);
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn real_sweep_holdout_is_within_the_pinned_threshold() {
+        // the acceptance bar, in-process: fit 3 measured points on the
+        // tiny model, predict the 4th, require < 15% kv error
+        let mut eng = Engine::host();
+        let sess = crate::runtime::Session::create(&mut eng, "tiny", 5).unwrap();
+        let cfg = SweepCfg {
+            slots_list: vec![1, 2, 3, 4],
+            budget_list: vec![4096],
+            threads_list: vec![1],
+            requests: 4,
+            prompt_len: 6,
+            max_new: 4,
+            seed: 9,
+        };
+        let points = run_sweep(&sess, &cfg).unwrap();
+        assert_eq!(points.len(), 4);
+        let (kv_err, _tps_err) =
+            holdout_rel_err(&points, cfg.requests, cfg.prompt_len, cfg.max_new).unwrap();
+        assert!(kv_err < 0.15, "held-out peak_kv_mib off by {:.1}%", kv_err * 100.0);
+    }
+}

@@ -40,6 +40,10 @@
 //!   → finish) pooled into exact TTFT/ITL percentile distributions,
 //!   and the hot paths are spanned for `--trace-out` Chrome traces —
 //!   see DESIGN.md §7.
+//! - [`capacity`] — capacity planning: sweep the scheduler over a
+//!   (slots × token-budget × threads) grid, least-squares-fit closed
+//!   forms for peak KV residency and throughput, and answer
+//!   `misa capacity --predict` sizing queries from the saved fit.
 //!
 //! Memory accounting: one slot's KV cache holds
 //! `2 * n_layers * capacity * kv_dim` f32s (`KvCache::bytes`), where
@@ -55,12 +59,14 @@
 #![warn(missing_docs)]
 
 pub mod cache_store;
+pub mod capacity;
 pub mod generate;
 pub mod sampler;
 pub mod scheduler;
 pub mod spec;
 
 pub use cache_store::{CacheStats, CacheStore, CacheStoreCfg};
+pub use capacity::{CapacityModel, CapacityPoint, SweepCfg};
 pub use generate::{generate, GenerateCfg, Generation};
 pub use sampler::{argmax, sample, SamplerCfg};
 pub use scheduler::{Completion, FinishReason, Request, Scheduler, SchedulerCfg};

@@ -107,6 +107,11 @@ pub enum FinishReason {
     /// vocab — only checkable once the session is known). The request
     /// completes with no tokens instead of erroring the whole run.
     Rejected,
+    /// Cancelled by the caller ([`Scheduler::cancel`]) while queued,
+    /// prefilling, or decoding. The completion carries the tokens
+    /// generated before cancellation — a prefix of what the request
+    /// would have produced.
+    Cancelled,
 }
 
 /// A finished request with its per-request serving metrics.
@@ -129,7 +134,8 @@ pub struct Completion {
     /// token after the first. A speculative tick emitting `n` tokens
     /// contributes `n` samples of `gap / n`, so spec on/off produce
     /// comparable distributions (`len == tokens.len() - 1` either
-    /// way; empty for rejected requests).
+    /// way; empty for rejected requests, and covering only the tokens
+    /// actually emitted for cancelled ones).
     pub itl_ms: Vec<f64>,
     /// Why the request finished.
     pub finish: FinishReason,
@@ -325,6 +331,37 @@ impl Scheduler {
         );
         self.queue.push_back((req, Timeline::start()));
         Ok(())
+    }
+
+    /// Cancel an outstanding request wherever it currently lives —
+    /// queued, mid-prefill, or actively decoding. Returns a
+    /// [`FinishReason::Cancelled`] completion carrying whatever tokens
+    /// were generated so far (always a prefix of what the request
+    /// would have produced), or `None` when the id is unknown or
+    /// already completed. Admission charges are released immediately —
+    /// the freed budget and slot admit the next queued request on the
+    /// very next [`Self::tick`] — and the cancelled request's KV ring
+    /// is dropped here, so measured residency falls at the next tick's
+    /// gauge update. Cancellation never perturbs the survivors: each
+    /// slot samples from its own seed stream, so the remaining
+    /// requests' output is bit-identical to a run that never admitted
+    /// the cancelled one (test-pinned).
+    pub fn cancel(&mut self, id: u64) -> Option<Completion> {
+        if let Some(i) = self.queue.iter().position(|(r, _)| r.id == id) {
+            let (req, tl) = self.queue.remove(i).expect("index from position");
+            return Some(self.cancelled(req, tl, 0, Vec::new()));
+        }
+        if let Some(i) = self.prefilling.iter().position(|j| j.req.id == id) {
+            let job = self.prefilling.remove(i).expect("index from position");
+            self.in_flight_tokens -= job.cost;
+            return Some(self.cancelled(job.req, job.tl, job.reused, Vec::new()));
+        }
+        if let Some(i) = self.active.iter().position(|s| s.req.id == id) {
+            let slot = self.active.remove(i);
+            self.in_flight_tokens -= slot.cost;
+            return Some(self.cancelled(slot.req, slot.tl, slot.reused, slot.generated));
+        }
+        None
     }
 
     /// Requests still queued, prefilling, or actively decoding.
@@ -775,6 +812,44 @@ impl Scheduler {
         }
     }
 
+    /// Build a cancellation completion: stamp the timeline and log a
+    /// metrics record. The caller has already released the budget
+    /// charge; dropping the request's state frees its KV ring.
+    /// Cancelled requests are deliberately *not* pooled into the
+    /// TTFT/ITL latency samples — an operator-aborted request would
+    /// skew the serving percentiles the bench reports.
+    fn cancelled(
+        &mut self,
+        req: Request,
+        mut tl: Timeline,
+        reused: usize,
+        tokens: Vec<i32>,
+    ) -> Completion {
+        tl.finish();
+        let now = tl.finished.expect("finish() just stamped");
+        let first = tl.first_token.unwrap_or(now);
+        let ttft_s = first.saturating_duration_since(tl.enqueued).as_secs_f64();
+        obs::metrics::counter_add("serve.cancellations", 1);
+        self.metrics.log(
+            req.id,
+            &[
+                ("ttft_ms", ttft_s * 1e3),
+                ("new_tokens", tokens.len() as f64),
+                ("cancelled", 1.0),
+            ],
+        );
+        Completion {
+            id: req.id,
+            prompt_len: req.prompt.len(),
+            tokens,
+            reused_tokens: reused,
+            ttft_s,
+            decode_tps: 0.0,
+            itl_ms: tl.itl_ms,
+            finish: FinishReason::Cancelled,
+        }
+    }
+
     /// Drive the queue to empty; returns completions in finish order.
     pub fn run(&mut self, sess: &Session) -> Result<Vec<Completion>> {
         let mut out = Vec::new();
@@ -909,6 +984,63 @@ mod tests {
         assert_eq!(done[0].tokens.len(), 4);
         assert_eq!(done[2].tokens.len(), 4);
         assert_eq!(sched.in_flight_tokens(), 0);
+    }
+
+    #[test]
+    fn cancel_releases_budget_and_admits_waiters() {
+        let sess = tiny_session();
+        // each request costs 2 + 6 = 8 positions; budget 8 → one at a time
+        let mut sched = Scheduler::new(SchedulerCfg {
+            max_slots: 4,
+            token_budget: 8,
+            ..SchedulerCfg::default()
+        });
+        sched.submit(req(0, vec![1, 5], 6)).unwrap();
+        sched.submit(req(1, vec![1, 6], 6)).unwrap();
+        sched.tick(&sess).unwrap();
+        assert_eq!(sched.in_flight_tokens(), 8, "only request 0 fits the budget");
+        // cancel the active request: budget frees immediately, the
+        // waiter is admitted on the very next tick
+        let c = sched.cancel(0).expect("request 0 is active");
+        assert_eq!(c.finish, FinishReason::Cancelled);
+        assert!(!c.tokens.is_empty(), "one tick generated at least the first token");
+        assert_eq!(sched.in_flight_tokens(), 0);
+        sched.tick(&sess).unwrap();
+        assert_eq!(sched.in_flight_tokens(), 8, "the waiter took the freed budget");
+        let done = sched.run(&sess).unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 1);
+        assert_eq!(done[0].finish, FinishReason::MaxNew);
+        assert_eq!(sched.in_flight_tokens(), 0);
+    }
+
+    #[test]
+    fn cancel_covers_every_lifecycle_stage() {
+        let sess = tiny_session();
+        let mut sched = Scheduler::new(SchedulerCfg {
+            max_slots: 1,
+            token_budget: 64,
+            prefill_chunk: 2, // 6-token prompts take several ticks
+            spec: None,
+            ..SchedulerCfg::default()
+        });
+        // queued (never admitted): no budget was charged
+        sched.submit(req(0, vec![1, 2, 3, 4, 5, 6], 4)).unwrap();
+        sched.submit(req(1, vec![1, 2, 3, 4, 5, 7], 4)).unwrap();
+        let c = sched.cancel(1).expect("request 1 is still queued");
+        assert_eq!((c.finish, c.tokens.len()), (FinishReason::Cancelled, 0));
+        assert_eq!(sched.in_flight_tokens(), 0);
+        // mid-prefill: one tick prefills 2 of 6 prompt rows
+        sched.tick(&sess).unwrap();
+        assert_eq!(sched.pending(), 1, "request 0 is mid-prefill");
+        let c = sched.cancel(0).expect("request 0 is prefilling");
+        assert_eq!((c.finish, c.tokens.len()), (FinishReason::Cancelled, 0));
+        assert_eq!(sched.in_flight_tokens(), 0);
+        assert_eq!(sched.pending(), 0);
+        // unknown / already-cancelled ids are None, state is untouched
+        assert!(sched.cancel(0).is_none());
+        assert!(sched.cancel(99).is_none());
+        assert_eq!(sched.metrics.series("cancelled").len(), 2);
     }
 
     #[test]

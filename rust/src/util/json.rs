@@ -1,0 +1,325 @@
+//! Minimal JSON parser — enough to re-read this tool's own emitted
+//! artifacts (bench records, capacity fits) without external crates.
+//!
+//! The writer side ([`crate::util::BenchRecord`] and the capacity
+//! model's hand-rolled emit) produces plain objects/arrays of numbers
+//! and strings, so the parser covers exactly standard JSON: objects,
+//! arrays, strings with escapes, `f64` numbers, `true`/`false`/`null`.
+//! Key order is preserved (objects are association lists, not maps);
+//! duplicate keys resolve to the first occurrence on [`Json::get`].
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+/// A parsed JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    /// `null` (the writer uses it for non-finite numbers).
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// Any JSON number, as `f64`.
+    Num(f64),
+    /// A string, escapes decoded.
+    Str(String),
+    /// An array.
+    Arr(Vec<Json>),
+    /// An object, as an association list in source order.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Parse a complete JSON document (trailing garbage is an error).
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let v = p.value()?;
+        p.skip_ws();
+        ensure!(p.pos == p.bytes.len(), "trailing garbage at byte {}", p.pos);
+        Ok(v)
+    }
+
+    /// Field lookup on an object (`None` on other variants or a
+    /// missing key).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kvs) => kvs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// The number, if this is one.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// The string, if this is one.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The elements, if this is an array.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// The boolean, if this is one.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Required numeric field of an object, with a named error.
+    pub fn f64_field(&self, key: &str) -> Result<f64> {
+        self.get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("missing or non-numeric field {key:?}"))
+    }
+
+    /// Required string field of an object, with a named error.
+    pub fn str_field(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("missing or non-string field {key:?}"))
+    }
+
+    /// Required array field of an object, with a named error.
+    pub fn arr_field(&self, key: &str) -> Result<&[Json]> {
+        self.get(key)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing or non-array field {key:?}"))
+    }
+}
+
+/// Escape a string for embedding in emitted JSON — the writer-side
+/// counterpart of the parser's escape decoding (one escaping routine
+/// repo-wide, shared with [`crate::util::bench`]'s writers).
+pub fn escape(s: &str) -> String {
+    crate::util::bench::escape(s)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn eat(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!("expected {:?} at byte {}", b as char, self.pos)
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.keyword("true").map(|_| Json::Bool(true)),
+            Some(b'f') => self.keyword("false").map(|_| Json::Bool(false)),
+            Some(b'n') => self.keyword("null").map(|_| Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => bail!("unexpected input at byte {}", self.pos),
+        }
+    }
+
+    fn keyword(&mut self, kw: &str) -> Result<()> {
+        if self.bytes[self.pos..].starts_with(kw.as_bytes()) {
+            self.pos += kw.len();
+            Ok(())
+        } else {
+            bail!("bad literal at byte {}", self.pos)
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some(c) if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E')
+        ) {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).expect("ascii number chars");
+        let x: f64 = s.parse().map_err(|_| anyhow!("bad number {s:?} at byte {start}"))?;
+        Ok(Json::Num(x))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => bail!("unterminated string"),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let esc = self.peek().ok_or_else(|| anyhow!("unterminated escape"))?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000C}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            ensure!(self.pos + 4 <= self.bytes.len(), "truncated \\u escape");
+                            let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+                                .map_err(|_| anyhow!("non-ascii \\u escape"))?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| anyhow!("bad \\u escape {hex:?}"))?;
+                            self.pos += 4;
+                            // this tool's own artifacts never emit
+                            // surrogate pairs; lone surrogates decode
+                            // to the replacement character
+                            out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                        }
+                        other => bail!("unknown escape \\{}", other as char),
+                    }
+                }
+                Some(_) => {
+                    let s = std::str::from_utf8(&self.bytes[self.pos..])
+                        .map_err(|_| anyhow!("invalid utf-8 in string"))?;
+                    let ch = s.chars().next().expect("non-empty by construction");
+                    out.push(ch);
+                    self.pos += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            out.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(out));
+                }
+                _ => bail!("expected ',' or ']' at byte {}", self.pos),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            let v = self.value()?;
+            out.push((k, v));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(out));
+                }
+                _ => bail!("expected ',' or '}}' at byte {}", self.pos),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_nested_documents() {
+        let doc = r#"{"bin": "capacity", "n": -3.5e2, "ok": true, "miss": null,
+                      "pts": [{"x": 1, "y": 2.5}, {"x": 2, "y": 5.0}],
+                      "tags": ["a", "b"]}"#;
+        let j = Json::parse(doc).unwrap();
+        assert_eq!(j.str_field("bin").unwrap(), "capacity");
+        assert_eq!(j.f64_field("n").unwrap(), -350.0);
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("miss"), Some(&Json::Null));
+        let pts = j.arr_field("pts").unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(pts[1].f64_field("y").unwrap(), 5.0);
+        assert_eq!(j.arr_field("tags").unwrap()[0].as_str(), Some("a"));
+        assert!(j.get("absent").is_none());
+        assert!(j.f64_field("bin").is_err(), "type mismatch must be an error");
+    }
+
+    #[test]
+    fn string_escapes_round_trip() {
+        let original = "line1\nline2\t\"quoted\" back\\slash";
+        let doc = format!("{{\"s\": \"{}\"}}", escape(original));
+        let j = Json::parse(&doc).unwrap();
+        assert_eq!(j.str_field("s").unwrap(), original);
+        // \u escapes decode
+        let j = Json::parse(r#""Aé""#).unwrap();
+        assert_eq!(j.as_str(), Some("Aé"));
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for bad in [
+            "", "{", "[1, 2", "{\"a\": }", "{\"a\": 1,}", "nul", "1 2", "{\"a\" 1}",
+            "\"unterminated", "[1, 2]]",
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn parses_a_bench_record_line() {
+        // the exact shape BenchRecord::to_json emits (non-finite → null)
+        let rec = crate::util::BenchRecord::new("t")
+            .tag("mode", "fuzz")
+            .num("ops", 2048.0)
+            .num("bad", f64::NAN);
+        let j = Json::parse(&rec.to_json()).unwrap();
+        assert_eq!(j.str_field("mode").unwrap(), "fuzz");
+        assert_eq!(j.f64_field("ops").unwrap(), 2048.0);
+        assert_eq!(j.get("bad"), Some(&Json::Null));
+    }
+}

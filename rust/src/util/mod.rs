@@ -5,11 +5,13 @@
 //! here at the minimal size this project needs.
 
 pub mod bench;
+pub mod json;
 pub mod metrics;
 pub mod prop;
 pub mod rng;
 
 pub use bench::BenchRecord;
+pub use json::Json;
 pub use metrics::MetricsSink;
 pub use rng::Rng;
 

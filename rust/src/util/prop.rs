@@ -6,6 +6,13 @@
 //! Coordinator invariants (routing, batching, sampler state) are tested
 //! through this harness — see the paper-invariant tests in
 //! `optim::sampler`, `memory`, and `coordinator`.
+//!
+//! Seed and case count are overridable from the environment so a CI
+//! failure reproduces locally in one copy-paste: `MISA_PROP_SEED`
+//! (decimal or `0x…` hex) replaces the property's built-in seed and
+//! `MISA_PROP_CASES` the case count. On failure the panic message
+//! includes exactly that replay command, pre-filled with the failing
+//! case's derived seed so it replays as case 0 of a 1-case run.
 
 use super::rng::Rng;
 
@@ -13,11 +20,46 @@ use super::rng::Rng;
 /// sampler or allocator).
 pub const DEFAULT_CASES: usize = 200;
 
-/// Run `f` over `cases` randomized inputs. On failure the panic message
-/// includes the case index and the master seed so the case replays.
-pub fn check<F: FnMut(&mut Rng)>(name: &str, seed: u64, cases: usize, mut f: F) {
+/// Multiplier deriving each case's RNG seed from the master seed
+/// (golden-ratio stride, the same constant `Rng::fork` uses).
+const CASE_STRIDE: u64 = 0x9E3779B97F4A7C15;
+
+/// Parse an environment variable as `u64`, accepting decimal or `0x…`
+/// hex. Unset or empty yields `None`; a malformed value panics (a typo
+/// must not silently run a different seed than the one on screen).
+pub fn env_u64(name: &str) -> Option<u64> {
+    let raw = std::env::var(name).ok()?;
+    let s = raw.trim();
+    if s.is_empty() {
+        return None;
+    }
+    let parsed = match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16),
+        None => s.parse(),
+    };
+    match parsed {
+        Ok(v) => Some(v),
+        Err(_) => panic!("{name}={raw:?} is not a u64 (decimal or 0x-hex)"),
+    }
+}
+
+/// Run `f` over `cases` randomized inputs, honoring the
+/// `MISA_PROP_SEED` / `MISA_PROP_CASES` environment overrides. On
+/// failure the panic message includes the case index, the master seed,
+/// and a one-line replay command.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, seed: u64, cases: usize, f: F) {
+    let seed = env_u64("MISA_PROP_SEED").unwrap_or(seed);
+    let cases = env_u64("MISA_PROP_CASES").map(|c| c as usize).unwrap_or(cases);
+    check_with(name, seed, cases, f)
+}
+
+/// [`check`] without the environment overrides — the deterministic core
+/// (used by the harness's own self-tests, which must not change shape
+/// when a user exports `MISA_PROP_*` globally).
+pub fn check_with<F: FnMut(&mut Rng)>(name: &str, seed: u64, cases: usize, mut f: F) {
     for case in 0..cases {
-        let mut rng = Rng::new(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let case_seed = seed ^ (case as u64).wrapping_mul(CASE_STRIDE);
+        let mut rng = Rng::new(case_seed);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
         if let Err(e) = result {
             let msg = e
@@ -25,7 +67,12 @@ pub fn check<F: FnMut(&mut Rng)>(name: &str, seed: u64, cases: usize, mut f: F) 
                 .cloned()
                 .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
                 .unwrap_or_else(|| "<non-string panic>".into());
-            panic!("property {name:?} failed at case {case} (seed {seed}): {msg}");
+            // case_seed ^ 0*STRIDE == case_seed: the failing case replays
+            // as case 0 of a 1-case run under these env overrides
+            panic!(
+                "property {name:?} failed at case {case} (seed {seed}): {msg}\n  \
+                 replay: MISA_PROP_SEED={case_seed:#x} MISA_PROP_CASES=1 cargo test {name}"
+            );
         }
     }
 }
@@ -49,16 +96,56 @@ mod tests {
     #[test]
     fn passing_property_runs_all_cases() {
         let mut n = 0;
-        check("count", 1, 50, |_| n += 1);
+        check_with("count", 1, 50, |_| n += 1);
         assert_eq!(n, 50);
     }
 
     #[test]
     #[should_panic(expected = "failed at case")]
     fn failing_property_reports_case() {
-        check("fails", 1, 50, |rng| {
+        check_with("fails", 1, 50, |rng| {
             assert!(rng.f64() < 0.9, "drew a large value");
         });
+    }
+
+    #[test]
+    fn failure_message_carries_a_replay_command() {
+        let got = std::panic::catch_unwind(|| {
+            check_with("replayable", 7, 50, |rng| {
+                assert!(rng.f64() < 0.5, "coin came up tails");
+            });
+        });
+        let msg = match got {
+            Ok(()) => panic!("a coin-flip property cannot pass 50 cases"),
+            Err(e) => e.downcast_ref::<String>().cloned().unwrap(),
+        };
+        assert!(msg.contains("replay: MISA_PROP_SEED=0x"), "{msg}");
+        assert!(msg.contains("MISA_PROP_CASES=1"), "{msg}");
+        // the advertised seed really is the failing case's seed: running
+        // one case with it must hit the same failure
+        let seed_hex = msg.split("MISA_PROP_SEED=0x").nth(1).unwrap();
+        let seed = u64::from_str_radix(seed_hex.split_whitespace().next().unwrap(), 16).unwrap();
+        let replay = std::panic::catch_unwind(|| {
+            check_with("replayable", seed, 1, |rng| {
+                assert!(rng.f64() < 0.5, "coin came up tails");
+            });
+        });
+        assert!(replay.is_err(), "replay seed {seed:#x} did not reproduce");
+    }
+
+    #[test]
+    fn env_u64_parses_decimal_and_hex() {
+        // set/remove env vars under a lock-free test harness: use
+        // process-unique names so parallel tests cannot collide
+        let name = format!("MISA_PROP_TEST_{}", std::process::id());
+        assert_eq!(env_u64(&name), None);
+        std::env::set_var(&name, "42");
+        assert_eq!(env_u64(&name), Some(42));
+        std::env::set_var(&name, "0xC0FFEE");
+        assert_eq!(env_u64(&name), Some(0xC0FFEE));
+        std::env::set_var(&name, "  ");
+        assert_eq!(env_u64(&name), None);
+        std::env::remove_var(&name);
     }
 
     #[test]

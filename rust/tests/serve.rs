@@ -786,3 +786,33 @@ fn spec_scheduler_matches_plain_solo_across_thread_counts() {
     }
     misa::tensor::set_threads(0);
 }
+
+// ---- differential property tests (fuzz-harness reference models) ----
+//
+// The `misa::fuzz` targets pit each serving core against a naive
+// reference model after every op. Running them here under several
+// fixed seeds turns them into ordinary property tests: KvCache vs a
+// dense Vec-of-rows model (fork/truncate/copy legality, bitwise window
+// reads, chunk-dedup residency), and the prompt trie vs a flat LCP
+// scan (lookup choice, LRU eviction, stats counters).
+
+#[test]
+fn kvcache_matches_its_dense_reference_over_random_op_streams() {
+    use misa::fuzz::{fuzz_kvcache, FuzzCfg};
+    for seed in [1u64, 0xA5A5, 0xDEAD_BEEF] {
+        let stats = fuzz_kvcache(FuzzCfg { seed, ops: 1200 }).unwrap();
+        assert!(stats.checks as usize > stats.ops, "seed {seed:#x}: no invariant coverage");
+        assert!(stats.count("fork") > 0, "seed {seed:#x}: stream never forked");
+        assert!(stats.count("truncate") > 0, "seed {seed:#x}: stream never truncated");
+    }
+}
+
+#[test]
+fn prompt_trie_matches_a_flat_scan_reference_over_random_op_streams() {
+    use misa::fuzz::{fuzz_trie, FuzzCfg};
+    for seed in [2u64, 0x5A5A, 0xFEED_FACE] {
+        let stats = fuzz_trie(FuzzCfg { seed, ops: 1000 }).unwrap();
+        assert!(stats.count("insert_stored") > 0, "seed {seed:#x}: nothing was stored");
+        assert!(stats.count("lookup_hit") > 0, "seed {seed:#x}: no lookup ever hit");
+    }
+}
