@@ -112,18 +112,58 @@ pub fn replay_cmd(target: &str, cfg: FuzzCfg) -> String {
     )
 }
 
+/// On any failure, write the flight recorder's ring (when it is on)
+/// next to the replay command, so the violation ships its own
+/// forensics: the last thousands of scheduler/span/pool events in
+/// order. Returns the note to append to the error message.
+fn flight_note() -> String {
+    match crate::obs::flight::dump_to_configured() {
+        Some(path) => format!("\n  flight dump: {}", path.display()),
+        None if crate::obs::flight::enabled() => format!(
+            "\n  flight recorder captured {} event(s); pass --flight-out FILE \
+             (or set MISA_FLIGHT_OUT) to dump them on failure",
+            crate::obs::flight::recorded()
+        ),
+        None => String::new(),
+    }
+}
+
 /// Run a fuzz body, converting both `Err` returns and panics (a
 /// debug-assert or index bug inside the target counts as a violation,
 /// not a crash) into an error whose message carries the replay
-/// command for exactly this `(target, seed, ops)`.
+/// command for exactly this `(target, seed, ops)` — plus a flight
+/// dump when the recorder is on.
+///
+/// `MISA_FUZZ_INJECT=1` turns a clean run into an injected violation
+/// *after* the body completes: a deterministic tripwire so CI can
+/// assert the whole failure path (replay line + flight dump) without
+/// depending on a real bug existing.
 pub fn run_target<F>(target: &str, cfg: FuzzCfg, body: F) -> Result<FuzzStats>
 where
     F: FnOnce() -> Result<FuzzStats>,
 {
     let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(body));
     match outcome {
-        Ok(Ok(stats)) => Ok(stats),
-        Ok(Err(e)) => Err(anyhow!("fuzz target {target:?}: {e:#}\n  {}", replay_cmd(target, cfg))),
+        Ok(Ok(stats)) => {
+            if std::env::var("MISA_FUZZ_INJECT").is_ok_and(|v| {
+                let v = v.trim();
+                !v.is_empty() && v != "0"
+            }) {
+                return Err(anyhow!(
+                    "fuzz target {target:?}: injected violation (MISA_FUZZ_INJECT) after {} \
+                     clean ops\n  {}{}",
+                    stats.ops,
+                    replay_cmd(target, cfg),
+                    flight_note(),
+                ));
+            }
+            Ok(stats)
+        }
+        Ok(Err(e)) => Err(anyhow!(
+            "fuzz target {target:?}: {e:#}\n  {}{}",
+            replay_cmd(target, cfg),
+            flight_note(),
+        )),
         Err(payload) => {
             let msg = payload
                 .downcast_ref::<String>()
@@ -131,8 +171,9 @@ where
                 .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
                 .unwrap_or_else(|| "<non-string panic>".into());
             Err(anyhow!(
-                "fuzz target {target:?} panicked: {msg}\n  {}",
-                replay_cmd(target, cfg)
+                "fuzz target {target:?} panicked: {msg}\n  {}{}",
+                replay_cmd(target, cfg),
+                flight_note(),
             ))
         }
     }
@@ -142,11 +183,15 @@ where
 mod tests {
     use super::*;
 
+    /// Serializes sibling tests that set the fuzz env knobs — or call
+    /// [`run_target`], which reads `MISA_FUZZ_INJECT` — against each
+    /// other.
+    static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
     #[test]
     fn from_env_prefers_overrides() {
-        // the shared env knobs are read by name; use the real names but
-        // restore them, serialized by a local lock against sibling tests
-        static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+        // the shared env knobs are read by name; use the real names
+        // but restore them
         let _guard = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
         std::env::remove_var("MISA_FUZZ_SEED");
         std::env::remove_var("MISA_FUZZ_OPS");
@@ -173,6 +218,7 @@ mod tests {
 
     #[test]
     fn violations_carry_a_replay_command() {
+        let _guard = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
         let cfg = FuzzCfg { seed: 0xAB, ops: 9 };
         let err = run_target("kvcache", cfg, || Err(anyhow!("len mismatch"))).unwrap_err();
         let msg = format!("{err:#}");
@@ -189,6 +235,8 @@ mod tests {
 
     #[test]
     fn clean_runs_pass_stats_through() {
+        let _guard = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        std::env::remove_var("MISA_FUZZ_INJECT");
         let cfg = FuzzCfg::default();
         let stats = run_target("kvcache", cfg, || {
             let mut s = FuzzStats { ops: 5, checks: 10, ..FuzzStats::default() };
@@ -198,5 +246,35 @@ mod tests {
         .unwrap();
         assert_eq!(stats.ops, 5);
         assert_eq!(stats.count("append"), 5);
+    }
+
+    #[test]
+    fn injected_violation_ships_replay_line_and_flight_dump() {
+        let _guard = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let _gate = crate::obs::span::TEST_GATE.lock().unwrap_or_else(|e| e.into_inner());
+        let tmp = std::env::temp_dir()
+            .join(format!("misa_flight_inject_{}.json", std::process::id()));
+        crate::obs::flight::enable();
+        crate::obs::flight::set_dump_path(&tmp);
+        crate::obs::flight::record("test", "pre_failure_op", 7, 0);
+        std::env::set_var("MISA_FUZZ_INJECT", "1");
+        let err = run_target("trie", FuzzCfg { seed: 0x7E, ops: 3 }, || {
+            Ok(FuzzStats { ops: 3, ..FuzzStats::default() })
+        })
+        .unwrap_err();
+        std::env::remove_var("MISA_FUZZ_INJECT");
+        crate::obs::flight::disable();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("injected violation"), "{msg}");
+        assert!(msg.contains("misa fuzz --target trie --seed 0x7e --ops 3"), "{msg}");
+        assert!(msg.contains(&format!("flight dump: {}", tmp.display())), "{msg}");
+        // the dump is well-formed JSON containing the pre-failure event
+        let body = std::fs::read_to_string(&tmp).unwrap();
+        let doc = crate::util::json::Json::parse(&body).unwrap();
+        let events = doc.arr_field("events").unwrap();
+        assert!(events
+            .iter()
+            .any(|e| e.str_field("name").is_ok_and(|n| n == "pre_failure_op")));
+        let _ = std::fs::remove_file(&tmp);
     }
 }

@@ -66,8 +66,13 @@ fn usage() -> ! {
          \x20 misa info [--artifacts DIR] [--backend B]\n\n\
          Every subcommand also takes --threads N (GEMM worker-pool width;\n\
          default: MISA_THREADS, else 1), --trace-out FILE (record spans and\n\
-         write a Chrome trace-event JSON on exit; also MISA_TRACE=1) and\n\
-         --metrics-out FILE (Prometheus-style metrics dump on exit).\n\
+         write a Chrome trace-event JSON on exit; also MISA_TRACE=1),\n\
+         --metrics-out FILE (Prometheus-style metrics dump on exit),\n\
+         --profile-out FILE (folded wall-clock stacks from the sampling\n\
+         profiler; rate MISA_PROF_HZ, default 97), --roofline-out FILE\n\
+         (per-core/per-module GEMM achieved-vs-peak GFLOP/s JSON) and\n\
+         --flight-out FILE (flight-recorder ring dumped on exit and on\n\
+         panic; also MISA_FLIGHT=1 / MISA_FLIGHT_OUT=FILE).\n\
          MISA_LOG=error|warn|info|debug sets stderr log verbosity;\n\
          MISA_SIMD=0 forces the scalar GEMM microkernel (bit-identical,\n\
          AVX2 is used when detected otherwise).\n"
@@ -83,6 +88,7 @@ const VALUED_FLAGS: &[&str] = &[
     "max-new", "temp", "top-k", "top-p", "eos", "requests", "prompt-len", "shared-prefix",
     "slots", "token-budget", "prefix-cache-cap", "prefix-cache-entries", "prefill-chunk",
     "draft-len", "spec-ngram", "threads", "json", "trace-out", "metrics-out",
+    "profile-out", "roofline-out", "flight-out",
     "report-out", "target", "ops", "slots-list", "budget-list", "threads-list", "fit",
 ];
 
@@ -158,29 +164,50 @@ fn apply_threads(args: &Args) -> Result<()> {
 }
 
 /// Destination files for the run's observability exports, resolved
-/// from `--trace-out` / `--metrics-out` before the subcommand runs.
+/// from `--trace-out` / `--metrics-out` / `--profile-out` /
+/// `--roofline-out` / `--flight-out` before the subcommand runs.
 struct ObsOut {
     trace: Option<PathBuf>,
     metrics: Option<PathBuf>,
+    profile: Option<PathBuf>,
+    roofline: Option<PathBuf>,
+    flight: Option<PathBuf>,
 }
 
 /// `--trace-out FILE` switches span recording on for the whole process
 /// (same effect as `MISA_TRACE=1`); `--metrics-out FILE` needs no
-/// enablement — the metrics registry is always live. The export itself
-/// happens in [`finish_obs`] after the subcommand completes.
-fn apply_obs(args: &Args) -> ObsOut {
+/// enablement — the metrics registry is always live. `--profile-out` /
+/// `--roofline-out` start the sampling profiler at the `MISA_PROF_HZ`
+/// rate; `--flight-out` switches the flight recorder on, points the
+/// panic hook and the fuzz failure path at FILE, and dumps the ring
+/// there at exit. The exports themselves happen in [`finish_obs`]
+/// after the subcommand completes.
+fn apply_obs(args: &Args) -> Result<ObsOut> {
     let out = ObsOut {
         trace: args.flags.get("trace-out").map(PathBuf::from),
         metrics: args.flags.get("metrics-out").map(PathBuf::from),
+        profile: args.flags.get("profile-out").map(PathBuf::from),
+        roofline: args.flags.get("roofline-out").map(PathBuf::from),
+        flight: args.flags.get("flight-out").map(PathBuf::from),
     };
     if out.trace.is_some() {
         misa::obs::span::enable_tracing();
     }
-    out
+    if out.profile.is_some() || out.roofline.is_some() {
+        misa::obs::profile::start(misa::obs::profile::default_hz())?;
+    }
+    if let Some(path) = &out.flight {
+        misa::obs::flight::enable();
+        misa::obs::flight::set_dump_path(path);
+        misa::obs::flight::install_panic_hook();
+    }
+    Ok(out)
 }
 
-/// Write the Chrome trace and/or the Prometheus-style dump. Runs even
-/// when the subcommand failed, so the trace of a failing run survives.
+/// Write the Chrome trace, the Prometheus-style dump, the folded
+/// profiler stacks, the roofline JSON, and/or the flight-recorder
+/// ring. Runs even when the subcommand failed, so the trace of a
+/// failing run survives.
 fn finish_obs(out: &ObsOut) -> Result<()> {
     if let Some(path) = &out.trace {
         let n = misa::obs::span::export_chrome_trace(path)?;
@@ -193,6 +220,30 @@ fn finish_obs(out: &ObsOut) -> Result<()> {
         std::fs::write(path, misa::obs::metrics::prometheus_dump())
             .with_context(|| format!("writing metrics dump {path:?}"))?;
         log_info!("metrics written: {}", path.display());
+    }
+    if out.profile.is_some() || out.roofline.is_some() {
+        misa::obs::profile::stop();
+        let rep = misa::obs::profile::report();
+        if let Some(path) = &out.profile {
+            std::fs::write(path, rep.folded.render_folded())
+                .with_context(|| format!("writing folded stacks {path:?}"))?;
+            log_info!(
+                "profile written: {} ({} samples, {} stacks, {} torn)",
+                path.display(),
+                rep.folded.samples,
+                rep.folded.distinct(),
+                rep.folded.torn,
+            );
+        }
+        if let Some(path) = &out.roofline {
+            std::fs::write(path, rep.kernels.render_roofline_json())
+                .with_context(|| format!("writing roofline {path:?}"))?;
+            log_info!("roofline written: {}", path.display());
+        }
+    }
+    if let Some(path) = &out.flight {
+        let n = misa::obs::flight::dump_to(path)?;
+        log_info!("flight dump written: {} ({n} events)", path.display());
     }
     Ok(())
 }
@@ -1213,7 +1264,13 @@ fn main() {
         log_error!("{e:#}");
         usage();
     }
-    let obs = apply_obs(&args);
+    let obs = match apply_obs(&args) {
+        Ok(o) => o,
+        Err(e) => {
+            log_error!("{e:#}");
+            usage();
+        }
+    };
     let result = match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
         Some("generate") => cmd_generate(&args),
@@ -1471,7 +1528,7 @@ mod tests {
             metrics.to_str().unwrap(),
         ]))
         .unwrap();
-        let out = apply_obs(&a);
+        let out = apply_obs(&a).unwrap();
         assert!(misa::obs::span::tracing_enabled(), "--trace-out enables spans");
         {
             let _sp = misa::span!("cli_obs_test", "test");
@@ -1488,9 +1545,60 @@ mod tests {
         let _ = std::fs::remove_file(&metrics);
         // absent flags resolve to no outputs and finish_obs is a no-op
         let a = parse_args(&v(&["bench"])).unwrap();
-        let out = apply_obs(&a);
+        let out = apply_obs(&a).unwrap();
         assert!(out.trace.is_none() && out.metrics.is_none());
+        assert!(out.profile.is_none() && out.roofline.is_none() && out.flight.is_none());
         finish_obs(&out).unwrap();
+    }
+
+    #[test]
+    fn forensics_flags_parse_and_export() {
+        let dir = std::env::temp_dir();
+        let profile = dir.join("misa_cli_prof.folded");
+        let roofline = dir.join("misa_cli_roofline.json");
+        let flight = dir.join("misa_cli_flight.json");
+        let a = parse_args(&v(&[
+            "bench-serve",
+            "--profile-out",
+            profile.to_str().unwrap(),
+            "--roofline-out",
+            roofline.to_str().unwrap(),
+            "--flight-out",
+            flight.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let out = apply_obs(&a).unwrap();
+        assert!(misa::obs::profile::running(), "--profile-out starts the sampler");
+        assert!(misa::obs::flight::enabled(), "--flight-out enables the recorder");
+        assert_eq!(misa::obs::flight::dump_path().as_deref(), Some(flight.as_path()));
+        // hold a span open long enough for at least one sample, and
+        // drop a flight event so the dump is non-trivial
+        {
+            let _sp = misa::span!("cli_forensics_test", "test");
+            let t0 = std::time::Instant::now();
+            while misa::obs::profile::report().folded.samples == 0 {
+                assert!(t0.elapsed().as_secs() < 5, "sampler never fired");
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        }
+        misa::obs::flight::record("test", "cli_forensics", 1, 2);
+        finish_obs(&out).unwrap();
+        assert!(!misa::obs::profile::running(), "finish_obs stops the sampler");
+        misa::obs::flight::disable();
+        let folded = std::fs::read_to_string(&profile).unwrap();
+        assert!(!folded.is_empty());
+        let roof = std::fs::read_to_string(&roofline).unwrap();
+        misa::util::json::Json::parse(&roof).unwrap();
+        let dump = std::fs::read_to_string(&flight).unwrap();
+        let doc = misa::util::json::Json::parse(&dump).unwrap();
+        assert!(doc
+            .arr_field("events")
+            .unwrap()
+            .iter()
+            .any(|e| e.str_field("name").is_ok_and(|n| n == "cli_forensics")));
+        for p in [&profile, &roofline, &flight] {
+            let _ = std::fs::remove_file(p);
+        }
     }
 
     #[test]

@@ -1,0 +1,261 @@
+//! Flame-graph and roofline exporters for the sampling profiler.
+//!
+//! Two artifacts fall out of [`crate::obs::profile`]:
+//!
+//! - **Folded stacks** ([`FoldedStacks`]): each sampler hit of a
+//!   thread's published span stack becomes one `frame;frame;frame`
+//!   key; [`FoldedStacks::render_folded`] emits the classic
+//!   `stack count` line format that `flamegraph.pl` consumes directly
+//!   and speedscope imports as "Brendan Gregg collapsed stacks". No
+//!   symbolization is involved — frames *are* span names, so the
+//!   flame graph speaks the repo's own vocabulary (`sched_tick`,
+//!   `gemm_nn`, `pool_task`, ...).
+//!
+//! - **Roofline attribution** ([`KernelStats`]): the GEMM cores know
+//!   their exact arithmetic (`m·k·n` multiply-accumulates = `2·m·k·n`
+//!   FLOPs) and time themselves while profiling is on. Joining the
+//!   two gives *achieved* GFLOP/s per core; the best single-call rate
+//!   ever observed is that core's measured *peak* (an empirical
+//!   roofline — no clock-speed guessing), so `achieved ≤ peak` holds
+//!   by construction and the gap is attributable. Each call also tags
+//!   the enclosing span (`ragged_forward`, `decode_batch`,
+//!   `fwd_bwd`, ...), so the JSON breaks every core down by the model
+//!   module that issued it — "who is below roofline" in one file.
+//!
+//! Both accumulators are process-global behind mutexes that are only
+//! touched from the sampler thread (folded stacks) or once per GEMM
+//! *call* — never per tile, never inside the pool's task hot loop —
+//! while profiling is enabled; with the profiler off neither is ever
+//! locked.
+
+use std::collections::BTreeMap;
+
+/// Accumulated folded-stack sample counts plus sampler health
+/// counters.
+#[derive(Clone, Debug, Default)]
+pub struct FoldedStacks {
+    /// `frame;frame;...` → number of sampler hits.
+    counts: BTreeMap<String, u64>,
+    /// Total successful stack samples folded in.
+    pub samples: u64,
+    /// Snapshots dropped because a publication raced the read (the
+    /// seqlock was odd or moved); bounded sampler bias, made visible.
+    pub torn: u64,
+}
+
+impl FoldedStacks {
+    /// Fold one sampled stack (outermost frame first) in.
+    pub fn add(&mut self, frames: &[&str]) {
+        if frames.is_empty() {
+            return;
+        }
+        *self.counts.entry(frames.join(";")).or_insert(0) += 1;
+        self.samples += 1;
+    }
+
+    /// Number of distinct stacks observed.
+    pub fn distinct(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Sampler hits whose folded key equals `stack`.
+    pub fn count(&self, stack: &str) -> u64 {
+        self.counts.get(stack).copied().unwrap_or(0)
+    }
+
+    /// Render in `flamegraph.pl` collapsed form: one `stack count`
+    /// line per distinct stack, lexicographically ordered (the order
+    /// is irrelevant to consumers but keeps the artifact diffable).
+    pub fn render_folded(&self) -> String {
+        let mut out = String::with_capacity(self.counts.len() * 48);
+        for (stack, n) in &self.counts {
+            out.push_str(stack);
+            out.push(' ');
+            out.push_str(&n.to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Per-module attribution within one kernel core.
+#[derive(Clone, Debug, Default)]
+struct ModuleAgg {
+    flops: u64,
+    ns: u64,
+    calls: u64,
+}
+
+/// One GEMM core's accumulated work, time, and empirical peak.
+#[derive(Clone, Debug, Default)]
+pub struct KernelAgg {
+    /// Total floating-point operations (2 × MACs) across calls.
+    pub flops: u64,
+    /// Total wall nanoseconds across calls (caller-side, spans the
+    /// whole pool dispatch).
+    pub ns: u64,
+    /// Timed calls.
+    pub calls: u64,
+    /// Best single-call GFLOP/s ever observed — the empirical peak
+    /// this core demonstrably reaches on this machine.
+    pub peak_gflops: f64,
+    /// Per enclosing-span breakdown (module name → share).
+    by_module: BTreeMap<&'static str, ModuleAgg>,
+}
+
+impl KernelAgg {
+    /// Aggregate achieved GFLOP/s (total FLOPs over total time). A
+    /// time-weighted mean of per-call rates, hence `≤ peak_gflops`.
+    pub fn achieved_gflops(&self) -> f64 {
+        self.flops as f64 / self.ns.max(1) as f64
+    }
+}
+
+/// Process-global kernel → [`KernelAgg`] table.
+#[derive(Clone, Debug, Default)]
+pub struct KernelStats {
+    cores: BTreeMap<&'static str, KernelAgg>,
+}
+
+impl KernelStats {
+    /// Fold one timed kernel call in. `module` is the span enclosing
+    /// the call site (`None` folds under `"untracked"`).
+    pub fn record(
+        &mut self,
+        core: &'static str,
+        module: Option<&'static str>,
+        macs: u64,
+        ns: u64,
+    ) {
+        let flops = macs.saturating_mul(2);
+        // clamp each call to ≥ 1 ns *before* accumulating, so achieved
+        // (a time-weighted mean of exactly these per-call rates) can
+        // never exceed peak even for sub-resolution timings
+        let ns = ns.max(1);
+        let agg = self.cores.entry(core).or_default();
+        agg.flops += flops;
+        agg.ns += ns;
+        agg.calls += 1;
+        let rate = flops as f64 / ns as f64; // FLOPs/ns == GFLOP/s
+        if rate > agg.peak_gflops {
+            agg.peak_gflops = rate;
+        }
+        let m = agg.by_module.entry(module.unwrap_or("untracked")).or_default();
+        m.flops += flops;
+        m.ns += ns;
+        m.calls += 1;
+    }
+
+    /// Whether any call was recorded.
+    pub fn is_empty(&self) -> bool {
+        self.cores.is_empty()
+    }
+
+    /// The aggregate for one core, if it ever ran timed.
+    pub fn core(&self, name: &str) -> Option<&KernelAgg> {
+        self.cores.get(name)
+    }
+
+    /// Render the roofline JSON:
+    /// `{"cores": [{"core", "calls", "flops", "busy_ms",
+    /// "gflops_achieved", "gflops_peak", "modules": [{"module",
+    /// "calls", "flops", "busy_ms", "gflops", "flop_share"}]}]}`.
+    /// `gflops_achieved ≤ gflops_peak` holds per core by construction
+    /// (CI asserts it).
+    pub fn render_roofline_json(&self) -> String {
+        let mut out = String::from("{\"cores\":[");
+        for (i, (core, agg)) in self.cores.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n{{\"core\":\"{}\",\"calls\":{},\"flops\":{},\"busy_ms\":{:.3},\
+                 \"gflops_achieved\":{:.3},\"gflops_peak\":{:.3},\"modules\":[",
+                crate::util::bench::escape(core),
+                agg.calls,
+                agg.flops,
+                agg.ns as f64 / 1e6,
+                agg.achieved_gflops(),
+                agg.peak_gflops,
+            ));
+            for (j, (module, m)) in agg.by_module.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!(
+                    "\n  {{\"module\":\"{}\",\"calls\":{},\"flops\":{},\"busy_ms\":{:.3},\
+                     \"gflops\":{:.3},\"flop_share\":{:.4}}}",
+                    crate::util::bench::escape(module),
+                    m.calls,
+                    m.flops,
+                    m.ns as f64 / 1e6,
+                    m.flops as f64 / m.ns.max(1) as f64,
+                    m.flops as f64 / agg.flops.max(1) as f64,
+                ));
+            }
+            out.push_str("]}");
+        }
+        out.push_str("\n]}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn folded_stacks_fold_and_render() {
+        let mut f = FoldedStacks::default();
+        f.add(&["main", "tick", "gemm_nn"]);
+        f.add(&["main", "tick", "gemm_nn"]);
+        f.add(&["main", "tick"]);
+        f.add(&[]);
+        assert_eq!(f.samples, 3);
+        assert_eq!(f.distinct(), 2);
+        assert_eq!(f.count("main;tick;gemm_nn"), 2);
+        let text = f.render_folded();
+        assert!(text.contains("main;tick;gemm_nn 2\n"), "{text}");
+        assert!(text.contains("main;tick 1\n"), "{text}");
+        // every line is `stack count`
+        for line in text.lines() {
+            let (_, n) = line.rsplit_once(' ').expect("stack count");
+            n.parse::<u64>().expect("count is a number");
+        }
+    }
+
+    #[test]
+    fn kernel_achieved_never_exceeds_peak() {
+        let mut k = KernelStats::default();
+        // one fast call, one slow call: achieved sits between them
+        k.record("gemm_nn", Some("fwd"), 1_000_000, 500_000);
+        k.record("gemm_nn", Some("decode"), 1_000_000, 2_000_000);
+        k.record("gemm_nt", None, 10, 0); // zero-duration guard
+        let agg = k.core("gemm_nn").unwrap();
+        assert_eq!(agg.calls, 2);
+        assert_eq!(agg.flops, 4_000_000);
+        assert!(agg.achieved_gflops() <= agg.peak_gflops);
+        assert!(agg.achieved_gflops() > 0.0);
+        let nt = k.core("gemm_nt").unwrap();
+        assert!(nt.achieved_gflops().is_finite());
+        assert!(nt.achieved_gflops() <= nt.peak_gflops);
+    }
+
+    #[test]
+    fn roofline_json_parses_and_orders_cores() {
+        let mut k = KernelStats::default();
+        k.record("gemm_nn", Some("fwd_bwd"), 500, 1000);
+        k.record("gemm_tn", Some("fwd_bwd"), 500, 1000);
+        let doc = crate::util::json::Json::parse(&k.render_roofline_json()).unwrap();
+        let cores = doc.arr_field("cores").unwrap();
+        assert_eq!(cores.len(), 2);
+        for c in cores {
+            let achieved = c.f64_field("gflops_achieved").unwrap();
+            let peak = c.f64_field("gflops_peak").unwrap();
+            assert!(achieved <= peak + 1e-9);
+            let modules = c.arr_field("modules").unwrap();
+            assert_eq!(modules[0].str_field("module").unwrap(), "fwd_bwd");
+            assert!(modules[0].f64_field("flop_share").unwrap() > 0.99);
+        }
+    }
+}

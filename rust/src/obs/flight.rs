@@ -1,0 +1,392 @@
+//! Crash-forensics flight recorder: a fixed-size lock-free ring of
+//! recent structured events, dumped to JSON when something dies.
+//!
+//! The spans/metrics/timeline stack answers *what happened* over a
+//! whole run; the flight recorder answers *what the system was doing
+//! right before it died*. Every interesting transition — span
+//! open/close digests, scheduler ticks, admission/cancel decisions,
+//! pool dispatches, metric deltas — lands as one [`FlightEvent`] in a
+//! ring of [`CAP`] slots. The ring never grows, never locks, and
+//! never allocates after first touch: recording is one `fetch_add` to
+//! claim a sequence number plus a handful of relaxed stores into the
+//! claimed slot, bracketed by two release stores of a per-slot stamp
+//! (the same seqlock discipline as `span::PubStack`, the profiler's
+//! published stack mirror).
+//!
+//! Dumps happen on four triggers:
+//!
+//! - **panic** — [`install_panic_hook`] chains the previous hook and
+//!   writes the ring to the configured path before the default hook
+//!   prints the backtrace;
+//! - **fuzz failure** — [`crate::fuzz::run_target`] writes a dump next
+//!   to its seed-replay line, so every violation ships its forensics;
+//! - **on demand** — the `--flight-out FILE` flag dumps at process
+//!   exit (`finish_obs`), pass or fail;
+//! - **programmatic** — [`dump_json`] / [`dump_to`] for tests and
+//!   embedders.
+//!
+//! Like every obs facility here, recording is computation-read-only:
+//! events carry clock readings and counters, never tensor data, so
+//! all bit-parity suites pass with the recorder on. Off (the default)
+//! costs one relaxed atomic load per call site. Memory bound: the
+//! ring is `CAP` slots × 9 machine words ≈ 288 KiB, allocated once at
+//! the first enabled record and never freed or grown.
+//!
+//! ## Torn slots
+//!
+//! A writer that claims a slot and is descheduled mid-write leaves an
+//! odd stamp; a wrap-around racer (≥ [`CAP`] records between one
+//! writer's claim and its final store) leaves a stamp whose sequence
+//! disagrees with the fields. Readers detect both by re-checking the
+//! stamp after copying the fields and drop the slot — a dump may
+//! therefore miss a handful of in-flight events but can never contain
+//! a fabricated one.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::{Context, Result};
+
+/// Ring capacity (power of two). Sized so a dump comfortably covers
+/// the ≥ 256 most recent scheduler/span operations the forensics
+/// contract promises, with slack for chatty phases.
+pub const CAP: usize = 4096;
+const MASK: u64 = (CAP as u64) - 1;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+/// Next sequence number to claim; total events ever recorded.
+static HEAD: AtomicU64 = AtomicU64::new(0);
+
+/// `MISA_FLIGHT` is folded in exactly once, before the first
+/// enabled-check; later [`enable`]/[`disable`] calls override it.
+fn env_init() {
+    static INIT: OnceLock<()> = OnceLock::new();
+    INIT.get_or_init(|| {
+        if let Ok(v) = std::env::var("MISA_FLIGHT") {
+            let v = v.trim();
+            if !v.is_empty() && v != "0" {
+                ENABLED.store(true, Ordering::Relaxed);
+            }
+        }
+    });
+}
+
+/// Whether [`record`] is currently keeping the ring (off by default;
+/// `MISA_FLIGHT=1` or `--flight-out` turn it on).
+pub fn enabled() -> bool {
+    env_init();
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Switch recording on (idempotent). The ring keeps whatever it
+/// already held.
+pub fn enable() {
+    env_init();
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Switch recording off; the ring contents stay readable.
+pub fn disable() {
+    env_init();
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// One ring slot. The stamp encodes both a seqlock phase and the
+/// owning sequence number: `2·seq + 1` while the claimant is writing,
+/// `2·seq + 2` once the fields are that claim's. `0` means
+/// never written.
+struct Slot {
+    stamp: AtomicU64,
+    t_us: AtomicU64,
+    tid: AtomicU64,
+    kind_ptr: AtomicUsize,
+    kind_len: AtomicUsize,
+    name_ptr: AtomicUsize,
+    name_len: AtomicUsize,
+    a: AtomicU64,
+    b: AtomicU64,
+}
+
+impl Slot {
+    const fn new() -> Self {
+        Slot {
+            stamp: AtomicU64::new(0),
+            t_us: AtomicU64::new(0),
+            tid: AtomicU64::new(0),
+            kind_ptr: AtomicUsize::new(0),
+            kind_len: AtomicUsize::new(0),
+            name_ptr: AtomicUsize::new(0),
+            name_len: AtomicUsize::new(0),
+            a: AtomicU64::new(0),
+            b: AtomicU64::new(0),
+        }
+    }
+}
+
+fn ring() -> &'static [Slot] {
+    static RING: OnceLock<Vec<Slot>> = OnceLock::new();
+    RING.get_or_init(|| (0..CAP).map(|_| Slot::new()).collect())
+}
+
+/// Append one event to the ring. `kind` is a coarse channel
+/// (`"span_open"`, `"span_close"`, `"sched"`, `"pool"`, `"metric"`),
+/// `name` the specific operation or object, `a`/`b` two
+/// kind-dependent payload words (depth/duration, request id/cost,
+/// ...). No-op while disabled. Both strings must be `'static` —
+/// readers reconstruct them from raw `(ptr, len)` pairs.
+pub fn record(kind: &'static str, name: &'static str, a: u64, b: u64) {
+    if !enabled() {
+        return;
+    }
+    let seq = HEAD.fetch_add(1, Ordering::Relaxed);
+    let slot = &ring()[(seq & MASK) as usize];
+    slot.stamp.store(2 * seq + 1, Ordering::Release); // odd: writing
+    slot.t_us.store(crate::obs::span::now_us(), Ordering::Relaxed);
+    slot.tid.store(crate::obs::span::thread_id(), Ordering::Relaxed);
+    slot.kind_ptr.store(kind.as_ptr() as usize, Ordering::Relaxed);
+    slot.kind_len.store(kind.len(), Ordering::Relaxed);
+    slot.name_ptr.store(name.as_ptr() as usize, Ordering::Relaxed);
+    slot.name_len.store(name.len(), Ordering::Relaxed);
+    slot.a.store(a, Ordering::Relaxed);
+    slot.b.store(b, Ordering::Relaxed);
+    slot.stamp.store(2 * seq + 2, Ordering::Release); // even: complete
+}
+
+/// Total events ever recorded (including those already overwritten).
+pub fn recorded() -> u64 {
+    HEAD.load(Ordering::Relaxed)
+}
+
+/// One decoded ring entry.
+#[derive(Clone, Debug)]
+pub struct FlightEvent {
+    /// Global record ordinal (monotone; gaps mean torn slots).
+    pub seq: u64,
+    /// Microseconds since the trace epoch.
+    pub t_us: u64,
+    /// Dense span thread-id of the recording thread.
+    pub tid: u64,
+    /// Event channel (`"span_open"`, `"sched"`, ...).
+    pub kind: &'static str,
+    /// Operation or object name.
+    pub name: &'static str,
+    /// First payload word (kind-dependent).
+    pub a: u64,
+    /// Second payload word (kind-dependent).
+    pub b: u64,
+}
+
+/// Snapshot every consistent slot, oldest first. Concurrent writers
+/// may tear a few slots (skipped, see module docs); the result is
+/// still strictly ordered by sequence number.
+pub fn snapshot() -> Vec<FlightEvent> {
+    let mut out = Vec::with_capacity(CAP);
+    for slot in ring() {
+        let s1 = slot.stamp.load(Ordering::Acquire);
+        if s1 == 0 || s1 & 1 == 1 {
+            continue;
+        }
+        let t_us = slot.t_us.load(Ordering::Relaxed);
+        let tid = slot.tid.load(Ordering::Relaxed);
+        let kp = slot.kind_ptr.load(Ordering::Relaxed);
+        let kl = slot.kind_len.load(Ordering::Relaxed);
+        let np = slot.name_ptr.load(Ordering::Relaxed);
+        let nl = slot.name_len.load(Ordering::Relaxed);
+        let a = slot.a.load(Ordering::Relaxed);
+        let b = slot.b.load(Ordering::Relaxed);
+        if slot.stamp.load(Ordering::Acquire) != s1 || kp == 0 || np == 0 {
+            continue; // a writer raced us — drop the slot
+        }
+        // SAFETY: the stamp was even and unchanged across the field
+        // reads, so each (ptr, len) pair is exactly what one `record`
+        // stored from a `&'static str`; reconstructing reads 'static
+        // memory (the same argument as `PubStack::sample`).
+        let (kind, name) = unsafe {
+            (
+                std::str::from_utf8_unchecked(std::slice::from_raw_parts(kp as *const u8, kl)),
+                std::str::from_utf8_unchecked(std::slice::from_raw_parts(np as *const u8, nl)),
+            )
+        };
+        out.push(FlightEvent { seq: s1 / 2 - 1, t_us, tid, kind, name, a, b });
+    }
+    out.sort_by_key(|e| e.seq);
+    out
+}
+
+/// Render the current ring as a JSON document:
+/// `{"cap", "recorded", "events": [{seq, t_us, tid, kind, name, a, b}]}`.
+/// Events are oldest-first; `recorded` minus the highest `seq + 1`
+/// tells a reader how many events were overwritten or torn.
+pub fn dump_json() -> String {
+    let events = snapshot();
+    let mut out = String::with_capacity(64 + events.len() * 96);
+    out.push_str(&format!(
+        "{{\"cap\":{CAP},\"recorded\":{},\"events\":[",
+        recorded()
+    ));
+    for (i, e) in events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n{{\"seq\":{},\"t_us\":{},\"tid\":{},\"kind\":\"{}\",\"name\":\"{}\",\"a\":{},\"b\":{}}}",
+            e.seq,
+            e.t_us,
+            e.tid,
+            crate::util::bench::escape(e.kind),
+            crate::util::bench::escape(e.name),
+            e.a,
+            e.b,
+        ));
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+/// Write [`dump_json`] to `path`; returns the number of events
+/// written.
+pub fn dump_to(path: &Path) -> Result<usize> {
+    let events = snapshot().len();
+    std::fs::write(path, dump_json())
+        .with_context(|| format!("writing flight dump {path:?}"))?;
+    Ok(events)
+}
+
+fn configured() -> &'static Mutex<Option<PathBuf>> {
+    static PATH: OnceLock<Mutex<Option<PathBuf>>> = OnceLock::new();
+    PATH.get_or_init(|| {
+        Mutex::new(std::env::var_os("MISA_FLIGHT_OUT").map(PathBuf::from))
+    })
+}
+
+/// Set the dump destination used by the panic hook and the fuzz
+/// failure path (the `--flight-out` flag; `MISA_FLIGHT_OUT` seeds it).
+pub fn set_dump_path(path: &Path) {
+    *configured().lock().unwrap_or_else(|e| e.into_inner()) = Some(path.to_path_buf());
+}
+
+/// The configured dump destination, if any.
+pub fn dump_path() -> Option<PathBuf> {
+    configured().lock().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+/// Write the ring to the configured path (no-op returning `None` when
+/// recording is off or no path was configured). Returns the path on
+/// success; I/O failures are swallowed — forensics must never turn a
+/// diagnosable failure into a different one.
+pub fn dump_to_configured() -> Option<PathBuf> {
+    if !enabled() {
+        return None;
+    }
+    let path = dump_path()?;
+    dump_to(&path).ok().map(|_| path)
+}
+
+/// Install a panic hook (once per process) that writes the ring to
+/// the configured dump path before chaining to the previous hook, so
+/// every panic ships its own black box. Safe to call repeatedly; the
+/// hook itself never panics and does nothing while recording is off
+/// or no path is set.
+pub fn install_panic_hook() {
+    static INSTALLED: OnceLock<()> = OnceLock::new();
+    INSTALLED.get_or_init(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if let Some(path) = dump_to_configured() {
+                eprintln!("flight dump: {} ({} events)", path.display(), snapshot().len());
+            }
+            prev(info);
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Flight state is process-global; serialize with every other test
+    // that toggles obs flags.
+    use crate::obs::span::TEST_GATE as GATE;
+
+    #[test]
+    fn disabled_recording_is_a_noop() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        disable();
+        let before = recorded();
+        record("test", "noop", 1, 2);
+        assert_eq!(recorded(), before);
+    }
+
+    #[test]
+    fn ring_keeps_the_most_recent_events_in_order() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        enable();
+        // overfill: only the newest CAP survive
+        for i in 0..(CAP as u64 + 123) {
+            record("test", "fill", i, i * 2);
+        }
+        disable();
+        let evs = snapshot();
+        assert_eq!(evs.len(), CAP);
+        // strictly ascending, contiguous sequence numbers (quiescent
+        // ring: no torn slots survive)
+        for w in evs.windows(2) {
+            assert_eq!(w[1].seq, w[0].seq + 1);
+        }
+        assert_eq!(evs.last().unwrap().seq + 1, recorded());
+        // payload words survive the round trip; filter to this test's
+        // own events — concurrent lib tests may interleave span events
+        // while the recorder is enabled
+        let mine: Vec<_> = evs.iter().filter(|e| e.kind == "test" && e.name == "fill").collect();
+        assert!(!mine.is_empty());
+        let last = mine.last().unwrap();
+        assert_eq!(last.b, last.a * 2);
+    }
+
+    #[test]
+    fn dump_json_is_parseable_and_complete() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        enable();
+        for i in 0..10u64 {
+            record("test", "json", i, 0);
+        }
+        disable();
+        let doc = crate::util::json::Json::parse(&dump_json()).unwrap();
+        assert_eq!(doc.f64_field("cap").unwrap() as usize, CAP);
+        let events = doc.arr_field("events").unwrap();
+        assert!(!events.is_empty());
+        let mut prev = -1.0;
+        for e in events {
+            let seq = e.f64_field("seq").unwrap();
+            assert!(seq > prev, "events out of order");
+            prev = seq;
+            e.str_field("kind").unwrap();
+            e.str_field("name").unwrap();
+        }
+    }
+
+    #[test]
+    fn concurrent_writers_never_produce_fabricated_events() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        enable();
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                s.spawn(move || {
+                    for i in 0..2000u64 {
+                        record("test", "race", t, i);
+                    }
+                });
+            }
+        });
+        disable();
+        // foreign events from concurrently running tests may share the
+        // ring; every event *we* wrote must round-trip intact
+        let mine: Vec<_> =
+            snapshot().into_iter().filter(|e| e.kind == "test" && e.name == "race").collect();
+        assert!(!mine.is_empty());
+        for e in &mine {
+            assert!(e.a < 4 && e.b < 2000);
+        }
+    }
+}

@@ -29,21 +29,41 @@
 //! - [`memory`] — byte-accounting gauges: optimizer-state residency,
 //!   activation scratch, COW-deduplicated KV-cache bytes, process
 //!   RSS/HWM high-water marks.
+//! - [`profile`] — sampling wall-clock profiler: a background thread
+//!   snapshots every thread's seqlock-published span stack at
+//!   `MISA_PROF_HZ`, folding hits into flame-graph counts, and the
+//!   GEMM cores time themselves against their known MAC counts.
+//! - [`flame`] — exporters for the profiler: folded stacks
+//!   (`--profile-out`, flamegraph.pl / speedscope) and per-core ×
+//!   per-module roofline JSON (`--roofline-out`, achieved vs
+//!   empirical-peak GFLOP/s).
+//! - [`flight`] — crash-forensics flight recorder: a fixed lock-free
+//!   ring of recent structured events (span digests, scheduler ops,
+//!   pool dispatches) dumped to JSON on panic, fuzz failure, or
+//!   `--flight-out`.
 //!
 //! See DESIGN.md §7 "Observability architecture" for the span model,
-//! overhead budget, and exporter formats, and §8 "Training telemetry"
-//! for the variance-estimator math and memory categories.
+//! overhead budget, and exporter formats, §8 "Training telemetry"
+//! for the variance-estimator math and memory categories, and §10
+//! "Profiling & forensics" for the sampler, roofline, and
+//! flight-ring designs.
 
+pub mod flame;
+pub mod flight;
 pub mod logger;
 pub mod memory;
 pub mod metrics;
 pub mod optstats;
+pub mod profile;
 pub mod span;
 pub mod timeline;
 
+pub use flame::{FoldedStacks, KernelStats};
+pub use flight::FlightEvent;
 pub use logger::Level;
 pub use memory::MemCategory;
 pub use metrics::{percentile_exact, Histogram, MetricSource};
 pub use optstats::{TrainReport, VarianceEstimator, VarianceSample};
+pub use profile::ProfileReport;
 pub use span::{SpanEvent, SpanGuard};
 pub use timeline::{Latencies, LatencySummary, Timeline};

@@ -1,0 +1,275 @@
+//! Sampling wall-clock profiler piggybacking on the span machinery.
+//!
+//! A background thread (`misa-prof`) wakes at a configurable rate and
+//! snapshots every registered thread's *published span stack* (the
+//! seqlock mirrors `span.rs` maintains while profiling is on — see
+//! its "Stack publication" docs). Each consistent snapshot folds into
+//! a process-global [`FoldedStacks`] accumulator; torn snapshots are
+//! counted, not retried, so the sampler never spins against a busy
+//! publisher. Hot-path cost is the *publication* (a handful of
+//! relaxed stores per span push/pop, only while profiling), never
+//! sampling — threads are never stopped, signaled, or locked.
+//!
+//! Alongside wall-clock samples the profiler collects **kernel
+//! attribution**: the GEMM cores open a [`KernelTimer`] around each
+//! dispatch (their MAC counts are known exactly), feeding the
+//! [`crate::obs::flame::KernelStats`] roofline table. Both artifacts
+//! export through [`report`] → `--profile-out` (folded stacks) and
+//! `--roofline-out` (JSON); the sampling rate comes from
+//! `MISA_PROF_HZ` (default [`DEFAULT_HZ`]).
+//!
+//! Like spans, the profiler is computation-read-only: it reads
+//! clocks and name pointers, never tensors or RNG streams, so every
+//! bit-parity suite passes with profiling on (`rust/tests/obs.rs`
+//! re-runs them under an active sampler to pin that).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use super::flame::{FoldedStacks, KernelStats};
+use super::span;
+
+/// Default sampling rate when `MISA_PROF_HZ` is unset: prime (so the
+/// sampler never phase-locks to a periodic workload), ~10 ms period.
+pub const DEFAULT_HZ: u64 = 97;
+
+/// Sampling rate resolved from `MISA_PROF_HZ` (clamped to
+/// `1..=10_000`), else [`DEFAULT_HZ`].
+pub fn default_hz() -> u64 {
+    env_hz().unwrap_or(DEFAULT_HZ)
+}
+
+/// `MISA_PROF_HZ` parsed, if set to a positive number.
+pub(crate) fn env_hz() -> Option<u64> {
+    static ENV: OnceLock<Option<u64>> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("MISA_PROF_HZ")
+            .ok()
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .filter(|&hz| hz > 0)
+            .map(|hz| hz.clamp(1, 10_000))
+    })
+}
+
+struct Sampler {
+    stop: &'static AtomicBool,
+    join: std::thread::JoinHandle<()>,
+}
+
+static STOP: AtomicBool = AtomicBool::new(false);
+
+fn sampler() -> &'static Mutex<Option<Sampler>> {
+    static S: OnceLock<Mutex<Option<Sampler>>> = OnceLock::new();
+    S.get_or_init(|| Mutex::new(None))
+}
+
+fn folded() -> &'static Mutex<FoldedStacks> {
+    static F: OnceLock<Mutex<FoldedStacks>> = OnceLock::new();
+    F.get_or_init(|| Mutex::new(FoldedStacks::default()))
+}
+
+fn kernels() -> &'static Mutex<KernelStats> {
+    static K: OnceLock<Mutex<KernelStats>> = OnceLock::new();
+    K.get_or_init(|| Mutex::new(KernelStats::default()))
+}
+
+/// Wall-clock samples taken (successful + torn), for overhead math.
+static TICKS: AtomicU64 = AtomicU64::new(0);
+
+/// Whether the sampler thread is currently running.
+pub fn running() -> bool {
+    sampler().lock().unwrap_or_else(|e| e.into_inner()).is_some()
+}
+
+/// Start the background sampler at `hz` samples/sec and switch span
+/// publication on. Idempotent while running (the first rate wins);
+/// errors on a nonsensical rate.
+pub fn start(hz: u64) -> Result<()> {
+    ensure!((1..=10_000).contains(&hz), "profiler rate {hz} Hz out of range (1..=10000)");
+    let mut guard = sampler().lock().unwrap_or_else(|e| e.into_inner());
+    if guard.is_some() {
+        return Ok(());
+    }
+    span::set_profiling(true);
+    STOP.store(false, Ordering::Relaxed);
+    let period = Duration::from_nanos(1_000_000_000 / hz);
+    let join = std::thread::Builder::new()
+        .name("misa-prof".to_string())
+        .spawn(move || sample_loop(period))
+        .expect("spawning profiler sampler");
+    *guard = Some(Sampler { stop: &STOP, join });
+    Ok(())
+}
+
+fn sample_loop(period: Duration) {
+    let mut buf: Vec<&'static str> = Vec::with_capacity(span::PUB_MAX_DEPTH);
+    let mut next = Instant::now() + period;
+    while !STOP.load(Ordering::Relaxed) {
+        let now = Instant::now();
+        if now < next {
+            std::thread::sleep(next - now);
+        }
+        // fixed cadence even when a sweep overruns: skip missed slots
+        // rather than bursting, so sample counts stay ∝ wall time
+        next += period;
+        let behind = Instant::now();
+        while next < behind {
+            next += period;
+        }
+        TICKS.fetch_add(1, Ordering::Relaxed);
+        let mut acc = folded().lock().unwrap_or_else(|e| e.into_inner());
+        for ps in span::registered_stacks() {
+            if ps.sample(&mut buf) {
+                acc.add(&buf); // empty stacks (idle threads) fold to nothing
+            } else {
+                acc.torn += 1;
+            }
+        }
+    }
+}
+
+/// Stop the sampler (joining its thread) and drop span publication
+/// back to the `MISA_PROF_HZ` environment default. No-op when not
+/// running. Accumulated samples and kernel stats survive — take them
+/// with [`report`].
+pub fn stop() {
+    let taken = sampler().lock().unwrap_or_else(|e| e.into_inner()).take();
+    if let Some(s) = taken {
+        s.stop.store(true, Ordering::Relaxed);
+        let _ = s.join.join();
+    }
+    span::set_profiling(env_hz().is_some());
+}
+
+/// Everything the profiler accumulated so far.
+#[derive(Clone, Debug, Default)]
+pub struct ProfileReport {
+    /// Folded wall-clock samples.
+    pub folded: FoldedStacks,
+    /// Kernel FLOP/time attribution (roofline input).
+    pub kernels: KernelStats,
+    /// Sampler wakeups (a sweep over all registered stacks each).
+    pub ticks: u64,
+}
+
+/// Snapshot (without resetting) the accumulated profile.
+pub fn report() -> ProfileReport {
+    ProfileReport {
+        folded: folded().lock().unwrap_or_else(|e| e.into_inner()).clone(),
+        kernels: kernels().lock().unwrap_or_else(|e| e.into_inner()).clone(),
+        ticks: TICKS.load(Ordering::Relaxed),
+    }
+}
+
+/// Reset the accumulators (tests; the CLI exports once at exit).
+pub fn reset() {
+    *folded().lock().unwrap_or_else(|e| e.into_inner()) = FoldedStacks::default();
+    *kernels().lock().unwrap_or_else(|e| e.into_inner()) = KernelStats::default();
+    TICKS.store(0, Ordering::Relaxed);
+}
+
+/// RAII timer a kernel core opens around one timed dispatch. Open it
+/// **before** the core's own span so the captured module is the
+/// *enclosing* span (`ragged_forward`, `fwd_bwd`, ...), not the
+/// kernel itself.
+pub struct KernelTimer {
+    core: &'static str,
+    module: Option<&'static str>,
+    macs: u64,
+    start: Instant,
+}
+
+/// Start timing one kernel call of `macs` multiply-accumulates;
+/// returns `None` (zero cost beyond one relaxed load) unless
+/// profiling is on.
+pub fn kernel_timer(core: &'static str, macs: u64) -> Option<KernelTimer> {
+    if !span::profiling_enabled() {
+        return None;
+    }
+    Some(KernelTimer { core, module: span::current(), macs, start: Instant::now() })
+}
+
+impl Drop for KernelTimer {
+    fn drop(&mut self) {
+        let ns = self.start.elapsed().as_nanos() as u64;
+        kernels()
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .record(self.core, self.module, self.macs, ns);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Profiling toggles process-global span state; serialize with
+    // every other obs test.
+    use crate::obs::span::TEST_GATE as GATE;
+
+    #[test]
+    fn sampler_folds_live_span_stacks() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        reset();
+        start(2000).unwrap();
+        assert!(running());
+        assert!(span::profiling_enabled());
+        {
+            let _outer = crate::span!("prof_outer", "test");
+            let _inner = crate::span!("prof_inner", "test");
+            // hold the stack open long enough for several sampler hits
+            let t0 = Instant::now();
+            while report().folded.count("prof_outer;prof_inner") == 0 {
+                assert!(t0.elapsed() < Duration::from_secs(5), "sampler never hit the stack");
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        stop();
+        assert!(!running());
+        let rep = report();
+        assert!(rep.ticks > 0);
+        assert!(rep.folded.count("prof_outer;prof_inner") >= 1);
+        let text = rep.folded.render_folded();
+        assert!(text.contains("prof_outer;prof_inner"), "{text}");
+        reset();
+    }
+
+    #[test]
+    fn kernel_timer_is_inert_without_profiling() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        span::set_profiling(false);
+        assert!(kernel_timer("gemm_nn", 1000).is_none());
+    }
+
+    #[test]
+    fn kernel_timer_attributes_to_the_enclosing_span() {
+        let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        reset();
+        span::set_profiling(true);
+        {
+            let _sp = crate::span!("prof_module", "test");
+            // a private core name: concurrent lib tests may time real
+            // gemm_* calls into the shared table while profiling is on
+            let t = kernel_timer("prof_test_core", 4096).expect("profiling on");
+            drop(t);
+        }
+        span::set_profiling(false);
+        let rep = report();
+        let agg = rep.kernels.core("prof_test_core").expect("timed call recorded");
+        assert_eq!(agg.calls, 1);
+        assert_eq!(agg.flops, 8192);
+        assert!(agg.achieved_gflops() <= agg.peak_gflops);
+        let json = rep.kernels.render_roofline_json();
+        assert!(json.contains("\"module\":\"prof_module\""), "{json}");
+        reset();
+    }
+
+    #[test]
+    fn start_rejects_silly_rates() {
+        assert!(start(0).is_err());
+        assert!(start(1_000_000).is_err());
+    }
+}

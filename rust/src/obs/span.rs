@@ -30,12 +30,29 @@
 //! The buffer is bounded at [`MAX_EVENTS`]; once full, further events
 //! increment a visible drop counter instead of growing without bound
 //! or silently vanishing ([`take_events`] reports the count).
+//!
+//! ## Stack publication (the sampling profiler's view)
+//!
+//! [`crate::obs::profile`]'s background sampler needs to read *other*
+//! threads' live span stacks without stopping them. Each thread
+//! therefore mirrors its stack into a `PubStack` — a seqlock-guarded
+//! snapshot of `(ptr, len)` halves of the `&'static str` frame names —
+//! registered once in a global list at the thread's first span. The
+//! owner republishes the full snapshot on every push/pop (a handful of
+//! relaxed stores bracketed by two release stores of the sequence
+//! counter); the sampler validates the sequence was even and unchanged
+//! across its reads before reconstructing any `&str`, so it can never
+//! observe a torn name. Publication only happens while
+//! [`profiling_enabled`] — with the profiler off the mirror costs
+//! nothing, and with *only* the profiler on (tracing off) guards
+//! maintain the stack mirror but skip the clock and the event buffer
+//! entirely, so pinned span/event counts never change.
 
-use std::cell::RefCell;
+use std::cell::{Cell, OnceCell, RefCell};
 use std::io::Write;
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Mutex, OnceLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -45,12 +62,15 @@ use anyhow::{Context, Result};
 pub const MAX_EVENTS: usize = 1 << 20;
 
 static ENABLED: AtomicBool = AtomicBool::new(false);
+static PROFILING: AtomicBool = AtomicBool::new(false);
 static DROPPED: AtomicU64 = AtomicU64::new(0);
 static NEXT_TID: AtomicU64 = AtomicU64::new(1);
 
-/// `MISA_TRACE` is folded into the flag exactly once, before the
-/// first enabled-check; later [`enable_tracing`]/[`disable_tracing`]
-/// calls override it.
+/// `MISA_TRACE` (and `MISA_PROF_HZ`, which forces stack publication
+/// on so a whole test suite can run published) are folded into the
+/// flags exactly once, before the first enabled-check; later
+/// [`enable_tracing`]/[`disable_tracing`]/[`set_profiling`] calls
+/// override them.
 fn env_init() {
     static INIT: OnceLock<()> = OnceLock::new();
     INIT.get_or_init(|| {
@@ -59,6 +79,9 @@ fn env_init() {
             if !v.is_empty() && v != "0" {
                 ENABLED.store(true, Ordering::Relaxed);
             }
+        }
+        if crate::obs::profile::env_hz().is_some() {
+            PROFILING.store(true, Ordering::Relaxed);
         }
     });
 }
@@ -82,6 +105,20 @@ pub fn disable_tracing() {
     ENABLED.store(false, Ordering::Relaxed);
 }
 
+/// Whether the sampling profiler is consuming published span stacks
+/// (toggled by [`crate::obs::profile::start`] / `stop`; `MISA_PROF_HZ`
+/// forces it on for the whole process).
+pub fn profiling_enabled() -> bool {
+    env_init();
+    PROFILING.load(Ordering::Relaxed)
+}
+
+/// Switch per-thread stack publication on or off (profiler lifecycle
+/// only — see [`profiling_enabled`]).
+pub(crate) fn set_profiling(on: bool) {
+    PROFILING.store(on, Ordering::Relaxed);
+}
+
 /// Process-wide trace epoch: all timestamps are microseconds since
 /// the first span (or export) touched the clock.
 fn epoch() -> Instant {
@@ -89,7 +126,7 @@ fn epoch() -> Instant {
     *EPOCH.get_or_init(Instant::now)
 }
 
-fn now_us() -> u64 {
+pub(crate) fn now_us() -> u64 {
     Instant::now().saturating_duration_since(epoch()).as_micros() as u64
 }
 
@@ -104,6 +141,141 @@ thread_local! {
     static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
     /// The open-span stack this thread is inside.
     static STACK: RefCell<Vec<&'static str>> = const { RefCell::new(Vec::new()) };
+    /// This thread's published stack mirror, registered globally at
+    /// first use (profiling only).
+    static PUB: OnceCell<Arc<PubStack>> = const { OnceCell::new() };
+    /// Cross-thread parent in effect while this thread's stack is
+    /// rooted in a [`span_child`] (the pool-task case): published as a
+    /// synthetic bottom frame so folded stacks stay connected across
+    /// the fan-out, mirroring what the Chrome trace does with
+    /// `parent`.
+    static PUB_BASE: Cell<Option<&'static str>> = const { Cell::new(None) };
+}
+
+/// This thread's dense span thread-id (assigned at first use).
+pub(crate) fn thread_id() -> u64 {
+    TID.with(|t| *t)
+}
+
+/// Deepest stack the published mirror can represent; deeper frames are
+/// truncated (far beyond any real nesting in this codebase).
+pub(crate) const PUB_MAX_DEPTH: usize = 64;
+
+/// One thread's seqlock-published span-stack snapshot. The owning
+/// thread is the only writer; the profiler's sampler thread reads it
+/// lock-free (see the module docs for the protocol).
+pub(crate) struct PubStack {
+    /// Odd while the owner is rewriting the snapshot, even when
+    /// stable; bumped twice per publication.
+    seq: AtomicU64,
+    /// Dense span thread-id of the owning thread.
+    pub(crate) tid: u64,
+    /// Number of valid frames.
+    depth: AtomicUsize,
+    /// Frame-name pointer halves (`&'static str::as_ptr`).
+    ptrs: [AtomicUsize; PUB_MAX_DEPTH],
+    /// Frame-name length halves.
+    lens: [AtomicUsize; PUB_MAX_DEPTH],
+}
+
+impl PubStack {
+    fn new(tid: u64) -> Self {
+        PubStack {
+            seq: AtomicU64::new(0),
+            tid,
+            depth: AtomicUsize::new(0),
+            ptrs: std::array::from_fn(|_| AtomicUsize::new(0)),
+            lens: std::array::from_fn(|_| AtomicUsize::new(0)),
+        }
+    }
+
+    /// Owner side: republish the full snapshot (`base` becomes a
+    /// synthetic bottom frame when present).
+    fn publish(&self, base: Option<&'static str>, stack: &[&'static str]) {
+        let s = self.seq.load(Ordering::Relaxed);
+        self.seq.store(s.wrapping_add(1), Ordering::Release); // odd: in progress
+        let mut d = 0usize;
+        if let Some(b) = base {
+            self.store_frame(d, b);
+            d += 1;
+        }
+        for &f in stack.iter().take(PUB_MAX_DEPTH - d) {
+            self.store_frame(d, f);
+            d += 1;
+        }
+        self.depth.store(d, Ordering::Relaxed);
+        self.seq.store(s.wrapping_add(2), Ordering::Release); // even: stable
+    }
+
+    fn store_frame(&self, i: usize, name: &'static str) {
+        self.ptrs[i].store(name.as_ptr() as usize, Ordering::Relaxed);
+        self.lens[i].store(name.len(), Ordering::Relaxed);
+    }
+
+    /// Sampler side: copy a consistent snapshot into `out`. Returns
+    /// `false` (leaving `out` empty) when a publication raced the
+    /// read — the sampler just drops that sample.
+    pub(crate) fn sample(&self, out: &mut Vec<&'static str>) -> bool {
+        out.clear();
+        let s1 = self.seq.load(Ordering::Acquire);
+        if s1 & 1 == 1 {
+            return false;
+        }
+        let depth = self.depth.load(Ordering::Acquire).min(PUB_MAX_DEPTH);
+        let mut frames = [(0usize, 0usize); PUB_MAX_DEPTH];
+        for (f, (p, l)) in frames.iter_mut().zip(self.ptrs.iter().zip(&self.lens)).take(depth)
+        {
+            *f = (p.load(Ordering::Acquire), l.load(Ordering::Acquire));
+        }
+        if self.seq.load(Ordering::Acquire) != s1 {
+            out.clear();
+            return false;
+        }
+        for &(p, l) in &frames[..depth] {
+            if p == 0 {
+                out.clear();
+                return false;
+            }
+            // SAFETY: the sequence counter was even and unchanged
+            // across the reads, so each (ptr, len) pair is exactly
+            // what one `store_frame` wrote from a `&'static str` —
+            // reconstructing it reads 'static memory.
+            out.push(unsafe {
+                std::str::from_utf8_unchecked(std::slice::from_raw_parts(p as *const u8, l))
+            });
+        }
+        true
+    }
+}
+
+/// Global registry of every thread's published stack (grows by one
+/// entry per thread that ever opened a span while profiling; threads
+/// that die leave a stable empty snapshot behind).
+fn pub_stacks() -> &'static Mutex<Vec<Arc<PubStack>>> {
+    static STACKS: OnceLock<Mutex<Vec<Arc<PubStack>>>> = OnceLock::new();
+    STACKS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Snapshot the registry for the sampler thread.
+pub(crate) fn registered_stacks() -> Vec<Arc<PubStack>> {
+    pub_stacks().lock().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+/// Republish this thread's stack mirror (owner side; registers the
+/// mirror globally on the thread's first publication).
+fn publish_stack() {
+    PUB.with(|cell| {
+        let ps = cell.get_or_init(|| {
+            let ps = Arc::new(PubStack::new(thread_id()));
+            pub_stacks()
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .push(Arc::clone(&ps));
+            ps
+        });
+        let base = PUB_BASE.with(|b| b.get());
+        STACK.with(|s| ps.publish(base, &s.borrow()));
+    });
 }
 
 /// One completed span, ready for Chrome trace-event export.
@@ -132,10 +304,19 @@ struct ActiveSpan {
     depth: u32,
     tid: u64,
     start_us: u64,
+    /// Append a [`SpanEvent`] on drop (tracing was on at open);
+    /// profiling- or flight-only guards maintain the stack without
+    /// recording, so pinned event counts never change.
+    record: bool,
+    /// The open published the stack mirror — the drop must too, even
+    /// if profiling switched off mid-span, so a mirror never retains
+    /// phantom frames.
+    published: bool,
 }
 
 /// RAII span guard: records a [`SpanEvent`] when dropped. Inert (and
-/// nearly free) when tracing is disabled.
+/// nearly free) when tracing, profiling and the flight recorder are
+/// all disabled.
 pub struct SpanGuard {
     active: Option<ActiveSpan>,
 }
@@ -143,10 +324,24 @@ pub struct SpanGuard {
 impl Drop for SpanGuard {
     fn drop(&mut self) {
         let Some(a) = self.active.take() else { return };
-        STACK.with(|s| {
-            s.borrow_mut().pop();
+        let emptied = STACK.with(|s| {
+            let mut s = s.borrow_mut();
+            s.pop();
+            s.is_empty()
         });
-        let dur_us = now_us().saturating_sub(a.start_us);
+        if emptied {
+            PUB_BASE.with(|b| b.set(None));
+        }
+        if a.published || profiling_enabled() {
+            publish_stack();
+        }
+        let dur_us = if a.record { now_us().saturating_sub(a.start_us) } else { 0 };
+        if crate::obs::flight::enabled() {
+            crate::obs::flight::record("span_close", a.name, a.depth as u64, dur_us);
+        }
+        if !a.record {
+            return;
+        }
         let ev = SpanEvent {
             name: a.name,
             cat: a.cat,
@@ -166,7 +361,10 @@ impl Drop for SpanGuard {
 }
 
 fn open(name: &'static str, cat: &'static str, forced_parent: Option<&'static str>) -> SpanGuard {
-    if !tracing_enabled() {
+    let record = tracing_enabled();
+    let profiling = profiling_enabled();
+    let flight = crate::obs::flight::enabled();
+    if !record && !profiling && !flight {
         return SpanGuard { active: None };
     }
     let tid = TID.with(|t| *t);
@@ -175,11 +373,29 @@ fn open(name: &'static str, cat: &'static str, forced_parent: Option<&'static st
         let parent = s.last().copied().or(forced_parent);
         // a forced parent lives on another thread's stack; count it
         let depth = s.len() as u32 + u32::from(s.is_empty() && forced_parent.is_some());
+        if s.is_empty() {
+            PUB_BASE.with(|b| b.set(forced_parent));
+        }
         s.push(name);
         (parent, depth)
     });
+    if profiling {
+        publish_stack();
+    }
+    if flight {
+        crate::obs::flight::record("span_open", name, depth as u64, 0);
+    }
     SpanGuard {
-        active: Some(ActiveSpan { name, cat, parent, depth, tid, start_us: now_us() }),
+        active: Some(ActiveSpan {
+            name,
+            cat,
+            parent,
+            depth,
+            tid,
+            start_us: if record { now_us() } else { 0 },
+            record,
+            published: profiling,
+        }),
     }
 }
 
@@ -201,7 +417,7 @@ pub fn span_child(
 /// Name of the innermost open span on this thread, if any (capture
 /// before spawning workers, pass to [`span_child`]).
 pub fn current() -> Option<&'static str> {
-    if !tracing_enabled() {
+    if !tracing_enabled() && !profiling_enabled() {
         return None;
     }
     STACK.with(|s| s.borrow().last().copied())
@@ -271,6 +487,13 @@ pub fn export_chrome_trace(path: &Path) -> Result<usize> {
     Ok(evs.len())
 }
 
+/// Serializes unit tests (across this crate's test-binary modules)
+/// that toggle process-global tracing/profiling/flight state — span
+/// guards observe those flags, so concurrent toggling makes
+/// assertions racy.
+#[cfg(test)]
+pub(crate) static TEST_GATE: Mutex<()> = Mutex::new(());
+
 /// Open a scoped span: `span!("name")` or `span!("name", "category")`.
 /// Bind the result (`let _sp = span!(...)`) — dropping it closes the
 /// span.
@@ -290,13 +513,18 @@ mod tests {
 
     // Span tests share process-global state (the enabled flag, the
     // event buffer) with integration tests; within this unit-test
-    // binary, serialize through one mutex.
-    static GATE: Mutex<()> = Mutex::new(());
+    // binary, serialize through the crate-wide gate.
+    use super::TEST_GATE as GATE;
 
     #[test]
     fn disabled_spans_record_nothing() {
         let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+        // force *all three* consumers off — this test asserts the
+        // fully-disabled fast path even when MISA_PROF_HZ/MISA_FLIGHT
+        // env-forced them on for the rest of the suite
         disable_tracing();
+        set_profiling(false);
+        crate::obs::flight::disable();
         let before = event_count();
         {
             let _sp = span("t_disabled", "test");

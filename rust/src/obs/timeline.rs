@@ -34,6 +34,11 @@ pub struct Timeline {
     pub prefilled: Option<Instant>,
     /// When the first token was sampled.
     pub first_token: Option<Instant>,
+    /// When the request was cancelled, if it was — a terminal stamp
+    /// set together with `finished` by [`Timeline::cancel`], so a
+    /// cancelled lifecycle closes as cleanly as a completed one and
+    /// downstream pooling can tell the two apart.
+    pub cancelled: Option<Instant>,
     /// When the request completed.
     pub finished: Option<Instant>,
     /// Per-token inter-token gaps in milliseconds (see module docs).
@@ -49,6 +54,7 @@ impl Timeline {
             admitted: None,
             prefilled: None,
             first_token: None,
+            cancelled: None,
             finished: None,
             itl_ms: Vec::new(),
             last_emit: None,
@@ -94,6 +100,21 @@ impl Timeline {
         self.finished.get_or_insert_with(Instant::now);
     }
 
+    /// Terminate the lifecycle by cancellation: one instant stamps
+    /// both `cancelled` and `finished` (idempotent), so a cancelled
+    /// timeline still satisfies every ordering invariant and is
+    /// distinguishable from a completed one via [`Self::was_cancelled`].
+    pub fn cancel(&mut self) {
+        let now = Instant::now();
+        self.cancelled.get_or_insert(now);
+        self.finished.get_or_insert(now);
+    }
+
+    /// Whether this lifecycle ended in cancellation.
+    pub fn was_cancelled(&self) -> bool {
+        self.cancelled.is_some()
+    }
+
     /// Submit → first-token latency in milliseconds, if reached.
     pub fn ttft_ms(&self) -> Option<f64> {
         self.first_token
@@ -101,14 +122,20 @@ impl Timeline {
     }
 
     /// Check the ordering invariants: enqueued ≤ admitted ≤ prefilled
-    /// ≤ first_token ≤ finished for every stamp present, and no ITL
+    /// ≤ first_token ≤ cancelled ≤ finished for every stamp present,
+    /// a cancellation stamp only on a finished lifecycle, and no ITL
     /// samples without a first token.
     pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.cancelled.is_none() || self.finished.is_some(),
+            "timeline: cancelled but never finished"
+        );
         let mut prev = ("enqueued", self.enqueued);
         for (name, stamp) in [
             ("admitted", self.admitted),
             ("prefilled", self.prefilled),
             ("first_token", self.first_token),
+            ("cancelled", self.cancelled),
             ("finished", self.finished),
         ] {
             if let Some(t) = stamp {
@@ -241,6 +268,40 @@ mod tests {
         let g = tl.itl_ms[0];
         assert!(tl.itl_ms.iter().all(|&x| (x - g).abs() < 1e-12));
         assert!(g > 0.0);
+    }
+
+    #[test]
+    fn cancel_terminates_cleanly_at_every_stage() {
+        // queued-only cancellation
+        let mut tl = Timeline::start();
+        tl.cancel();
+        assert!(tl.was_cancelled());
+        assert!(tl.finished.is_some());
+        tl.validate().unwrap();
+        // mid-decode cancellation keeps every earlier stamp ordered
+        let mut tl = Timeline::start();
+        tl.admit();
+        tl.prefill_done();
+        tl.mark_first_token();
+        tl.emit(2);
+        tl.cancel();
+        tl.validate().unwrap();
+        assert!(tl.ttft_ms().is_some());
+        assert_eq!(tl.itl_ms.len(), 2);
+        // idempotent: a second cancel (or finish) changes nothing
+        let stamped = tl.cancelled;
+        tl.cancel();
+        tl.finish();
+        assert_eq!(tl.cancelled, stamped);
+    }
+
+    #[test]
+    fn cancelled_without_finish_is_invalid() {
+        let mut tl = Timeline::start();
+        tl.cancelled = Some(Instant::now());
+        assert!(tl.validate().is_err());
+        tl.finish();
+        tl.validate().unwrap();
     }
 
     #[test]

@@ -440,6 +440,12 @@ impl Scheduler {
     /// the requests that completed during this iteration.
     pub fn tick(&mut self, sess: &Session) -> Result<Vec<Completion>> {
         let _sp = crate::span!("sched_tick", "serve");
+        crate::obs::flight::record(
+            "sched",
+            "tick",
+            self.pending() as u64,
+            self.in_flight_tokens as u64,
+        );
         let mut done = Vec::new();
         let vocab = sess.spec.config.vocab;
 
@@ -461,6 +467,7 @@ impl Scheduler {
             if req.prompt.iter().any(|&t| t < 0 || t as usize >= vocab) {
                 let ttft_s = tl.enqueued.elapsed().as_secs_f64();
                 obs::metrics::counter_add("serve.rejected", 1);
+                crate::obs::flight::record("sched", "reject", req.id, req.prompt.len() as u64);
                 self.metrics.log(
                     req.id,
                     &[("ttft_ms", ttft_s * 1e3), ("new_tokens", 0.0), ("rejected", 1.0)],
@@ -478,6 +485,7 @@ impl Scheduler {
                 continue;
             }
             tl.admit();
+            crate::obs::flight::record("sched", "admit", req.id, cost as u64);
             self.in_flight_tokens += cost;
             self.prefilling.push_back(PrefillJob {
                 rng: Rng::new(req.seed),
@@ -800,6 +808,7 @@ impl Scheduler {
         }
         obs::metrics::counter_add("serve.completions", 1);
         obs::metrics::counter_add("serve.tokens_out", slot.generated.len() as u64);
+        crate::obs::flight::record("sched", "complete", slot.req.id, slot.generated.len() as u64);
         Completion {
             id: slot.req.id,
             prompt_len: slot.req.prompt.len(),
@@ -812,12 +821,17 @@ impl Scheduler {
         }
     }
 
-    /// Build a cancellation completion: stamp the timeline and log a
+    /// Build a cancellation completion: terminate the timeline with
+    /// its dedicated [`Timeline::cancel`] stamp (validated against the
+    /// same ordering invariants as a completed lifecycle) and log a
     /// metrics record. The caller has already released the budget
     /// charge; dropping the request's state frees its KV ring.
     /// Cancelled requests are deliberately *not* pooled into the
     /// TTFT/ITL latency samples — an operator-aborted request would
-    /// skew the serving percentiles the bench reports.
+    /// skew the serving percentiles the bench reports — and their
+    /// reported TTFT is the *real* first-token latency when one was
+    /// reached, else 0.0 (never the cancel instant masquerading as a
+    /// first token).
     fn cancelled(
         &mut self,
         req: Request,
@@ -825,11 +839,15 @@ impl Scheduler {
         reused: usize,
         tokens: Vec<i32>,
     ) -> Completion {
-        tl.finish();
-        let now = tl.finished.expect("finish() just stamped");
-        let first = tl.first_token.unwrap_or(now);
-        let ttft_s = first.saturating_duration_since(tl.enqueued).as_secs_f64();
+        tl.cancel();
+        debug_assert!(
+            tl.validate().is_ok(),
+            "cancelled timeline ordering violated: {:?}",
+            tl.validate()
+        );
+        let ttft_s = tl.ttft_ms().map_or(0.0, |ms| ms / 1e3);
         obs::metrics::counter_add("serve.cancellations", 1);
+        crate::obs::flight::record("sched", "cancel", req.id, tokens.len() as u64);
         self.metrics.log(
             req.id,
             &[
@@ -856,6 +874,7 @@ impl Scheduler {
         while self.pending() > 0 {
             out.extend(self.tick(sess)?);
         }
+        crate::obs::flight::record("sched", "drain", out.len() as u64, 0);
         Ok(out)
     }
 }

@@ -69,6 +69,9 @@ pub fn gemm_nn_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mu
     if m == 0 || n == 0 || k == 0 {
         return;
     }
+    // timer before the span: the roofline attributes this call's
+    // 2·m·k·n FLOPs to the *enclosing* module span
+    let _kt = crate::obs::profile::kernel_timer("gemm_nn", (m * k * n) as u64);
     let _sp = crate::span!("gemm_nn", "tensor");
     let workers = par::plan_workers(m, m * k * n);
     par::par_out_rows(out, m, n, workers, |row0, ochunk| {
@@ -146,6 +149,7 @@ pub fn gemm_tn_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut
     if k == 0 || n == 0 {
         return;
     }
+    let _kt = crate::obs::profile::kernel_timer("gemm_tn", (m * k * n) as u64);
     let _sp = crate::span!("gemm_tn", "tensor");
     let workers = par::plan_workers(k, m * k * n);
     par::par_out_rows(out, k, n, workers, |kk0, ochunk| {
@@ -193,6 +197,7 @@ pub fn gemm_nt_into(a: &[f32], b: &[f32], m: usize, n: usize, k: usize, out: &mu
     if m == 0 || k == 0 {
         return;
     }
+    let _kt = crate::obs::profile::kernel_timer("gemm_nt", (m * n * k) as u64);
     let _sp = crate::span!("gemm_nt", "tensor");
     // B-row tile (output-column tile) of the nt core.
     const JC: usize = 64;

@@ -45,7 +45,11 @@
 //! Each parallel run publishes to the global [`crate::obs::metrics`]
 //! registry once (batched — the registry mutex is never touched from
 //! the task hot loop): `pool.tasks`, `pool.steals`, `pool.busy_us`,
-//! `pool.parks`, `pool.unparks` counters and the `pool.workers` gauge.
+//! `pool.parks`, `pool.unparks` counters, the `pool.workers` and
+//! `pool.utilization` gauges (busy time over participants × dispatch
+//! span), and one `pool.park_wait_us` histogram sample (worker time
+//! parked since the previous dispatch). A `pool` event also lands in
+//! the flight recorder when it is on.
 //! Every task opens a `pool_task` span parented to the span that was
 //! open on the submitting thread, so Perfetto traces stay connected
 //! across the fan-out even though the workers are long-lived.
@@ -249,6 +253,10 @@ struct Inner {
     /// per run (never from the task hot loop)
     parks: AtomicU64,
     unparks: AtomicU64,
+    /// nanoseconds workers spent parked on `work_cv`, drained into the
+    /// `pool.park_wait_us` histogram once per run — the profiler's
+    /// idle-thread samples cross-check against this counter
+    park_wait_ns: AtomicU64,
 }
 
 thread_local! {
@@ -286,6 +294,7 @@ impl Pool {
                 done_cv: Condvar::new(),
                 parks: AtomicU64::new(0),
                 unparks: AtomicU64::new(0),
+                park_wait_ns: AtomicU64::new(0),
             }),
             handles: Mutex::new(Vec::new()),
             submit: Mutex::new(()),
@@ -378,6 +387,7 @@ impl Pool {
             parent: crate::obs::span::current(),
             panic: Mutex::new(None),
         });
+        let t0 = Instant::now();
         let submit = self.submit.lock().unwrap_or_else(|e| e.into_inner());
         {
             let mut st = self.inner.state.lock().unwrap_or_else(|e| e.into_inner());
@@ -401,7 +411,7 @@ impl Pool {
             st.job = None;
         }
         drop(submit);
-        self.publish_metrics(&job, n_tasks);
+        self.publish_metrics(&job, n_tasks, t0.elapsed());
         if let Some(p) = job.panic.lock().unwrap_or_else(|e| e.into_inner()).take() {
             std::panic::resume_unwind(p);
         }
@@ -409,15 +419,17 @@ impl Pool {
 
     /// One batched registry update per parallel run — the counters the
     /// pool exposes (`pool.*`) without ever locking the registry from
-    /// the task hot loop.
-    fn publish_metrics(&self, job: &Job, n_tasks: usize) {
+    /// the task hot loop. `wall` is the dispatch span (submit →
+    /// completion), the denominator of the utilization gauge.
+    fn publish_metrics(&self, job: &Job, n_tasks: usize, wall: std::time::Duration) {
         use crate::obs::metrics;
         metrics::counter_add("pool.tasks", n_tasks as u64);
         let steals = job.steals.load(Ordering::Relaxed);
         if steals > 0 {
             metrics::counter_add("pool.steals", steals);
         }
-        metrics::counter_add("pool.busy_us", job.busy_ns.load(Ordering::Relaxed) / 1_000);
+        let busy_ns = job.busy_ns.load(Ordering::Relaxed);
+        metrics::counter_add("pool.busy_us", busy_ns / 1_000);
         let parks = self.inner.parks.swap(0, Ordering::Relaxed);
         if parks > 0 {
             metrics::counter_add("pool.parks", parks);
@@ -426,7 +438,24 @@ impl Pool {
         if unparks > 0 {
             metrics::counter_add("pool.unparks", unparks);
         }
+        // park-wait since the last dispatch, one histogram sample per
+        // dispatch: long waits mean an under-fed pool, near-zero waits
+        // with high utilization mean a saturated one
+        let park_wait_ns = self.inner.park_wait_ns.swap(0, Ordering::Relaxed);
+        if park_wait_ns > 0 {
+            metrics::observe("pool.park_wait_us", park_wait_ns as f64 / 1e3);
+        }
+        // fraction of the dispatch's participant-time actually spent in
+        // `participate` (clamped: a straggler finishing its bookkeeping
+        // after the job drains can nudge the ratio past 1)
+        let participants = job.ranges.len() as f64;
+        let wall_ns = (wall.as_nanos() as u64).max(1) as f64;
+        metrics::gauge_set(
+            "pool.utilization",
+            (busy_ns as f64 / (participants * wall_ns)).min(1.0),
+        );
         metrics::gauge_set("pool.workers", self.workers() as f64);
+        crate::obs::flight::record("pool", "dispatch", n_tasks as u64, busy_ns / 1_000);
     }
 }
 
@@ -507,7 +536,11 @@ fn worker_loop(inner: Arc<Inner>) {
                     continue;
                 }
                 inner.parks.fetch_add(1, Ordering::Relaxed);
+                let parked = Instant::now();
                 st = inner.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+                inner
+                    .park_wait_ns
+                    .fetch_add(parked.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 inner.unparks.fetch_add(1, Ordering::Relaxed);
             }
         };

@@ -1,8 +1,9 @@
 //! Observability integration tests: the histogram against a sorted-vec
 //! oracle, span nesting across the persistent GEMM worker pool,
 //! timeline ordering invariants through a real scheduler run, exporter
-//! output, and — the headline claim — bit-parity of every decode path
-//! with tracing fully enabled.
+//! output, the flight recorder's panic-dump path, and — the headline
+//! claim — bit-parity of every decode path with tracing, the sampling
+//! profiler, and the flight recorder fully enabled.
 
 use std::sync::Mutex;
 
@@ -304,4 +305,168 @@ fn decode_paths_are_bit_identical_with_tracing_enabled() {
     for name in ["generate", "verify_step", "sched_tick"] {
         assert!(evs.iter().any(|e| e.name == name), "missing span {name:?}");
     }
+}
+
+/// The same parity matrix with the *whole* forensics stack live at
+/// once — tracing, the sampling profiler (stack publication + kernel
+/// timers on every GEMM), and the flight recorder — pinning that
+/// profiling and forensics are computation-read-only too.
+#[test]
+fn decode_paths_are_bit_identical_with_profiling_and_flight_on() {
+    let _g = lock();
+    let sess = tiny_session(9);
+    let prompt = vec![1, 30, 31, 32, 30, 31, 32, 30, 31];
+    let plain = GenerateCfg {
+        max_new: 16,
+        sampler: SamplerCfg { temperature: 0.8, top_k: 16, top_p: 0.9 },
+        seed: 11,
+        eos: None,
+        spec: None,
+    };
+    let spec = GenerateCfg {
+        spec: Some(SpecCfg { draft_len: 4, ngram: 3 }),
+        ..plain.clone()
+    };
+    // baseline: every obs facility off
+    span::disable_tracing();
+    misa::obs::flight::disable();
+    misa::tensor::set_threads(1);
+    let base = generate(&sess, &prompt, &plain).unwrap();
+    let reqs: Vec<Request> = (0..3u64)
+        .map(|id| Request {
+            id,
+            prompt: random_prompt(4 + id as usize, 256, 300 + id),
+            max_new: 8,
+            sampler: SamplerCfg::greedy(),
+            seed: 500 + id,
+            eos: None,
+        })
+        .collect();
+    let solo: Vec<Vec<i32>> = reqs
+        .iter()
+        .map(|r| {
+            let cfg = GenerateCfg {
+                max_new: r.max_new,
+                sampler: r.sampler,
+                seed: r.seed,
+                eos: r.eos,
+                spec: None,
+            };
+            generate(&sess, &r.prompt, &cfg).unwrap().tokens
+        })
+        .collect();
+    // now: spans recorded, sampler running hot, flight ring filling
+    span::enable_tracing();
+    misa::obs::profile::start(1000).unwrap();
+    misa::obs::flight::enable();
+    for threads in [1usize, 4] {
+        misa::tensor::set_threads(threads);
+        let a = generate(&sess, &prompt, &plain).unwrap();
+        let b = generate(&sess, &prompt, &spec).unwrap();
+        assert_eq!(a.tokens, base.tokens, "profiling perturbed plain decode (t={threads})");
+        assert_eq!(b.tokens, base.tokens, "profiling perturbed spec decode (t={threads})");
+        let mut sched = Scheduler::new(SchedulerCfg {
+            max_slots: 2,
+            token_budget: 128,
+            spec: None,
+            ..SchedulerCfg::default()
+        });
+        for r in &reqs {
+            sched.submit(r.clone()).unwrap();
+        }
+        let mut done = sched.run(&sess).unwrap();
+        done.sort_by_key(|c| c.id);
+        for (c, want) in done.iter().zip(&solo) {
+            assert_eq!(
+                &c.tokens, want,
+                "profiling perturbed scheduled decode (t={threads}, id={})",
+                c.id
+            );
+        }
+    }
+    misa::tensor::set_threads(0);
+    misa::obs::flight::disable();
+    misa::obs::profile::stop();
+    let (_evs, dropped) = span::take_events();
+    span::disable_tracing();
+    assert_eq!(dropped, 0);
+    // the forensics really were live: the sampler ticked, the GEMM
+    // kernel timers fed the roofline table, and scheduler ops landed
+    // in the flight ring
+    let rep = misa::obs::profile::report();
+    assert!(rep.ticks > 0, "sampler never ticked");
+    assert!(!rep.kernels.is_empty(), "no kernel call was timed");
+    assert!(misa::obs::flight::recorded() > 0, "no flight events recorded");
+}
+
+/// Crash-forensics contract: a scheduler workload fills the flight
+/// ring, and a forced panic afterwards leaves a well-formed JSON dump
+/// (written by the panic hook) reconstructing hundreds of scheduler
+/// operations in order.
+#[test]
+fn forced_panic_dumps_a_well_formed_flight_ring() {
+    let _g = lock();
+    let dump = std::env::temp_dir()
+        .join(format!("misa_obs_flight_panic_{}.json", std::process::id()));
+    misa::obs::flight::enable();
+    misa::obs::flight::set_dump_path(&dump);
+    misa::obs::flight::install_panic_hook();
+    let before = misa::obs::flight::recorded();
+    // a workload long enough that ticks + admissions + completions
+    // alone clear the ≥256-operation forensics floor
+    let sess = tiny_session(13);
+    let mut sched = Scheduler::new(SchedulerCfg {
+        max_slots: 2,
+        token_budget: 256,
+        spec: None,
+        ..SchedulerCfg::default()
+    });
+    for id in 0..8u64 {
+        sched
+            .submit(Request {
+                id,
+                prompt: random_prompt(4, 256, 900 + id),
+                max_new: 64,
+                sampler: SamplerCfg::greedy(),
+                seed: 900 + id,
+                eos: None,
+            })
+            .unwrap();
+    }
+    let done = sched.run(&sess).unwrap();
+    assert_eq!(done.len(), 8);
+    let recorded = misa::obs::flight::recorded() - before;
+    assert!(recorded >= 256, "scheduler run recorded only {recorded} flight events");
+    // force a panic mid-"tick": the hook must write the dump before
+    // unwinding reaches catch_unwind
+    let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let _sp = misa::span!("sched_tick", "serve");
+        panic!("forced scheduler failure");
+    }));
+    assert!(boom.is_err());
+    misa::obs::flight::disable();
+    let body = std::fs::read_to_string(&dump).expect("panic hook wrote the flight dump");
+    let doc = misa::util::Json::parse(&body).unwrap();
+    let events = doc.arr_field("events").unwrap();
+    assert!(events.len() >= 256, "dump holds only {} events", events.len());
+    let mut prev = -1.0;
+    for e in events {
+        let seq = e.f64_field("seq").unwrap();
+        assert!(seq > prev, "events out of order");
+        prev = seq;
+        e.f64_field("t_us").unwrap();
+        e.str_field("kind").unwrap();
+        e.str_field("name").unwrap();
+    }
+    // the ring reconstructs the scheduler's actual operations
+    for name in ["tick", "admit", "complete"] {
+        assert!(
+            events.iter().any(|e| {
+                e.str_field("kind").is_ok_and(|k| k == "sched")
+                    && e.str_field("name").is_ok_and(|n| n == name)
+            }),
+            "missing sched event {name:?}"
+        );
+    }
+    let _ = std::fs::remove_file(&dump);
 }
