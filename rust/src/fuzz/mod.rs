@@ -118,7 +118,7 @@ pub fn replay_cmd(target: &str, cfg: FuzzCfg) -> String {
 /// order. Returns the note to append to the error message.
 fn flight_note() -> String {
     match crate::obs::flight::dump_to_configured() {
-        Some(path) => format!("\n  flight dump: {}", path.display()),
+        Some((path, _events)) => format!("\n  flight dump: {}", path.display()),
         None if crate::obs::flight::enabled() => format!(
             "\n  flight recorder captured {} event(s); pass --flight-out FILE \
              (or set MISA_FLIGHT_OUT) to dump them on failure",

@@ -8,10 +8,10 @@
 //! pool dispatches, metric deltas — lands as one [`FlightEvent`] in a
 //! ring of [`CAP`] slots. The ring never grows, never locks, and
 //! never allocates after first touch: recording is one `fetch_add` to
-//! claim a sequence number plus a handful of relaxed stores into the
-//! claimed slot, bracketed by two release stores of a per-slot stamp
-//! (the same seqlock discipline as `span::PubStack`, the profiler's
-//! published stack mirror).
+//! claim a sequence number, one CAS to claim the slot's stamp, then a
+//! handful of relaxed stores closed by a release store of the even
+//! stamp (the same seqlock discipline as `span::PubStack`, the
+//! profiler's published stack mirror, hardened for multiple writers).
 //!
 //! Dumps happen on four triggers:
 //!
@@ -34,13 +34,15 @@
 //!
 //! ## Torn slots
 //!
-//! A writer that claims a slot and is descheduled mid-write leaves an
-//! odd stamp; a wrap-around racer (≥ [`CAP`] records between one
-//! writer's claim and its final store) leaves a stamp whose sequence
-//! disagrees with the fields. Readers detect both by re-checking the
-//! stamp after copying the fields and drop the slot — a dump may
-//! therefore miss a handful of in-flight events but can never contain
-//! a fabricated one.
+//! At most one writer ever owns a slot: a claimant must CAS the stamp
+//! from a *completed* (even, older) value to its own odd value, so a
+//! wrap-around racer (≥ [`CAP`] records between one writer's claim
+//! and its final store) fails the CAS and drops its event instead of
+//! interleaving stores with the in-flight writer. Readers additionally
+//! re-check the stamp after copying the fields, dropping any slot
+//! whose owner was still mid-write. A dump may therefore miss a
+//! handful of in-flight events but can never contain a fabricated or
+//! mixed one.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -141,7 +143,30 @@ pub fn record(kind: &'static str, name: &'static str, a: u64, b: u64) {
     }
     let seq = HEAD.fetch_add(1, Ordering::Relaxed);
     let slot = &ring()[(seq & MASK) as usize];
-    slot.stamp.store(2 * seq + 1, Ordering::Release); // odd: writing
+    // Claim the slot before touching any field. A plain store would
+    // let a wrap-around racer (≥ CAP claims behind or ahead of us)
+    // write the same slot concurrently, interleaving fields from two
+    // records behind a self-consistent stamp. The CAS admits exactly
+    // one writer: it only succeeds from a *completed* (even) stamp
+    // that is older than our claim. `cur` odd means another claimant
+    // is mid-write; `cur > 2·seq + 1` means the slot was already
+    // recycled by a newer claim. Either way we drop the event — a
+    // dump may miss it but can never mix two records.
+    let cur = slot.stamp.load(Ordering::Relaxed);
+    if cur & 1 == 1
+        || cur > 2 * seq + 1
+        || slot
+            .stamp
+            .compare_exchange(cur, 2 * seq + 1, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+    {
+        return;
+    }
+    // Order the odd stamp before every field store: without the fence
+    // the relaxed stores below may become visible *before* the stamp
+    // turns odd on weakly-ordered targets, letting a reader validate
+    // torn fields against the old even stamp.
+    std::sync::atomic::fence(Ordering::Release);
     slot.t_us.store(crate::obs::span::now_us(), Ordering::Relaxed);
     slot.tid.store(crate::obs::span::thread_id(), Ordering::Relaxed);
     slot.kind_ptr.store(kind.as_ptr() as usize, Ordering::Relaxed);
@@ -153,7 +178,8 @@ pub fn record(kind: &'static str, name: &'static str, a: u64, b: u64) {
     slot.stamp.store(2 * seq + 2, Ordering::Release); // even: complete
 }
 
-/// Total events ever recorded (including those already overwritten).
+/// Total sequence numbers ever claimed (including events already
+/// overwritten and the rare wrap-race drops).
 pub fn recorded() -> u64 {
     HEAD.load(Ordering::Relaxed)
 }
@@ -195,6 +221,10 @@ pub fn snapshot() -> Vec<FlightEvent> {
         let nl = slot.name_len.load(Ordering::Relaxed);
         let a = slot.a.load(Ordering::Relaxed);
         let b = slot.b.load(Ordering::Relaxed);
+        // Keep the relaxed field loads above from sinking below the
+        // validating stamp re-read (an acquire *load* alone does not
+        // pin earlier loads before it on weakly-ordered targets).
+        std::sync::atomic::fence(Ordering::Acquire);
         if slot.stamp.load(Ordering::Acquire) != s1 || kp == 0 || np == 0 {
             continue; // a writer raced us — drop the slot
         }
@@ -219,7 +249,10 @@ pub fn snapshot() -> Vec<FlightEvent> {
 /// Events are oldest-first; `recorded` minus the highest `seq + 1`
 /// tells a reader how many events were overwritten or torn.
 pub fn dump_json() -> String {
-    let events = snapshot();
+    render_json(&snapshot())
+}
+
+fn render_json(events: &[FlightEvent]) -> String {
     let mut out = String::with_capacity(64 + events.len() * 96);
     out.push_str(&format!(
         "{{\"cap\":{CAP},\"recorded\":{},\"events\":[",
@@ -247,10 +280,10 @@ pub fn dump_json() -> String {
 /// Write [`dump_json`] to `path`; returns the number of events
 /// written.
 pub fn dump_to(path: &Path) -> Result<usize> {
-    let events = snapshot().len();
-    std::fs::write(path, dump_json())
+    let events = snapshot();
+    std::fs::write(path, render_json(&events))
         .with_context(|| format!("writing flight dump {path:?}"))?;
-    Ok(events)
+    Ok(events.len())
 }
 
 fn configured() -> &'static Mutex<Option<PathBuf>> {
@@ -272,15 +305,16 @@ pub fn dump_path() -> Option<PathBuf> {
 }
 
 /// Write the ring to the configured path (no-op returning `None` when
-/// recording is off or no path was configured). Returns the path on
-/// success; I/O failures are swallowed — forensics must never turn a
-/// diagnosable failure into a different one.
-pub fn dump_to_configured() -> Option<PathBuf> {
+/// recording is off or no path was configured). Returns the path and
+/// the number of events written on success; I/O failures are
+/// swallowed — forensics must never turn a diagnosable failure into a
+/// different one.
+pub fn dump_to_configured() -> Option<(PathBuf, usize)> {
     if !enabled() {
         return None;
     }
     let path = dump_path()?;
-    dump_to(&path).ok().map(|_| path)
+    dump_to(&path).ok().map(|n| (path, n))
 }
 
 /// Install a panic hook (once per process) that writes the ring to
@@ -293,8 +327,8 @@ pub fn install_panic_hook() {
     INSTALLED.get_or_init(|| {
         let prev = std::panic::take_hook();
         std::panic::set_hook(Box::new(move |info| {
-            if let Some(path) = dump_to_configured() {
-                eprintln!("flight dump: {} ({} events)", path.display(), snapshot().len());
+            if let Some((path, events)) = dump_to_configured() {
+                eprintln!("flight dump: {} ({events} events)", path.display());
             }
             prev(info);
         }));

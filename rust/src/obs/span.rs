@@ -194,6 +194,13 @@ impl PubStack {
     fn publish(&self, base: Option<&'static str>, stack: &[&'static str]) {
         let s = self.seq.load(Ordering::Relaxed);
         self.seq.store(s.wrapping_add(1), Ordering::Release); // odd: in progress
+        // Order the odd store before the frame stores: a release
+        // *store* only orders earlier accesses before itself, so
+        // without this fence the relaxed frame stores below could
+        // become visible before the sequence turns odd on
+        // weakly-ordered targets, and the sampler could validate torn
+        // frames against the old even sequence.
+        std::sync::atomic::fence(Ordering::Release);
         let mut d = 0usize;
         if let Some(b) = base {
             self.store_frame(d, b);
